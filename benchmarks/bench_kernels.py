@@ -1,0 +1,61 @@
+"""Kernel-level benchmark: Pallas (interpret) vs pure-jnp oracle, plus the
+deployment-relevant derived quantity — HBM bytes per weight each format
+moves (the real TPU win; wall-times here are CPU-interpret and only
+meaningful relative to each other)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro import core
+from repro.core.stats import heavy_tailed_weights
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    out = {}
+    R, C = 512, 2048
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, C)),
+                    jnp.float32)
+    dense_bytes = R * C * 2  # bf16 baseline
+
+    for n_bits in (2, 3, 4):
+        W = heavy_tailed_weights(R, C, seed=n_bits)
+        pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+        rt = ops.to_runtime(pk)
+
+        us_ref = timeit(
+            jax.jit(lambda c, b, k: ref.matmul_ref(x, c, b, k, n_bits, C)),
+            rt["codes"], rt["bitmap"], rt["codebooks"],
+        )
+        us_kern = timeit(
+            lambda: ops.matmul(x, rt, block_m=64, block_n=128, block_k=512),
+        )
+        rt_bits = ops.runtime_bits_per_weight(rt)
+        st_bits = pk.bits_per_weight()["total"]
+        weight_bytes = rt_bits / 8 * R * C
+        out[n_bits] = dict(rt_bits=rt_bits, st_bits=st_bits)
+        emit(
+            f"kernels/icq_matmul_n{n_bits}", us_kern,
+            f"ref_us={us_ref:.0f};storage_bits={st_bits:.2f};"
+            f"runtime_bits={rt_bits:.2f};"
+            f"hbm_reduction_vs_bf16={dense_bytes / weight_bytes:.2f}x",
+        )
+
+    # kmeans assignment (the ICQuant^SK calibration hot loop)
+    w = jnp.asarray(heavy_tailed_weights(256, 4096, seed=9))
+    wt = jnp.abs(w) + 0.1
+    cnt = jnp.asarray(
+        np.sort(np.random.default_rng(1).standard_normal((256, 16)), -1),
+        jnp.float32,
+    )
+    us_ref = timeit(jax.jit(ref.kmeans_assign_ref), w, wt, cnt)
+    us_kern = timeit(lambda: ops.kmeans_assign(w, wt, cnt))
+    emit("kernels/kmeans_assign", us_kern, f"ref_us={us_ref:.0f};C=16")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,232 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and derives, per (arch x shape x mesh):
+
+  compute_s    = HLO_FLOPs / (chips x 197e12)          [bf16 peak, v5e]
+  memory_s     = HLO_bytes  / (chips x 819e9)           [HBM bw]
+  collective_s = collective_bytes / (chips x 3 x 50e9)  [3 usable ICI links]
+
+plus the dominant term, MODEL_FLOPS, and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs. HLO numbers from cost_analysis() are per-device
+(XLA reports the partitioned module), so terms are computed per device
+and NOT divided by chips again.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import emit
+from repro.configs import SHAPE_BY_NAME, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 3 * 50e9            # bytes/s / chip (3 concurrently-usable links)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_params(cfg) -> Dict[str, float]:
+    """Analytic parameter counts (total and active) for MODEL_FLOPS."""
+    d, V = cfg.d_model, cfg.vocab_size
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.attn_type == "none":
+            return 0
+        hd = cfg.resolved_head_dim
+        if cfg.attn_type == "mla":
+            nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+            q = (cfg.q_lora_rank * (d + cfg.n_heads * (nd + rd))
+                 if cfg.q_lora_rank else d * cfg.n_heads * (nd + rd))
+            kv = d * cfg.kv_lora_rank + d * rd + cfg.kv_lora_rank * cfg.n_heads * (nd + vd)
+            return q + kv + cfg.n_heads * vd * d
+        if cfg.attn_type == "none":
+            return 0
+        return d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+
+    def ssm_params():
+        if cfg.family not in ("ssm", "hybrid"):
+            return 0
+        di = cfg.ssm_expand * d
+        g, n = cfg.ssm_groups, cfg.ssm_state
+        h = di // cfg.ssm_head_dim
+        return d * (2 * di + 2 * g * n + h) + di * d
+
+    def ffn_params(width):
+        return 3 * d * width
+
+    per_layer_dense = attn_params() + ssm_params() + ffn_params(cfg.d_ff if cfg.family != "ssm" else 0)
+    total = embed
+    active = embed
+    if cfg.family == "moe":
+        moe_layers = cfg.n_layers - cfg.first_dense_layers
+        dense_layers = cfg.first_dense_layers
+        per_moe = (
+            attn_params()
+            + cfg.n_experts * ffn_params(cfg.moe_d_ff)
+            + cfg.n_shared_experts * ffn_params(cfg.moe_d_ff)
+            + d * cfg.n_experts
+        )
+        per_moe_active = (
+            attn_params()
+            + cfg.experts_per_token * ffn_params(cfg.moe_d_ff)
+            + cfg.n_shared_experts * ffn_params(cfg.moe_d_ff)
+        )
+        total += dense_layers * per_layer_dense + moe_layers * per_moe
+        active += dense_layers * per_layer_dense + moe_layers * per_moe_active
+    elif cfg.is_encdec:
+        total += (cfg.encoder_layers + cfg.decoder_layers) * per_layer_dense
+        # decoder cross-attn extra
+        total += cfg.decoder_layers * attn_params()
+        active = total
+    else:
+        total += cfg.n_layers * per_layer_dense
+        active = total
+    return dict(total=float(total), active=float(active))
+
+
+def kv_cache_bytes_per_seq(cfg, seq_len: int) -> float:
+    """Bytes of decode state per sequence (bf16)."""
+    if cfg.attn_type == "mla":
+        per_tok = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        L = cfg.n_layers
+        return 2.0 * L * seq_len * per_tok
+    ssm = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_expand * cfg.d_model
+        h = di // cfg.ssm_head_dim
+        ssm = 4.0 * cfg.n_layers * h * cfg.ssm_head_dim * cfg.ssm_state
+        if cfg.family == "ssm":
+            return ssm
+    T = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    L = cfg.n_layers + (cfg.decoder_layers if cfg.is_encdec else 0)
+    attn = 2.0 * L * T * 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+    return attn + ssm
+
+
+def memory_floor_bytes(cfg, shape, n_chips: int,
+                       weight_bits: float = 16.0) -> float:
+    """Analytic lower bound on HBM traffic per chip per step.
+
+    XLA's per-op 'bytes accessed' ignores fusion (upper bound); this floor
+    counts only unavoidable traffic: weights (at `weight_bits`), optimizer
+    state (train), remat-checkpointed layer boundaries, and KV/SSM state
+    (decode/prefill). The achievable step time lies between floor and the
+    XLA bound; roofline fractions are reported against the floor.
+    """
+    p = model_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers + (cfg.encoder_layers if cfg.is_encdec else 0)
+    wbytes = p["total"] * weight_bits / 8.0
+
+    if shape.kind == "train":
+        # fwd+bwd weight reads + grad write/read + AdamW moments rw + write
+        weight_traffic = wbytes * 3 + p["total"] * (4 + 8)
+        # remat boundaries: one activation per layer, written + read twice
+        act = 3.0 * L * B * S * d * 2
+        return (weight_traffic + act) / n_chips
+    if shape.kind == "prefill":
+        act = 2.0 * L * B * S * d * 2
+        kv = B * kv_cache_bytes_per_seq(cfg, S)
+        return (wbytes + act + kv) / n_chips
+    # decode: read all (active) weights once + read the whole cache
+    active_bytes = p["active"] * weight_bits / 8.0
+    kv = B * kv_cache_bytes_per_seq(cfg, S)
+    return (active_bytes + kv) / n_chips
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train; 2*N_active per generated token for decode;
+    2*N_active*D for prefill."""
+    p = model_params(cfg)["active"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * p * B * S
+    if shape.kind == "prefill":
+        return 2.0 * p * B * S
+    return 2.0 * p * B  # decode: one token per sequence
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "OK":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPE_BY_NAME[rec["shape"]]
+    # prefer per-layer-exact extrapolated terms (scan bodies are counted
+    # once by XLA cost analysis; see dryrun.extrapolate_costs)
+    ext = rec.get("extrapolated")
+    flops = ext["flops"] if ext else rec["flops"]
+    bytes_acc = ext["bytes_accessed"] if ext else rec["bytes_accessed"]
+    coll_total = (ext["collective_total"] if ext
+                  else rec["collective_bytes"].get("total", 0))
+    wb = 16.0
+    if rec.get("quant_bits"):
+        # ICQuant storage: n code bits + ~0.31 index + codebooks
+        wb = rec["quant_bits"] + 0.31 + 0.1
+    compute_s = flops / PEAK_FLOPS
+    memory_hi_s = bytes_acc / HBM_BW                   # XLA per-op bound
+    memory_lo_s = memory_floor_bytes(
+        cfg, shape, rec["n_chips"], weight_bits=wb
+    ) / HBM_BW                                         # analytic floor
+    coll_s = coll_total / ICI_BW
+    terms = dict(compute=compute_s, memory=memory_lo_s, collective=coll_s)
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / rec["n_chips"]     # per-device
+    useful = mf / flops if flops > 0 else 0.0
+    bound_s = max(terms.values())
+    # roofline fraction: useful work at peak / achievable step time
+    frac = (mf / PEAK_FLOPS) / bound_s if bound_s > 0 else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_lo_s,
+        memory_xla_s=memory_hi_s, collective_s=coll_s,
+        dominant=dominant, model_flops_per_chip=mf,
+        usefulness=useful, roofline_fraction=frac,
+        peak_hbm_bytes=rec["memory"]["peak_bytes"],
+    )
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "SKIP":
+            emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                 f"SKIP:{rec['reason']}")
+            continue
+        if rec.get("mesh") == "2x16x16":
+            # multi-pod lowerings prove the pod axis shards; their scanned
+            # cost numbers are not roofline-grade (scan body counted once)
+            emit(
+                f"dryrun/{rec['arch']}/{rec['shape']}/multipod", 0.0,
+                f"status=OK;compile_s={rec['compile_seconds']};"
+                f"collective_bytes={rec['collective_bytes'].get('total', 0):.3e}",
+            )
+            continue
+        a = analyze(rec)
+        if a is None:
+            emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0, "FAILED")
+            continue
+        rows.append(a)
+        tag = f"/q{rec['quant_bits']}" if rec.get("quant_bits") else ""
+        emit(
+            f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}{tag}", 0.0,
+            f"compute_s={a['compute_s']:.3e};memory_s={a['memory_s']:.3e};"
+            f"memory_xla_s={a['memory_xla_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};dom={a['dominant']};"
+            f"useful={a['usefulness']:.3f};roofline={a['roofline_fraction']:.3f}",
+        )
+    if not rows:
+        emit("roofline/none", 0.0,
+             "no dry-run artifacts: run python -m repro.launch.dryrun --arch all")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

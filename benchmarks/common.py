@@ -1,0 +1,58 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+# Llama2-7B linear-layer geometries (paper's analysis model): the
+# statistics figures sweep these shapes with synthetic heavy-tailed
+# weights calibrated to the paper's §2 measurements.
+LLAMA2_7B_LAYERS: Dict[str, Tuple[int, int]] = {
+    "q_proj": (4096, 4096),
+    "k_proj": (4096, 4096),
+    "v_proj": (4096, 4096),
+    "o_proj": (4096, 4096),
+    "up_proj": (11008, 4096),
+    "gate_proj": (11008, 4096),
+    "down_proj": (4096, 11008),
+}
+
+# statistics benches subsample rows to keep the suite fast
+BENCH_ROWS = 256
+
+
+def layer_weights(name: str, seed: int = 0, rows: int = BENCH_ROWS,
+                  df: float = 5.0) -> np.ndarray:
+    """Synthetic weights with the named layer's row geometry (d_in kept,
+    rows subsampled)."""
+    d_out, d_in = LLAMA2_7B_LAYERS[name]
+    rng = np.random.default_rng(abs(hash((name, seed))) % 2**31)
+    r = min(rows, d_out)
+    return (rng.standard_t(df, size=(r, d_in)) * 0.02).astype(np.float32)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in microseconds (values are block_until_ready'd
+    when jax arrays)."""
+    def run():
+        out = fn(*args)
+        for leaf in (out if isinstance(out, (tuple, list)) else (out,)):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness output contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}")

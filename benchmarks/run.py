@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Output contract: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("outlier_range", "benchmarks.bench_outlier_range"),    # Fig 1/6
+    ("uniformity", "benchmarks.bench_uniformity"),          # Tab 1/5
+    ("index_overhead", "benchmarks.bench_index_overhead"),  # Fig 4/8, Lemma 1
+    ("suppression", "benchmarks.bench_suppression"),        # Fig 5
+    ("e2e_quality", "benchmarks.bench_e2e_quality"),        # Tab 2-4 proxy
+    ("kernels", "benchmarks.bench_kernels"),                # deployment
+    ("roofline", "benchmarks.bench_roofline"),              # §Roofline
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failed = []
+    for name, module in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name} ({module}) ===", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on
+the synthetic corpus, checkpoint it, then post-training-quantize with
+ICQuant^RTN and ICQuant^SK and report held-out NLL at each bit width.
+
+    PYTHONPATH=src python examples/train_and_quantize.py \
+        [--steps 300] [--width small|100m]
+
+``--width 100m`` uses a ~100M-parameter config (slow on CPU but the real
+deal); default 'small' finishes in minutes.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.data import SyntheticLM
+from repro.launch.quantize import compute_fisher, quantize_tree
+from repro.launch.steps import loss_fn
+from repro.launch.train import train
+from repro.models import count_params
+
+
+def heldout_nll(params, cfg, seq=64, batches=4):
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
+    tot = 0.0
+    for i in range(batches):
+        b = data.batch(step=90_000 + i, shard=1, batch_size=8)
+        loss, _ = loss_fn(params, cfg, {k: jnp.asarray(v) for k, v in b.items()})
+        tot += float(loss)
+    return tot / batches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--width", choices=["small", "100m"], default="small")
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    if args.width == "100m":
+        cfg = dataclasses.replace(
+            cfg, n_layers=8, d_model=640, n_heads=10, n_kv_heads=5,
+            head_dim=64, d_ff=2560, vocab_size=32064,
+        )
+        # monkeypatch-free: train() re-derives the smoke config, so for the
+        # 100m width we drive the loop inline
+        from repro.launch.steps import init_opt_state, make_train_step
+        from repro.models import init_model
+        from repro.optim import AdamWConfig
+
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        print(f"params: {count_params(params)/1e6:.1f}M")
+        opt_cfg = AdamWConfig(lr=3e-4, total_steps=args.steps,
+                              warmup_steps=20)
+        opt = init_opt_state(params, opt_cfg)
+        step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+        data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128, seed=0)
+        for s in range(args.steps):
+            b = data.batch(s, 0, 8)
+            params, opt, m = step(params, opt,
+                                  {k: jnp.asarray(v) for k, v in b.items()})
+            if s % 20 == 0:
+                print(f"step {s} loss {float(m['loss']):.4f}")
+    else:
+        params, _ = train(args.arch, steps=args.steps, batch=8, seq=64,
+                          ckpt_dir="/tmp/repro_example_ckpt", log_every=25)
+
+    nll_fp = heldout_nll(params, cfg)
+    print(f"\nFP32 held-out NLL: {nll_fp:.4f}")
+    fisher = compute_fisher(params, cfg, n_sequences=32, seq_len=64)
+
+    print(f"{'bits':>6} {'ICQuant_RTN':>12} {'ICQuant_SK':>12} {'vanillaRTN':>12}")
+    for n_bits in (4, 3, 2):
+        qr, _ = quantize_tree(params, n_bits, gamma=0.05)
+        qs, _ = quantize_tree(params, n_bits, gamma=0.05, method="kmeans",
+                              fisher=fisher)
+        qv, _ = quantize_tree(params, n_bits, gamma=1e-9)
+        print(f"{n_bits:>6} {heldout_nll(qr, cfg):>12.4f} "
+              f"{heldout_nll(qs, cfg):>12.4f} {heldout_nll(qv, cfg):>12.4f}")
+
+
+if __name__ == "__main__":
+    main()

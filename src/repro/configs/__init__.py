@@ -1,0 +1,47 @@
+"""Architecture registry: ``get_config(arch_id)`` + the shape grid."""
+from repro.configs.base import (
+    SHAPE_BY_NAME,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    shape_applicable,
+    smoke_variant,
+)
+
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
+from repro.configs.llama3_2_1b import CONFIG as _llama32
+from repro.configs.pixtral_12b import CONFIG as _pixtral
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.llama2_7b import CONFIG as _llama2
+
+ARCHITECTURES = {
+    c.name: c
+    for c in (
+        _minicpm3, _internlm2, _phi3, _llama32, _pixtral,
+        _mamba2, _seamless, _hymba, _deepseek, _mixtral,
+    )
+}
+
+EXTRA_CONFIGS = {_llama2.name: _llama2}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ARCHITECTURES:
+        return ARCHITECTURES[name]
+    if name in EXTRA_CONFIGS:
+        return EXTRA_CONFIGS[name]
+    raise KeyError(
+        f"unknown arch {name!r}; available: {sorted(ARCHITECTURES)}"
+    )
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "SHAPE_BY_NAME",
+    "ARCHITECTURES", "get_config", "smoke_variant", "shape_applicable",
+]

@@ -1,0 +1,168 @@
+"""Model/config schema shared by all architectures and shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # attention
+    attn_type: str = "gqa"          # gqa | mla | none
+    sliding_window: int = 0         # 0 = full attention
+    rope_theta: float = 10000.0
+
+    # MLA (DeepSeek / MiniCPM3 latent attention)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0     # leading dense layers (DeepSeek-V3)
+    capacity_factor: float = 1.25
+    # grouped dispatch: per-batch-row expert queues -> the position cumsum
+    # stays shard-local and the only cross-device exchange is the inherent
+    # token all-to-all (see EXPERIMENTS.md §Perf, deepseek hillclimb)
+    moe_grouped_dispatch: bool = False
+    # int8 expert dispatch/combine on the wire: per-slot scales, halves
+    # the MoE all-to-all bytes (the dominant collective for DeepSeek-V3
+    # training — see §Perf hillclimb B)
+    moe_int8_dispatch: bool = False
+
+    # multi-token prediction (DeepSeek-V3 MTP, depth 1)
+    mtp: bool = False
+
+    # SSM (Mamba2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssd_chunk: int = 256
+
+    # hybrid (Hymba): parallel attention + SSM heads per layer
+    hybrid_ssm: bool = False
+
+    # encoder-decoder (Seamless backbone)
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    max_source_len: int = 0
+
+    # modality frontend stub: 'none' | 'patch' (VLM) | 'frames' (audio)
+    frontend: str = "none"
+    frontend_len: int = 0           # prefix length of precomputed embeddings
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"    # smoke tests f32; dry-run bf16
+    remat: bool = True
+    # scan layer stacks (compile-time/HLO-size win) or unroll them (exact
+    # cost_analysis: XLA counts a scan body once, not x trip-count — the
+    # dry-run unrolls so roofline terms are correct)
+    scan_layers: bool = True
+    attn_chunk: int = 1024          # KV-chunk for online-softmax attention
+    # quantization defaults (the paper's technique, first-class)
+    quant_bits: int = 0             # 0 = no quantization (FP path)
+    quant_gamma: float = 0.05
+    quant_method: str = "rtn"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.attn_type == "none"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run 500k-token decode without a dense KV cache?"""
+        return self.attention_free or self.hybrid_ssm or self.sliding_window > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason (DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch: 500k dense KV decode excluded by design"
+    if shape.kind == "decode" and cfg.is_encdec and cfg.decoder_layers == 0:
+        return "encoder-only: no decode step"
+    return None
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=128,
+        vocab_size=256,
+        q_lora_rank=32 if cfg.q_lora_rank else 0,
+        kv_lora_rank=16 if cfg.kv_lora_rank else 0,
+        qk_nope_head_dim=8 if cfg.qk_nope_head_dim else 0,
+        qk_rope_head_dim=8 if cfg.qk_rope_head_dim else 0,
+        v_head_dim=8 if cfg.v_head_dim else 0,
+        n_experts=4 if cfg.n_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.n_experts else 0,
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        # dropless in smoke tests: capacity >= worst-case routing so that
+        # cached decode is bit-identical to the full forward pass
+        capacity_factor=float(cfg.n_experts) if cfg.n_experts else 1.25,
+        first_dense_layers=min(cfg.first_dense_layers, 1),
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state or cfg.hybrid_ssm else 64,
+        ssd_chunk=16,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        decoder_layers=2 if cfg.decoder_layers else 0,
+        max_source_len=32 if cfg.max_source_len else 0,
+        frontend_len=8 if cfg.frontend_len else 0,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        attn_chunk=32,
+        remat=False,
+        param_dtype="float32",
+    )

@@ -1,0 +1,28 @@
+"""DeepSeek-V3-671B — MoE (1 shared + 256 routed, top-8), MLA, MTP.
+d_ff=18432 applies to the 3 leading dense layers; experts are 2048-wide.
+[arXiv:2412.19437; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,                 # dense (first 3) layers
+    vocab_size=129280,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=256,
+    n_shared_experts=1,
+    experts_per_token=8,
+    moe_d_ff=2048,
+    first_dense_layers=3,
+    mtp=True,
+    rope_theta=10000.0,
+)

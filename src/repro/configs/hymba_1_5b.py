@@ -1,0 +1,24 @@
+"""Hymba-1.5B — hybrid: parallel attention + Mamba heads per layer.
+Simplifications (DESIGN.md): the parallel heads are combined with a fixed
+0.5/0.5 mean (Hymba learns per-head fusion scalars) and all layers use
+the same 1024-token sliding window (Hymba interleaves 3 global layers);
+meta-tokens are omitted. [arXiv:2411.13676; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    hybrid_ssm=True,
+    sliding_window=1024,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+)

@@ -1,0 +1,15 @@
+"""Llama2-7B — the paper's primary analysis model (statistics benchmarks
+use this geometry for synthetic weight matrices). Not one of the 10
+assigned dry-run architectures. [arXiv:2307.09288]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+)

@@ -1,0 +1,19 @@
+"""Pixtral-12B — VLM: Mistral-Nemo-style text backbone; the Pixtral ViT
+frontend is a stub supplying precomputed patch embeddings (per the
+assignment, frontends are stubs). [hf:mistralai/Pixtral-12B-2409; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1000000.0,
+    frontend="patch",
+    frontend_len=256,          # precomputed patch-embedding prefix
+)

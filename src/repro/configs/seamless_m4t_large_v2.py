@@ -1,0 +1,20 @@
+"""SeamlessM4T-large-v2 backbone — encoder-decoder, multimodal; the
+speech/frame frontend is a stub supplying precomputed frame embeddings.
+[arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,                # per side (24 enc + 24 dec)
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    encoder_layers=24,
+    decoder_layers=24,
+    max_source_len=1024,        # stub frame-embedding length
+    frontend="frames",
+    frontend_len=1024,
+)

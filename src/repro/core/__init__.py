@@ -1,0 +1,37 @@
+"""ICQuant core: the paper's contribution as a composable JAX library."""
+from repro.core.bounds import lemma1_bound, optimal_b
+from repro.core.icquant import (
+    ICQPacked,
+    dequant_matmul,
+    dequantize,
+    quantize,
+    quantize_error,
+)
+from repro.core.index_coding import (
+    GapStream,
+    decode_stream,
+    decode_to_dense_mask,
+    encode_positions,
+    mask_to_positions,
+    tile_checkpoints,
+)
+from repro.core.partition import num_outliers, outlier_mask, outlier_positions
+
+__all__ = [
+    "ICQPacked",
+    "GapStream",
+    "quantize",
+    "dequantize",
+    "dequant_matmul",
+    "quantize_error",
+    "encode_positions",
+    "decode_stream",
+    "decode_to_dense_mask",
+    "mask_to_positions",
+    "tile_checkpoints",
+    "outlier_mask",
+    "outlier_positions",
+    "num_outliers",
+    "lemma1_bound",
+    "optimal_b",
+]

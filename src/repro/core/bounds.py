@@ -1,0 +1,47 @@
+"""Lemma 1: storage-overhead bound for the gap index coding scheme.
+
+E(B) <= gamma * b * (1 + 1 / (exp(gamma * (2^b - 1)) - 1))   [bits/weight]
+
+where gamma is the outlier ratio and b the bits per stored gap symbol.
+"""
+from __future__ import annotations
+
+import math
+
+
+def lemma1_bound(gamma: float, b: int) -> float:
+    """Upper bound on expected index-coding overhead in bits per weight."""
+    if not (0.0 < gamma < 1.0):
+        raise ValueError(f"gamma must be in (0, 1), got {gamma}")
+    if b < 1:
+        raise ValueError(f"b must be >= 1, got {b}")
+    m = float(2**b - 1)
+    x = gamma * m
+    if x > 700.0:  # e^x overflows f64; the correction term is ~0
+        return gamma * b
+    denom = math.expm1(x)  # e^{gamma m} - 1, stable for small args
+    return gamma * b * (1.0 + 1.0 / denom)
+
+
+def flag_overhead_fraction(gamma: float, b: int) -> float:
+    """Expected fraction of symbols that are escape flags (bound)."""
+    m = float(2**b - 1)
+    x = gamma * m
+    if x > 700.0:
+        return 0.0
+    return 1.0 / math.expm1(x)
+
+
+def optimal_b(gamma: float, b_max: int = 16) -> int:
+    """The symbol width minimizing the Lemma-1 bound for a given ratio."""
+    return min(range(1, b_max + 1), key=lambda b: lemma1_bound(gamma, b))
+
+
+def naive_flag_bits() -> float:
+    """Binary-flag baseline: 1 bit per weight."""
+    return 1.0
+
+
+def raw_index_bits(gamma: float, d_in: int) -> float:
+    """Raw absolute-index baseline: ceil(log2(d_in)) bits per outlier."""
+    return gamma * math.ceil(math.log2(max(d_in, 2)))

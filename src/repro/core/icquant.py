@@ -1,0 +1,258 @@
+"""The ICQuant matrix codec (paper Section 3).
+
+Pipeline (per weight matrix, treated row-wise / per output channel):
+
+  1. partition: top-gamma |w| per row are outliers (exactly p per row);
+  2. quantize inliers and outliers with two independent n-bit quantizers
+     (RTN or Fisher-weighted K-means), each covering ~half the range;
+  3. encode outlier positions with the gap index-coding stream (~0.3 b/w);
+  4. pack n-bit codes densely ("two-stream overlay": an outlier position
+     holds its code in the *outlier* codebook; the selector bit is implied
+     by the decoded stream, never stored per weight).
+
+Storage = n bits/weight + B(stream) + 2 codebooks/row. The packed form is
+a pytree, so it shards, jits and checkpoints like any other param.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.bounds import optimal_b
+from repro.core.index_coding import (
+    GapStream,
+    _decode_symbols as _decode,
+    decode_stream,
+    encode_positions,
+    positions_to_mask,
+)
+from repro.core.partition import num_outliers, outlier_positions
+from repro.core.quantizers import (
+    assign_codes,
+    rtn_inlier_codebook,
+    rtn_outlier_codebook,
+    weighted_kmeans_rows,
+)
+
+CODEBOOK_DTYPE_BITS = 16  # codebooks are stored bf16 on device
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ICQPacked:
+    """Packed ICQuant weight. Reconstruction:
+
+        sel[r, j]  = 1 iff j in decode(stream)[r]
+        w_hat[r,j] = codebooks[r, sel[r,j], code[r,j]]
+    """
+
+    codes: jnp.ndarray        # (d_out, words) uint32 packed n-bit codes
+    symbols: jnp.ndarray      # (d_out, s_max) uint16 gap symbols
+    counts: jnp.ndarray       # (d_out,) int32 symbols per row
+    codebooks: jnp.ndarray    # (d_out, 2, 2^n) f32 [inlier, outlier]
+    n_bits: int = dataclasses.field(metadata=dict(static=True))
+    b: int = dataclasses.field(metadata=dict(static=True))
+    gamma: float = dataclasses.field(metadata=dict(static=True))
+    d_out: int = dataclasses.field(metadata=dict(static=True))
+    d_in: int = dataclasses.field(metadata=dict(static=True))
+    method: str = dataclasses.field(metadata=dict(static=True))
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.codes, self.symbols, self.counts, self.codebooks)
+        aux = (self.n_bits, self.b, self.gamma, self.d_out, self.d_in, self.method)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, symbols, counts, codebooks = children
+        n_bits, b, gamma, d_out, d_in, method = aux
+        return cls(codes, symbols, counts, codebooks,
+                   n_bits, b, gamma, d_out, d_in, method)
+
+    @property
+    def stream(self) -> GapStream:
+        return GapStream(self.symbols, self.counts, self.b, self.d_in)
+
+    # -- accounting ----------------------------------------------------------
+    def bits_per_weight(self) -> Dict[str, float]:
+        total_w = self.d_out * self.d_in
+        code_bits = float(self.n_bits)
+        stream_bits = float(
+            np.asarray(jax.device_get(self.counts), dtype=np.int64).sum()
+        ) * self.b / total_w
+        codebook_bits = (
+            self.codebooks.shape[1] * self.codebooks.shape[2]
+            * CODEBOOK_DTYPE_BITS / self.d_in
+        )
+        count_bits = 32.0 / self.d_in  # per-row symbol count
+        total = code_bits + stream_bits + codebook_bits + count_bits
+        return dict(
+            code=code_bits,
+            index=stream_bits,
+            codebook=codebook_bits,
+            counts=count_bits,
+            total=total,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ICQRuntime:
+    """Load-time-expanded serving format (DESIGN.md §4.3): dense n-bit
+    codes + 1-bit selector bitmap + flattened dual codebook. Trades
+    ~(1 - 0.31) extra bits/weight of HBM for decode-free dequantization
+    (no in-graph gap-stream cumsum/scatter); the Pallas kernels consume
+    exactly these tensors."""
+
+    codes: jnp.ndarray        # (..., d_out, ceil(d_in*k/32)) uint32
+    bitmap: jnp.ndarray       # (..., d_out, ceil(d_in/32)) uint32
+    codebooks: jnp.ndarray    # (..., d_out, 2^(n+1)) f32
+    n_bits: int = dataclasses.field(metadata=dict(static=True))
+    d_out: int = dataclasses.field(metadata=dict(static=True))
+    d_in: int = dataclasses.field(metadata=dict(static=True))
+
+    def tree_flatten(self):
+        return ((self.codes, self.bitmap, self.codebooks),
+                (self.n_bits, self.d_out, self.d_in))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def to_runtime_format(packed: ICQPacked) -> ICQRuntime:
+    """Expand the storage format into the serving format (load time)."""
+    lead = packed.codes.shape[:-2]
+    rows = int(np.prod(lead, dtype=np.int64)) * packed.d_out if lead \
+        else packed.d_out
+    sym2 = packed.symbols.reshape(rows, packed.symbols.shape[-1])
+    cnt2 = packed.counts.reshape(rows)
+    pos, mask = _decode(sym2, cnt2, packed.b)
+    sel = positions_to_mask(pos, mask, packed.d_in).astype(jnp.uint32)
+    bitmap = packing.pack_codes(sel, 1)
+    bitmap = bitmap.reshape(*lead, packed.d_out, bitmap.shape[-1])
+    return ICQRuntime(
+        codes=packed.codes,
+        bitmap=bitmap,
+        codebooks=packed.codebooks.reshape(*lead, packed.d_out, -1),
+        n_bits=packed.n_bits,
+        d_out=packed.d_out,
+        d_in=packed.d_in,
+    )
+
+
+def dequantize_runtime(rt: ICQRuntime) -> jnp.ndarray:
+    """Decode-free reconstruction: unpack + select (XLA path; the Pallas
+    kernel fuses the same computation into the matmul)."""
+    codes = packing.unpack_codes(rt.codes, rt.n_bits, rt.d_in).astype(jnp.int32)
+    sel = packing.unpack_codes(rt.bitmap, 1, rt.d_in).astype(jnp.int32)
+    idx = sel * (1 << rt.n_bits) + codes
+    return jnp.take_along_axis(rt.codebooks, idx, axis=-1)
+
+
+def quantize(
+    W,
+    n_bits: int,
+    gamma: float = 0.05,
+    b: Optional[int] = None,
+    fisher: Optional[jnp.ndarray] = None,
+    method: str = "rtn",
+    kmeans_iters: int = 25,
+) -> ICQPacked:
+    """Quantize a (d_out, d_in) matrix with ICQuant.
+
+    method: 'rtn' (ICQuant^RTN) or 'kmeans' (ICQuant^SK, Fisher-weighted).
+    fisher: optional (d_out, d_in) sensitivity weights (ICQuant^SK).
+    """
+    W = jnp.asarray(W, dtype=jnp.float32)
+    d_out, d_in = W.shape
+    if b is None:
+        b = optimal_b(gamma)
+    p = num_outliers(d_in, gamma)
+
+    positions = outlier_positions(W, gamma)                  # host, exact p/row
+    stream = encode_positions(positions, d_in, b)
+    mask = jnp.zeros((d_out, d_in), dtype=bool)
+    if p:
+        mask = mask.at[jnp.arange(d_out)[:, None], jnp.asarray(positions)].set(True)
+
+    if method == "rtn":
+        cb_in = rtn_inlier_codebook(W, ~mask, n_bits)
+        cb_out = (
+            rtn_outlier_codebook(W, mask, n_bits)
+            if p
+            else jnp.zeros_like(cb_in)
+        )
+        codes_in = assign_codes(W, cb_in)
+        codes_out = assign_codes(W, cb_out) if p else jnp.zeros_like(codes_in)
+    elif method == "kmeans":
+        fw = jnp.ones_like(W) if fisher is None else jnp.asarray(fisher, jnp.float32)
+        cb_in, codes_in = weighted_kmeans_rows(
+            W, fw * (~mask), 1 << n_bits, kmeans_iters
+        )
+        if p:
+            cb_out, codes_out = weighted_kmeans_rows(
+                W, fw * mask, 1 << n_bits, kmeans_iters
+            )
+        else:
+            cb_out = jnp.zeros_like(cb_in)
+            codes_out = jnp.zeros_like(codes_in)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    dense_codes = jnp.where(mask, codes_out, codes_in).astype(jnp.uint32)
+    packed = packing.pack_codes(dense_codes, n_bits)
+    codebooks = jnp.stack([cb_in, cb_out], axis=1).astype(jnp.float32)
+
+    return ICQPacked(
+        codes=packed,
+        symbols=stream.symbols,
+        counts=stream.counts,
+        codebooks=codebooks,
+        n_bits=n_bits,
+        b=b,
+        gamma=gamma,
+        d_out=d_out,
+        d_in=d_in,
+        method=method,
+    )
+
+
+def dequantize(packed: ICQPacked) -> jnp.ndarray:
+    """Pure-jnp reconstruction (the oracle; kernels/ops has the fast path).
+
+    Supports leading batch dims (e.g. layer- or expert-stacked weights):
+    codes (..., d_out, words) -> (..., d_out, d_in).
+    """
+    lead = packed.codes.shape[:-2]
+    rows = int(np.prod(lead, dtype=np.int64)) * packed.d_out if lead else packed.d_out
+    codes2 = packed.codes.reshape(rows, packed.codes.shape[-1])
+    symbols2 = packed.symbols.reshape(rows, packed.symbols.shape[-1])
+    counts2 = packed.counts.reshape(rows)
+    cb2 = packed.codebooks.reshape(rows, -1)
+
+    codes = packing.unpack_codes(codes2, packed.n_bits, packed.d_in)
+    positions, pmask = _decode(symbols2, counts2, packed.b)
+    sel = positions_to_mask(positions, pmask, packed.d_in).astype(jnp.int32)
+    flat_idx = sel * (1 << packed.n_bits) + codes.astype(jnp.int32)
+    out = jnp.take_along_axis(cb2, flat_idx, axis=-1)
+    return out.reshape(*lead, packed.d_out, packed.d_in)
+
+
+def dequant_matmul(x: jnp.ndarray, packed: ICQPacked) -> jnp.ndarray:
+    """y = x @ W_hat.T — reference quantized linear application."""
+    return x @ dequantize(packed).T
+
+
+def quantize_error(W, packed: ICQPacked, fisher=None) -> float:
+    W_hat = dequantize(packed)
+    err = (jnp.asarray(W, jnp.float32) - W_hat) ** 2
+    if fisher is not None:
+        err = err * fisher
+    return float(err.sum())

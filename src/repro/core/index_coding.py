@@ -1,0 +1,223 @@
+"""Gap-based outlier index coding (the paper's Section 3.2).
+
+Scheme
+------
+Per row, outlier positions i_1 < ... < i_p (0-based here; the paper is
+1-based) are stored as gaps
+
+    x_0 = i_1 + 1,   x_k = i_{k+1} - i_k          (all gaps >= 1)
+
+Each gap is emitted as b-bit symbols with values in [1, 2^b]:
+
+  * gap <= 2^b - 1           -> one symbol holding the gap,
+  * gap  > 2^b - 1           -> n_flag = (gap - 1) // (2^b - 1) escape
+                                symbols of value 2^b (each meaning
+                                "accumulate 2^b - 1 positions, no
+                                outlier"), then the remainder
+                                r = gap - n_flag*(2^b - 1) in [1, 2^b - 1].
+
+(The paper stores ``gap mod (2^b - 1)``; we use the remainder-in-[1, m]
+convention, which resolves the gap ≡ 0 (mod 2^b - 1) corner case while
+keeping identical costs elsewhere.)
+
+Decoding is a prefix sum, TPU-friendly: each symbol s contributes an
+increment (2^b - 1 if s == 2^b else s) and emits an outlier iff s < 2^b.
+Absolute 0-based positions are cumsum(increments) - 1 at emitting symbols.
+
+Symbols are stored value-1 (i.e. in [0, 2^b - 1]) so they fit exactly b
+bits; the escape flag is the all-ones pattern.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GapStream(NamedTuple):
+    """Padded per-row gap-symbol streams.
+
+    symbols: (rows, s_max) uint16, raw stored symbols in [0, 2^b - 1]
+             (value-1 encoding; 2^b - 1 is the escape flag). Padding
+             positions hold the escape flag so a mask-free cumsum decode
+             never emits phantom outliers.
+    counts:  (rows,) int32, number of real symbols per row.
+    b:       symbol width in bits.
+    d_in:    row length the positions index into.
+    """
+
+    symbols: jnp.ndarray
+    counts: jnp.ndarray
+    b: int
+    d_in: int
+
+    @property
+    def flag(self) -> int:
+        return (1 << self.b) - 1  # stored (value-1) escape pattern
+
+    def storage_bits_per_weight(self) -> float:
+        """Effective overhead B: real symbols * b / (rows * d_in)."""
+        total = float(np.asarray(jax.device_get(self.counts)).sum()) * self.b
+        rows = int(self.symbols.shape[0])
+        return total / (rows * self.d_in)
+
+
+def encode_positions(positions: np.ndarray, d_in: int, b: int) -> GapStream:
+    """Encode sorted 0-based outlier positions into gap streams.
+
+    positions: (rows, p) int array, each row strictly increasing, in
+               [0, d_in). Runs host-side (pack time), vectorized numpy.
+    """
+    positions = np.asarray(positions, dtype=np.int64)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    rows, p = positions.shape
+    if p == 0:
+        return GapStream(
+            symbols=jnp.zeros((rows, 0), dtype=jnp.uint16),
+            counts=jnp.zeros((rows,), dtype=jnp.int32),
+            b=b,
+            d_in=d_in,
+        )
+    if positions.min() < 0 or positions.max() >= d_in:
+        raise ValueError("positions out of range")
+    if p > 1 and not (np.diff(positions, axis=1) > 0).all():
+        raise ValueError("positions must be strictly increasing per row")
+
+    m = (1 << b) - 1
+    flag = m  # stored value of the escape symbol (value-1 encoding)
+
+    gaps = np.empty((rows, p), dtype=np.int64)
+    gaps[:, 0] = positions[:, 0] + 1
+    if p > 1:
+        gaps[:, 1:] = np.diff(positions, axis=1)
+
+    n_flags = (gaps - 1) // m                       # escapes per gap
+    remainders = gaps - n_flags * m                 # in [1, m]
+    sym_per_gap = n_flags + 1
+    counts = sym_per_gap.sum(axis=1)
+    s_max = int(counts.max())
+
+    symbols = np.full((rows, s_max), flag, dtype=np.uint16)
+    # Vectorized emission: for every gap, its remainder symbol lands at
+    # offset cumsum(sym_per_gap) - 1; escape flags occupy the positions
+    # before it (and are already the fill value).
+    ends = np.cumsum(sym_per_gap, axis=1) - 1       # remainder positions
+    row_idx = np.repeat(np.arange(rows), p)
+    symbols[row_idx, ends.ravel()] = (remainders - 1).astype(np.uint16).ravel()
+
+    return GapStream(
+        symbols=jnp.asarray(symbols, dtype=jnp.uint16),
+        counts=jnp.asarray(counts, dtype=jnp.int32),
+        b=b,
+        d_in=d_in,
+    )
+
+
+def decode_stream(stream: GapStream) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode gap streams back to positions via a parallel prefix sum.
+
+    Returns (positions, mask):
+      positions: (rows, s_max) int32 — 0-based position per symbol
+                 (valid where mask).
+      mask:      (rows, s_max) bool — True where the symbol emits an
+                 outlier (non-flag, within the row's real count).
+
+    Pure jnp; jit-safe; the only sequential dependency is a cumsum.
+    """
+    return _decode_symbols(stream.symbols, stream.counts, stream.b)
+
+
+@jax.jit
+def _decode_counts_mask(symbols, counts, flag):
+    idx = jnp.arange(symbols.shape[-1], dtype=jnp.int32)
+    in_range = idx[None, :] < counts[:, None]
+    return in_range & (symbols != flag)
+
+
+def _decode_symbols(symbols: jnp.ndarray, counts: jnp.ndarray, b: int):
+    m = (1 << b) - 1
+    flag = m
+    sym = symbols.astype(jnp.int32)
+    # stored value-1 encoding: non-flag symbol s encodes gap s+1;
+    # flag contributes m with no emission.
+    increments = jnp.where(sym == flag, m, sym + 1)
+    idx = jnp.arange(symbols.shape[-1], dtype=jnp.int32)
+    in_range = idx[None, :] < counts[:, None]
+    increments = jnp.where(in_range, increments, 0)
+    cum = jnp.cumsum(increments, axis=-1)
+    positions = (cum - 1).astype(jnp.int32)
+    mask = in_range & (sym != flag)
+    return positions, mask
+
+
+def positions_to_mask(positions: jnp.ndarray, mask: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """Scatter decoded (positions, mask) into a dense boolean outlier mask."""
+    rows = positions.shape[0]
+    dense = jnp.zeros((rows, d_in), dtype=bool)
+    safe = jnp.where(mask, positions, 0)
+    dense = dense.at[jnp.arange(rows)[:, None], safe].max(mask)
+    return dense
+
+
+def decode_to_dense_mask(stream: GapStream) -> jnp.ndarray:
+    positions, mask = decode_stream(stream)
+    return positions_to_mask(positions, mask, stream.d_in)
+
+
+def mask_to_positions(outlier_mask: np.ndarray) -> np.ndarray:
+    """Dense boolean mask (rows, d_in) -> (rows, p) sorted positions.
+
+    Requires every row to have the same number of outliers (the codec
+    guarantees this: p = floor(gamma * d_in) per row).
+    """
+    outlier_mask = np.asarray(outlier_mask, dtype=bool)
+    per_row = outlier_mask.sum(axis=1)
+    if per_row.size and not (per_row == per_row[0]).all():
+        raise ValueError("rows have differing outlier counts")
+    rows, d_in = outlier_mask.shape
+    p = int(per_row[0]) if per_row.size else 0
+    positions = np.nonzero(outlier_mask)[1].reshape(rows, p)
+    return positions
+
+
+def tile_checkpoints(stream: GapStream, tile: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Checkpointed stream (TPU adaptation, DESIGN.md §4.2).
+
+    For each (row, column-tile of width `tile`) returns
+      offsets: (rows, n_tiles) int32 — index of the first symbol whose
+               decoded position lands in the tile,
+      ncount:  (rows, n_tiles) int32 — number of symbols covering the tile
+               (including escape flags consumed inside it),
+    making every tile independently decodable: a kernel reads
+    symbols[offsets[t] : offsets[t] + ncount[t]] and a base position equal
+    to tile*t. Cost: 2 * 32 bits per (row, tile) before narrowing; with
+    u16 offsets ~= 32/tile bits/weight.
+    """
+    positions, mask = jax.device_get(decode_stream(stream))
+    symbols = np.asarray(jax.device_get(stream.symbols))
+    counts = np.asarray(jax.device_get(stream.counts))
+    rows, s_max = symbols.shape
+    n_tiles = -(-stream.d_in // tile)
+    offsets = np.zeros((rows, n_tiles), dtype=np.int32)
+    ncount = np.zeros((rows, n_tiles), dtype=np.int32)
+    # decoded "reach": position after consuming symbol j (flag or not)
+    m = (1 << stream.b) - 1
+    sym = symbols.astype(np.int64)
+    inc = np.where(sym == m, m, sym + 1)
+    idx = np.arange(s_max)
+    inc = np.where(idx[None, :] < counts[:, None], inc, 0)
+    reach = np.cumsum(inc, axis=1) - 1  # 0-based position touched by sym j
+    for t in range(n_tiles):
+        lo, hi = t * tile, min((t + 1) * tile, stream.d_in)
+        inside = (reach >= lo) & (reach < hi) & (idx[None, :] < counts[:, None])
+        any_inside = inside.any(axis=1)
+        first = np.where(any_inside, inside.argmax(axis=1), 0)
+        last = np.where(
+            any_inside, s_max - 1 - inside[:, ::-1].argmax(axis=1), -1
+        )
+        offsets[:, t] = first
+        ncount[:, t] = np.where(any_inside, last - first + 1, 0)
+    return offsets, ncount

@@ -1,0 +1,59 @@
+"""Bit-packing of n-bit codes into uint32 words.
+
+Layout: k = 32 // n codes per word, code j of a word occupying bits
+[j*n, (j+1)*n). Rows are padded to a multiple of k with zeros. The
+layout is little-endian-in-word so the Pallas kernels unpack with plain
+shift/mask on the VPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def codes_per_word(n_bits: int) -> int:
+    if not 1 <= n_bits <= 16:
+        raise ValueError(f"n_bits must be in [1, 16], got {n_bits}")
+    return 32 // n_bits
+
+
+def packed_width(length: int, n_bits: int) -> int:
+    k = codes_per_word(n_bits)
+    return -(-length // k)
+
+
+def pack_codes(codes: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Pack (..., L) integer codes in [0, 2^n) into (..., ceil(L/k)) uint32."""
+    k = codes_per_word(n_bits)
+    L = codes.shape[-1]
+    pad = (-L) % k
+    codes = jnp.asarray(codes, dtype=jnp.uint32)
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    grouped = codes.reshape(codes.shape[:-1] + (-1, k))
+    shifts = jnp.arange(k, dtype=jnp.uint32) * n_bits
+    # disjoint bit ranges: sum == bitwise or
+    return (grouped << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_codes(words: jnp.ndarray, n_bits: int, length: int) -> jnp.ndarray:
+    """Unpack uint32 words back to (..., length) uint32 codes."""
+    k = codes_per_word(n_bits)
+    mask = jnp.uint32((1 << n_bits) - 1)
+    shifts = jnp.arange(k, dtype=jnp.uint32) * n_bits
+    expanded = (words[..., None] >> shifts) & mask
+    flat = expanded.reshape(words.shape[:-1] + (-1,))
+    return flat[..., :length]
+
+
+def pack_codes_np(codes: np.ndarray, n_bits: int) -> np.ndarray:
+    """Host-side numpy packer (pack time)."""
+    k = codes_per_word(n_bits)
+    L = codes.shape[-1]
+    pad = (-L) % k
+    codes = np.asarray(codes, dtype=np.uint32)
+    if pad:
+        codes = np.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    grouped = codes.reshape(codes.shape[:-1] + (-1, k))
+    shifts = (np.arange(k, dtype=np.uint32) * n_bits)
+    return np.bitwise_or.reduce(grouped << shifts, axis=-1).astype(np.uint32)

@@ -1,0 +1,54 @@
+"""Outlier/inlier partition: top-gamma weights by magnitude per row."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_outliers(d_in: int, gamma: float) -> int:
+    return int(np.floor(gamma * d_in))
+
+
+def outlier_positions(W: jnp.ndarray, gamma: float) -> np.ndarray:
+    """Sorted 0-based outlier positions per row, exactly p = floor(gamma*d)
+    each (ties broken by column order, deterministically)."""
+    W = np.asarray(jax.device_get(W))
+    d_in = W.shape[-1]
+    p = num_outliers(d_in, gamma)
+    if p == 0:
+        return np.zeros((W.shape[0], 0), dtype=np.int64)
+    mag = np.abs(W)
+    # argpartition gives exactly p per row regardless of ties
+    top = np.argpartition(mag, d_in - p, axis=-1)[..., d_in - p:]
+    return np.sort(top, axis=-1)
+
+
+def outlier_mask(W: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Dense boolean mask of per-row top-gamma |w| (jit-friendly)."""
+    d_in = W.shape[-1]
+    p = num_outliers(d_in, gamma)
+    if p == 0:
+        return jnp.zeros(W.shape, dtype=bool)
+    mag = jnp.abs(W)
+    # threshold = p-th largest magnitude per row
+    kth = jax.lax.top_k(mag, p)[0][..., -1:]
+    mask = mag >= kth
+    # Resolve ties so each row has exactly p outliers: keep the first p.
+    over = jnp.cumsum(mask.astype(jnp.int32), axis=-1)
+    return mask & (over <= p)
+
+
+def partition_stats(W: jnp.ndarray, gamma: float) -> Tuple[float, float]:
+    """(mean fraction of range occupied by outliers, mean inlier range /
+    full range) across rows — the paper's Figure 1 quantity."""
+    mask = outlier_mask(W, gamma)
+    full = W.max(axis=-1) - W.min(axis=-1)
+    big = jnp.finfo(W.dtype).max
+    inl_max = jnp.where(mask, -big, W).max(axis=-1)
+    inl_min = jnp.where(mask, big, W).min(axis=-1)
+    inlier = inl_max - inl_min
+    frac = 1.0 - inlier / jnp.maximum(full, 1e-12)
+    return float(frac.mean()), float((inlier / jnp.maximum(full, 1e-12)).mean())

@@ -1,0 +1,63 @@
+"""Random input-channel permutations (paper Appendix C.2).
+
+If outlier positions are not uniform, a one-time random permutation of the
+input channels of each linear layer enforces uniformity without changing
+the model function: W @ x == (W P)(P^T x), and P^T can be folded into the
+producing layer's output channels. These helpers build and fold such
+permutations; tests assert exact output invariance through an MLP block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_permutation(n: int, seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(n)
+
+
+def invert(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    return inv
+
+
+def permute_in(W: jnp.ndarray, perm: np.ndarray) -> jnp.ndarray:
+    """Permute input channels (columns) of a (d_out, d_in) weight."""
+    return W[:, perm]
+
+
+def permute_out(W: jnp.ndarray, perm: np.ndarray) -> jnp.ndarray:
+    """Permute output channels (rows)."""
+    return W[perm, :]
+
+
+def fold_mlp_block(
+    w_up: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_down: jnp.ndarray,
+    seed: int = 0,
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, np.ndarray]]:
+    """Fold permutations through a SwiGLU MLP (paper Figure 7).
+
+    P1 permutes d_model (shared by up/gate inputs and down outputs must
+    stay fixed to preserve the residual stream — so we keep the residual
+    order and only permute the hidden dim), P2 permutes d_ff.
+
+      up':   P2-rows of up,   gate': P2-rows of gate,
+      down': P2-columns of down.
+
+    Output of the block is exactly unchanged because the hidden
+    permutation cancels: down' @ act(up' x * gate' x) == down @ act(...).
+    """
+    d_ff = w_up.shape[0]
+    p2 = make_permutation(d_ff, seed)
+    folded = dict(
+        w_up=permute_out(w_up, p2),
+        w_gate=permute_out(w_gate, p2),
+        w_down=permute_in(w_down, p2),
+    )
+    return folded, dict(p2=p2)

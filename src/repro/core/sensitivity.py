@@ -1,0 +1,44 @@
+"""Fisher-information sensitivity for ICQuant^SK (paper Appendix E.1).
+
+SqueezeLLM-style: the Hessian of the loss w.r.t. a weight is approximated
+by the (empirical, diagonal) Fisher information — the running mean of the
+squared gradient over a small calibration set. The quantizer then solves
+
+    min_WQ (W - WQ)^T diag(F) (W - WQ)
+
+via Fisher-weighted K-means (see quantizers.weighted_kmeans_rows).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+def fisher_information(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    params: Any,
+    batches: Iterable[Any],
+) -> Any:
+    """Diagonal Fisher: mean over batches of grad(loss)^2, per parameter.
+
+    loss_fn(params, batch) -> scalar loss. Returns a pytree like params.
+    """
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    acc = jax.tree.map(jnp.zeros_like, params)
+    n = 0
+    for batch in batches:
+        g = grad_fn(params, batch)
+        acc = jax.tree.map(lambda a, gi: a + gi.astype(a.dtype) ** 2, acc, g)
+        n += 1
+    if n == 0:
+        raise ValueError("empty calibration set")
+    return jax.tree.map(lambda a: a / n, acc)
+
+
+def normalize_fisher(fisher: jnp.ndarray, floor: float = 1e-8) -> jnp.ndarray:
+    """Scale-invariant positive weights (per matrix) for K-means."""
+    f = jnp.asarray(fisher, jnp.float32)
+    mean = jnp.maximum(f.mean(), floor)
+    return jnp.maximum(f / mean, floor)

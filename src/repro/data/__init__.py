@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    CalibrationSet,
+    SyntheticLM,
+    make_batch_iterator,
+)
+
+__all__ = ["SyntheticLM", "CalibrationSet", "make_batch_iterator"]

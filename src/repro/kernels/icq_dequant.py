@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: ICQuant tile dequantization.
+
+HBM->VMEM traffic per output tile is n/16 + 1/16th of the bf16 baseline
+(packed codes + 1-bit selector bitmap + one codebook row pair); the
+unpack is shift/mask on the VPU and the codebook lookup is an
+iota-compare one-hot reduction (<= 32 fused multiply-adds per element for
+n <= 4), avoiding dynamic gathers that don't vectorize on TPU.
+
+Block layout: grid (d_out/BR, d_in/BC); code words and bitmap words are
+blocked along the same column tiles (BC is a multiple of lcm(k, 32)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_block(words: jnp.ndarray, n_bits: int, out_cols: int) -> jnp.ndarray:
+    """(BR, W) uint32 -> (BR, out_cols) int32 of n-bit fields."""
+    k = 32 // n_bits
+    mask = jnp.uint32((1 << n_bits) - 1)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * n_bits)[None, None, :]
+    fields = (words[:, :, None] >> shifts) & mask
+    return fields.reshape(words.shape[0], -1)[:, :out_cols].astype(jnp.int32)
+
+
+def _codebook_select(idx: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """idx: (BR, BC) int32 in [0, C); codebooks: (BR, C) -> (BR, BC) f32
+    via one-hot reduction (TPU-friendly gather)."""
+    C = codebooks.shape[-1]
+    acc = jnp.zeros(idx.shape, jnp.float32)
+    for c in range(C):  # C <= 32 for n_bits <= 4: unrolled VPU selects
+        acc = acc + jnp.where(idx == c, codebooks[:, c][:, None], 0.0)
+    return acc
+
+
+def _dequant_kernel(codes_ref, bitmap_ref, cb_ref, out_ref, *, n_bits: int):
+    BC = out_ref.shape[-1]
+    codes = _unpack_block(codes_ref[...], n_bits, BC)
+    sel = _unpack_block(bitmap_ref[...], 1, BC)
+    idx = sel * (1 << n_bits) + codes
+    out_ref[...] = _codebook_select(idx, cb_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "d_in", "block_r", "block_c",
+                              "interpret")
+)
+def icq_dequant(
+    codes: jnp.ndarray,      # (d_out, Wc) uint32
+    bitmap: jnp.ndarray,     # (d_out, Wb) uint32
+    codebooks: jnp.ndarray,  # (d_out, 2^(n+1)) f32
+    *,
+    n_bits: int,
+    d_in: int,
+    block_r: int = 256,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    d_out = codes.shape[0]
+    k = 32 // n_bits
+    # block_c must align to both packing granularities (code and bitmap
+    # words): snap down to a multiple of lcm(k, 32)
+    lcm = (k * 32) // _gcd(k, 32)
+    block_c = max(lcm, (block_c // lcm) * lcm)
+    br = min(block_r, d_out)
+    bc = min(block_c, _round_up(d_in, lcm))
+
+    pc = _round_up(d_in, bc)                   # padded columns
+    pr = _round_up(d_out, br)
+    wc_b, wb_b = bc // k, bc // 32
+    codes_p = _pad2(codes, pr, pc // k)
+    bitmap_p = _pad2(bitmap, pr, pc // 32)
+    cb_p = _pad2(codebooks, pr, codebooks.shape[1])
+
+    grid = (pr // br, pc // bc)
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, wc_b), lambda i, j: (i, j)),
+            pl.BlockSpec((br, wb_b), lambda i, j: (i, j)),
+            pl.BlockSpec((br, codebooks.shape[1]), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pr, pc), jnp.float32),
+        interpret=interpret,
+    )(codes_p, bitmap_p, cb_p)
+    return out[:d_out, :d_in]
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad2(x, r, c):
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: weighted K-means assignment accumulation.
+
+The calibration hot loop of ICQuant^SK: every Lloyd iteration assigns
+each weight to its nearest centroid and accumulates per-cluster weighted
+sums. Blocked over (row tiles, column tiles); the per-cluster reduction
+is an argmin + one-hot matmul against the value/weight tiles — MXU work,
+no scatters. Accumulation across column tiles uses the output-revisiting
+grid schedule (column axis innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(w_ref, wt_ref, c_ref, wsum_ref, vsum_ref, *, n_l: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        wsum_ref[...] = jnp.zeros_like(wsum_ref)
+        vsum_ref[...] = jnp.zeros_like(vsum_ref)
+
+    w = w_ref[...]                        # (BR, BL)
+    wt = wt_ref[...]
+    c = c_ref[...]                        # (BR, C)
+    d = jnp.abs(w[:, :, None] - c[:, None, :])          # (BR, BL, C)
+    dmin = d.min(axis=-1, keepdims=True)
+    onehot = (d == dmin).astype(jnp.float32)
+    # ties: keep only the first minimal index
+    first = jnp.cumsum(onehot, axis=-1)
+    onehot = jnp.where(first == 1.0, onehot, 0.0)
+    wsum_ref[...] += (onehot * wt[:, :, None]).sum(axis=1)
+    vsum_ref[...] += (onehot * (wt * w)[:, :, None]).sum(axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_l", "interpret")
+)
+def kmeans_assign(
+    w: jnp.ndarray,          # (R, L)
+    weight: jnp.ndarray,     # (R, L)
+    centroids: jnp.ndarray,  # (R, C)
+    *,
+    block_r: int = 64,
+    block_l: int = 1024,
+    interpret: bool = True,
+):
+    R, L = w.shape
+    C = centroids.shape[-1]
+    br = min(block_r, R)
+    bl = min(block_l, L)
+    pr = -(-R // br) * br
+    plc = -(-L // bl) * bl
+    # zero-pad: padded points carry zero weight, so they contribute nothing
+    w_p = jnp.pad(w.astype(jnp.float32), ((0, pr - R), (0, plc - L)))
+    wt_p = jnp.pad(weight.astype(jnp.float32), ((0, pr - R), (0, plc - L)))
+    c_p = jnp.pad(centroids.astype(jnp.float32), ((0, pr - R), (0, 0)))
+
+    grid = (pr // br, plc // bl)
+    wsum, vsum = pl.pallas_call(
+        functools.partial(_assign_kernel, n_l=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bl), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bl), lambda i, j: (i, j)),
+            pl.BlockSpec((br, C), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, C), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pr, C), jnp.float32),
+            jax.ShapeDtypeStruct((pr, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_p, wt_p, c_p)
+    return wsum[:R], vsum[:R]

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels + format conversion.
+
+``to_runtime(packed)`` expands an ICQPacked (storage format: n-bit codes
++ ~0.31 b/w gap stream) into the kernel runtime format (codes + 1-bit
+selector bitmap + flattened dual codebook). The expansion happens once at
+model-load time; see EXPERIMENTS.md §Perf for the v2 checkpointed-stream
+format that shrinks the runtime overlay back toward the storage size.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.icquant import ICQPacked
+from repro.core.index_coding import decode_to_dense_mask
+from repro.kernels.icq_dequant import icq_dequant
+from repro.kernels.icq_matmul import icq_matmul
+from repro.kernels.kmeans_assign import kmeans_assign
+
+
+def to_runtime(packed: ICQPacked) -> Dict[str, jnp.ndarray]:
+    """ICQPacked (2-D only) -> kernel runtime tensors."""
+    assert packed.codes.ndim == 2, "expand stacked weights per slice"
+    sel = decode_to_dense_mask(packed.stream).astype(jnp.uint32)
+    bitmap = packing.pack_codes(sel, 1)
+    codebooks = packed.codebooks.reshape(packed.d_out, -1).astype(jnp.float32)
+    return dict(
+        codes=packed.codes,
+        bitmap=bitmap,
+        codebooks=codebooks,
+        n_bits=packed.n_bits,
+        d_in=packed.d_in,
+    )
+
+
+def runtime_bits_per_weight(rt: Dict) -> float:
+    """HBM bits per logical weight of the runtime format."""
+    d_out = rt["codes"].shape[0]
+    total = (
+        rt["codes"].size * 32 + rt["bitmap"].size * 32
+        + rt["codebooks"].size * 16
+    )
+    return total / (d_out * rt["d_in"])
+
+
+def dequant(rt: Dict, interpret: bool = True, **blocks) -> jnp.ndarray:
+    return icq_dequant(
+        rt["codes"], rt["bitmap"], rt["codebooks"],
+        n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
+    )
+
+
+def matmul(x, rt: Dict, interpret: bool = True, **blocks) -> jnp.ndarray:
+    return icq_matmul(
+        x, rt["codes"], rt["bitmap"], rt["codebooks"],
+        n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
+    )
+
+
+__all__ = ["to_runtime", "runtime_bits_per_weight", "dequant", "matmul",
+           "kmeans_assign"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests).
+
+Runtime tensor format (DESIGN.md §4.3) shared by kernels and refs:
+  codes:     (d_out, ceil(d_in/k)) uint32 — k = 32//n packed n-bit codes
+  bitmap:    (d_out, ceil(d_in/32)) uint32 — 1-bit outlier selector
+  codebooks: (d_out, 2^(n+1)) f32 — [inlier levels ++ outlier levels]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_codes
+
+
+def dequant_ref(codes, bitmap, codebooks, n_bits: int, d_in: int):
+    """-> (d_out, d_in) f32 reconstruction."""
+    c = unpack_codes(codes, n_bits, d_in).astype(jnp.int32)
+    sel = unpack_codes(bitmap, 1, d_in).astype(jnp.int32)
+    idx = sel * (1 << n_bits) + c
+    return jnp.take_along_axis(codebooks, idx, axis=-1)
+
+
+def matmul_ref(x, codes, bitmap, codebooks, n_bits: int, d_in: int):
+    """x: (M, d_in) @ W_hat.T -> (M, d_out)."""
+    w = dequant_ref(codes, bitmap, codebooks, n_bits, d_in)
+    return x.astype(jnp.float32) @ w.T
+
+
+def kmeans_assign_ref(w, weight, centroids):
+    """One weighted-Lloyd accumulation step.
+
+    w, weight: (R, L); centroids: (R, C).
+    Returns (wsum (R, C), vsum (R, C)): per-cluster weight and
+    weight*value sums under nearest-centroid assignment."""
+    d = jnp.abs(w[..., None] - centroids[:, None, :])        # (R, L, C)
+    a = jnp.argmin(d, axis=-1)                               # (R, L)
+    onehot = jax.nn.one_hot(a, centroids.shape[-1], dtype=jnp.float32)
+    wsum = (onehot * weight[..., None]).sum(axis=1)
+    vsum = (onehot * (weight * w)[..., None]).sum(axis=1)
+    return wsum, vsum

@@ -1,0 +1,9 @@
+"""Launchers: mesh, dry-run, train, serve, quantize.
+
+NOTE: ``repro.launch.dryrun`` must be imported/executed as the entry
+point (it sets XLA_FLAGS before jax init); don't import it from library
+code.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,315 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production mesh and extract roofline terms from the compiled module.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] [--out DIR]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first initialization); never set it globally.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import subprocess    # noqa: E402
+import time          # noqa: E402
+
+import jax                                    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (                   # noqa: E402
+    ARCHITECTURES, SHAPES, SHAPE_BY_NAME, get_config, shape_applicable,
+)
+from repro.launch import specs as sp          # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (              # noqa: E402
+    make_decode_step, make_prefill_step, make_train_step,
+)
+from repro.optim import AdamWConfig           # noqa: E402
+from repro.runtime.sharding import (          # noqa: E402
+    batch_specs, cache_specs, param_specs,
+)
+
+COLLECTIVE_RE = re.compile(
+    r"^\s*\S+\s*=\s*\S+\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([\d,]*)\]")
+DTYPE_BYTES = dict(f64=8, s64=8, u64=8, f32=4, s32=4, u32=4, bf16=2, f16=2,
+                   s8=1, u8=1, pred=1)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in compiled HLO text."""
+    totals = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # output-shape convention: bytes of the result tuple/array
+        lhs = line.split("=", 1)[1]
+        b = 0
+        for dt, dims in SHAPE_RE.findall(lhs.split("(", 1)[0]):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * DTYPE_BYTES[dt]
+        totals[op] = totals.get(op, 0) + b
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _layer_variants(cfg):
+    """Small layer-count variants for linear cost extrapolation.
+
+    XLA counts a scan body once, so the full-config lowering (scanned)
+    proves compilation + memory, while two-to-three *unrolled* small
+    variants identify the per-layer cost exactly:
+        cost(L…) = A + sum_i L_i * B_i   (per homogeneous stack i)
+    Returns (variant_cfgs, design_matrix_rows, full_counts).
+    """
+    import dataclasses as dc
+
+    if cfg.is_encdec:
+        pts = [(1, 2), (1, 4), (2, 2)]
+        variants = [
+            dc.replace(cfg, encoder_layers=e, decoder_layers=d,
+                       scan_layers=False)
+            for e, d in pts
+        ]
+        rows = [[1, e, d] for e, d in pts]
+        full = [1, cfg.encoder_layers, cfg.decoder_layers]
+    elif cfg.family == "moe" and cfg.first_dense_layers:
+        pts = [(1, 3), (1, 5), (2, 4)]   # (first_dense, total)
+        variants = [
+            dc.replace(cfg, first_dense_layers=fd, n_layers=t,
+                       scan_layers=False)
+            for fd, t in pts
+        ]
+        rows = [[1, fd, t - fd] for fd, t in pts]
+        full = [1, cfg.first_dense_layers,
+                cfg.n_layers - cfg.first_dense_layers]
+    else:
+        pts = [2, 4]
+        variants = [
+            dc.replace(cfg, n_layers=L, scan_layers=False) for L in pts
+        ]
+        rows = [[1, L] for L in pts]
+        full = [1, cfg.n_layers]
+    return variants, rows, full
+
+
+def extrapolate_costs(arch: str, shape_name: str, multi_pod: bool,
+                      fsdp: bool = True, quant_bits: int = 0):
+    """Exact roofline terms via per-layer linear fit of unrolled variants."""
+    import numpy as np
+
+    cfg0 = sp.dryrun_config(get_config(arch))
+    variants, rows, full = _layer_variants(cfg0)
+    flops, bts, coll = [], [], []
+    for vcfg in variants:
+        r = _lower_one(vcfg, shape_name, multi_pod, fsdp,
+                       quant_bits=quant_bits)
+        flops.append(r["flops"])
+        bts.append(r["bytes_accessed"])
+        coll.append(r["collective_bytes"]["total"])
+    A = np.asarray(rows, dtype=np.float64)
+    sol_f, *_ = np.linalg.lstsq(A, np.asarray(flops), rcond=None)
+    sol_b, *_ = np.linalg.lstsq(A, np.asarray(bts), rcond=None)
+    sol_c, *_ = np.linalg.lstsq(A, np.asarray(coll), rcond=None)
+    fv = np.asarray(full, dtype=np.float64)
+    return dict(
+        flops=float(fv @ sol_f),
+        bytes_accessed=float(fv @ sol_b),
+        collective_total=float(fv @ sol_c),
+        variant_points=dict(rows=rows, flops=flops, bytes=bts,
+                            collective=coll),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+               extrapolate: bool = True, quant_bits: int = 0):
+    cfg = sp.dryrun_config(get_config(arch))
+    shape = SHAPE_BY_NAME[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return dict(arch=arch, shape=shape_name, status="SKIP", reason=skip)
+
+    # full production config, scanned stacks: proves lower+compile on the
+    # production mesh and yields the memory analysis
+    cfg_scan = __import__("dataclasses").replace(cfg, scan_layers=True)
+    result = _lower_one(cfg_scan, shape_name, multi_pod, fsdp,
+                        quant_bits=quant_bits)
+    result.update(arch=arch, shape=shape_name, status="OK",
+                  mesh="2x16x16" if multi_pod else "16x16")
+    result["scan_note"] = (
+        "flops/bytes/collectives from the scanned module count scan "
+        "bodies once; see 'extrapolated' for exact per-layer-scaled terms"
+    )
+    if quant_bits:
+        result["quant_bits"] = quant_bits
+    if extrapolate and not multi_pod:
+        result["extrapolated"] = extrapolate_costs(
+            arch, shape_name, multi_pod, fsdp, quant_bits=quant_bits
+        )
+    return result
+
+
+def _lower_one(cfg, shape_name: str, multi_pod: bool, fsdp: bool = True,
+               quant_bits: int = 0):
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    opt_cfg = AdamWConfig(state_dtype="bfloat16")
+
+    if quant_bits:   # ICQuant-packed serving path (decode/prefill only)
+        params = sp.quantized_param_structs(cfg, n_bits=quant_bits)
+    else:
+        params = sp.param_structs(cfg)
+    p_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, fsdp=fsdp)
+    )
+    batch = sp.input_specs(cfg, shape)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs(batch, mesh))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = sp.opt_structs(cfg, opt_cfg)
+            o_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                param_specs(opt["adam"]["mu"], mesh, fsdp=fsdp),
+            )
+            o_sh = dict(adam=dict(mu=o_sh, nu=o_sh,
+                                  step=NamedSharding(mesh, P())))
+            fn = make_train_step(cfg, opt_cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, o_sh, b_sh)
+            ).lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            cache = sp.cache_structs(cfg, shape.global_batch, shape.seq_len)
+            c_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh)
+            )
+            fn = make_prefill_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, b_sh)
+            ).lower(params, cache, batch)
+        else:  # decode
+            cache = sp.cache_structs(cfg, shape.global_batch, shape.seq_len)
+            c_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh)
+            )
+            fn = make_decode_step(cfg)
+            tokens = batch["tokens"]
+            start = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            if cfg.is_encdec:
+                enc = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.max_source_len, cfg.d_model),
+                    jax.numpy.dtype(cfg.param_dtype),
+                )
+                fm = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.max_source_len), jax.numpy.bool_
+                )
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(
+                        p_sh, c_sh,
+                        NamedSharding(mesh, batch_specs(tokens, mesh)),
+                        NamedSharding(mesh, P()),
+                        NamedSharding(mesh, batch_specs(enc, mesh)),
+                        NamedSharding(mesh, batch_specs(fm, mesh)),
+                    ),
+                ).lower(params, cache, tokens, start, enc, fm)
+            else:
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(
+                        p_sh, c_sh,
+                        NamedSharding(mesh, batch_specs(tokens, mesh)),
+                        NamedSharding(mesh, P()),
+                    ),
+                ).lower(params, cache, tokens, start)
+
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    result = dict(
+        n_chips=int(n_chips),
+        compile_seconds=round(compile_s, 1),
+        flops=float(cost.get("flops", -1.0)),
+        bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+        collective_bytes=coll,
+        memory=dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            peak_bytes=int(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+            ),
+        ),
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--quant-bits", type=int, default=0,
+                    help="lower the ICQuant-packed serving path")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        # orchestrate one subprocess per cell (isolates XLA state, allows
+        # parallelism at the shell level)
+        archs = sorted(ARCHITECTURES)
+        shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+        failures = []
+        for a in archs:
+            for s in shapes:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    failures.append((a, s))
+        if failures:
+            print("FAILED CELLS:", failures)
+            sys.exit(1)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    for s in shapes:
+        res = lower_cell(args.arch, s, args.multi_pod, fsdp=not args.no_fsdp,
+                         quant_bits=args.quant_bits)
+        tag = "multipod" if args.multi_pod else "pod"
+        if args.quant_bits:
+            tag += f"_q{args.quant_bits}"
+        path = os.path.join(args.out, f"{args.arch}__{s}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        print(json.dumps(res))
+
+
+if __name__ == "__main__":
+    main()

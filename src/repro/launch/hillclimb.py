@@ -1,0 +1,181 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Lowers one (arch x shape) cell with config/mesh overrides and reports the
+same roofline terms as the dry-run, so each hypothesis -> change ->
+re-lower -> measure iteration is one CLI call:
+
+  python -m repro.launch.hillclimb --arch mamba2-130m --shape train_4k \
+      --tp 1 --set ssd_chunk=64
+  python -m repro.launch.hillclimb --arch deepseek-v3-671b --shape train_4k \
+      --set moe_grouped_dispatch=True
+  python -m repro.launch.hillclimb --arch mixtral-8x7b --shape long_500k \
+      --quant-bits 2
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPE_BY_NAME, get_config          # noqa: E402
+from repro.launch import specs as sp                         # noqa: E402
+from repro.launch.dryrun import collective_bytes, _layer_variants  # noqa: E402
+from repro.launch.steps import (                             # noqa: E402
+    make_decode_step, make_prefill_step, make_train_step,
+)
+from repro.optim import AdamWConfig                          # noqa: E402
+from repro.runtime.sharding import (                         # noqa: E402
+    batch_specs, cache_specs, param_specs,
+)
+
+
+def parse_overrides(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"True": True, "False": False}.get(v, v)
+    return out
+
+
+def make_mesh(tp: int, n_chips: int = 256):
+    return jax.make_mesh(
+        (n_chips // tp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def lower_with(cfg, shape, mesh, fsdp=True, quant_bits=0, runtime=False):
+    opt_cfg = AdamWConfig(state_dtype="bfloat16")
+    params = (
+        sp.quantized_param_structs(cfg, n_bits=quant_bits, runtime=runtime)
+        if quant_bits else sp.param_structs(cfg)
+    )
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, fsdp=fsdp))
+    batch = sp.input_specs(cfg, shape)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_specs(batch, mesh))
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = sp.opt_structs(cfg, opt_cfg)
+            o_mu = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                param_specs(opt["adam"]["mu"], mesh, fsdp=fsdp),
+            )
+            o_sh = dict(adam=dict(mu=o_mu, nu=o_mu,
+                                  step=NamedSharding(mesh, P())))
+            compiled = jax.jit(
+                make_train_step(cfg, opt_cfg),
+                in_shardings=(p_sh, o_sh, b_sh),
+            ).lower(params, opt, batch).compile()
+        elif shape.kind == "prefill":
+            cache = sp.cache_structs(cfg, shape.global_batch, shape.seq_len)
+            c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                cache_specs(cache, mesh))
+            compiled = jax.jit(
+                make_prefill_step(cfg), in_shardings=(p_sh, c_sh, b_sh)
+            ).lower(params, cache, batch).compile()
+        else:
+            cache = sp.cache_structs(cfg, shape.global_batch, shape.seq_len)
+            c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                cache_specs(cache, mesh))
+            tokens = batch["tokens"]
+            start = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            args = [params, cache, tokens, start]
+            shards = [p_sh, c_sh,
+                      NamedSharding(mesh, batch_specs(tokens, mesh)),
+                      NamedSharding(mesh, P())]
+            if cfg.is_encdec:
+                enc = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.max_source_len, cfg.d_model),
+                    jax.numpy.dtype(cfg.param_dtype))
+                fm = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.max_source_len), jax.numpy.bool_)
+                args += [enc, fm]
+                shards += [NamedSharding(mesh, batch_specs(enc, mesh)),
+                           NamedSharding(mesh, batch_specs(fm, mesh))]
+            compiled = jax.jit(
+                make_decode_step(cfg), in_shardings=tuple(shards)
+            ).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    return dict(
+        compile_seconds=round(time.time() - t0, 1),
+        flops=float(cost.get("flops", -1.0)),
+        bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+        collective_bytes=collective_bytes(compiled.as_text()),
+        peak_bytes=int(getattr(mem, "temp_size_in_bytes", 0)
+                       + getattr(mem, "argument_size_in_bytes", 0)),
+    )
+
+
+def run_cell(arch, shape_name, tp=16, fsdp=True, quant_bits=0,
+             runtime=False, overrides=None, extrapolate=True):
+    cfg = sp.dryrun_config(get_config(arch))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_mesh(tp)
+
+    # per-layer-exact costs via small unrolled variants (see dryrun)
+    variants, rows, full = _layer_variants(cfg)
+    fl, bt, cl = [], [], []
+    r0 = None
+    for vcfg in variants:
+        r = lower_with(vcfg, shape, mesh, fsdp, quant_bits, runtime)
+        r0 = r0 or r
+        fl.append(r["flops"])
+        bt.append(r["bytes_accessed"])
+        cl.append(r["collective_bytes"]["total"])
+    A = np.asarray(rows, np.float64)
+    fv = np.asarray(full, np.float64)
+    sol = lambda y: float(fv @ np.linalg.lstsq(A, np.asarray(y), rcond=None)[0])
+    n_chips = mesh.devices.size
+    flops, bts, coll = sol(fl), sol(bt), sol(cl)
+    return dict(
+        arch=arch, shape=shape_name, tp=tp, fsdp=fsdp,
+        quant_bits=quant_bits, overrides=overrides or {},
+        n_chips=int(n_chips),
+        flops=flops, bytes_accessed=bts, collective_total=coll,
+        compute_s=flops / 197e12,
+        memory_xla_s=bts / 819e9,
+        collective_s=coll / 150e9,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--runtime-format", action="store_true",
+                    help="serve from the bitmap runtime format")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides, e.g. ssd_chunk=64")
+    args = ap.parse_args()
+    res = run_cell(args.arch, args.shape, tp=args.tp, fsdp=not args.no_fsdp,
+                   quant_bits=args.quant_bits, runtime=args.runtime_format,
+                   overrides=parse_overrides(args.set))
+    print(json.dumps(res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving driver: train briefly, optionally ICQuant the weights, then
+serve a batch of requests through the GenerationEngine.
+
+``python -m repro.launch.serve --arch <id> [--bits 3] [--requests 8]``
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.quantize import quantize_tree
+from repro.launch.train import train
+from repro.serving import GenerationEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--bits", type=int, default=0,
+                    help="ICQuant bits (0 = serve FP weights)")
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    if cfg.is_encdec or cfg.frontend != "none":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, frontend="none", frontend_len=0)
+
+    params, _ = train(args.arch, steps=args.train_steps, batch=4, seq=64,
+                      ckpt_dir="/tmp/repro_serve_ckpt")
+    if args.bits:
+        params, acct = quantize_tree(params, args.bits, gamma=args.gamma)
+        print(f"[serve] quantized to {acct['mean_bits']:.2f} bits/weight")
+
+    engine = GenerationEngine(params, cfg, batch_size=args.batch, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
+        engine.submit(Request(rid, prompt.astype(np.int32),
+                              max_new_tokens=args.max_new))
+    done = engine.run()
+    for rid in sorted(done):
+        r = done[rid]
+        print(f"[serve] req {rid}: prompt_len={len(r.prompt)} "
+              f"generated={r.generated}")
+
+
+if __name__ == "__main__":
+    main()

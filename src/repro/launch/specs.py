@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct stand-ins for params / optimizer / caches / batches.
+
+Everything the dry-run lowers is abstract: parameter trees come from
+``jax.eval_shape`` over the real initializers (no 671B allocation), and
+inputs are ShapeDtypeStructs — weak-type-correct and shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.steps import init_opt_state, make_cache
+from repro.models import init_model
+
+
+def dryrun_config(cfg: ModelConfig) -> ModelConfig:
+    """Production numerics for lowering: bf16 params, remat on, layers
+    unrolled so cost_analysis counts every layer (scan bodies are counted
+    once by XLA)."""
+    return dataclasses.replace(
+        cfg, param_dtype="bfloat16", remat=True, scan_layers=False
+    )
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def opt_structs(cfg: ModelConfig, opt_cfg, compress_grads: bool = False):
+    params = param_structs(cfg)
+    return jax.eval_shape(
+        lambda: init_opt_state(params, opt_cfg, compress_grads)
+    )
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int):
+    params = param_structs(cfg)
+    return jax.eval_shape(lambda: make_cache(params, cfg, batch, max_len))
+
+
+def quantized_param_structs(cfg: ModelConfig, n_bits: int = 2,
+                            gamma: float = 0.05, b: int = 6,
+                            runtime: bool = False):
+    """Abstract ICQPacked weights for lowering the quantized serving path.
+
+    Every quantizable 2-D (or stacked) weight becomes an ICQPacked struct
+    with the exact packed shapes the codec would produce: n-bit code
+    words, a gap stream sized to p + E[flags] (+3σ slack, uniform
+    positions), per-row dual codebooks.
+    """
+    import math
+
+    from repro.core.icquant import ICQPacked, ICQRuntime
+    from repro.core.packing import packed_width
+    from repro.launch.quantize import quantizable
+
+    params = param_structs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        if not quantizable(path, leaf):
+            out.append(leaf)
+            continue
+        lead = leaf.shape[:-2]
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        p = int(gamma * d_in)
+        flags = p / max(math.expm1(gamma * (2**b - 1)), 1e-9)
+        s_max = int(p + flags + 3 * math.sqrt(max(p, 1)))
+        rows = lead + (d_out,)
+        if runtime:
+            out.append(
+                ICQRuntime(
+                    codes=_sds(rows + (packed_width(d_in, n_bits),),
+                               jnp.uint32),
+                    bitmap=_sds(rows + (packed_width(d_in, 1),), jnp.uint32),
+                    codebooks=_sds(rows + (2 << n_bits,), jnp.float32),
+                    n_bits=n_bits, d_out=d_out, d_in=d_in,
+                )
+            )
+            continue
+        out.append(
+            ICQPacked(
+                codes=_sds(rows + (packed_width(d_in, n_bits),), jnp.uint32),
+                symbols=_sds(rows + (s_max,), jnp.uint16),
+                counts=_sds(rows, jnp.int32),
+                codebooks=_sds(rows + (2, 1 << n_bits), jnp.float32),
+                n_bits=n_bits, b=b, gamma=gamma,
+                d_out=d_out, d_in=d_in, method="kmeans",
+            )
+        )
+    return jax.tree.unflatten(treedef, out)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for a (arch, shape) cell.
+
+    train/prefill: full-sequence inputs. decode: one new token per
+    sequence against a cache of size seq_len (built by cache_structs).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        Ts = cfg.max_source_len
+        batch = dict(
+            frames=_sds((B, Ts, cfg.d_model), jnp.dtype(cfg.param_dtype)),
+            frame_mask=_sds((B, Ts), jnp.bool_),
+        )
+        if shape.kind == "decode":
+            batch["tokens"] = _sds((B, 1), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        return batch
+
+    prefix = cfg.frontend_len if cfg.frontend != "none" else 0
+    if shape.kind == "decode":
+        return dict(tokens=_sds((B, 1), jnp.int32))
+    s_text = S - prefix
+    batch: Dict[str, Any] = dict(tokens=_sds((B, s_text), jnp.int32))
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, s_text), jnp.int32)
+    if prefix:
+        batch["prefix_embeds"] = _sds(
+            (B, prefix, cfg.d_model), jnp.dtype(cfg.param_dtype)
+        )
+    return batch

@@ -1,0 +1,163 @@
+"""Jit-able train / prefill / decode step functions for every family.
+
+These are the functions the dry-run lowers on the production mesh and the
+drivers (launch/train.py, launch/serve.py) run on real hardware. All of
+them are pure: (params, [opt_state | cache], batch) -> outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (
+    encdec_apply,
+    encdec_cache_init,
+    lm_apply,
+    lm_cache_init,
+    lm_hidden_and_logits,
+    mtp_logits,
+)
+from repro.optim import adamw_update
+from repro.optim.compression import error_feedback_update
+
+AUX_COEF = 0.01
+MTP_COEF = 0.3
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _ce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def loss_fn(params, cfg, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if cfg.is_encdec:
+        logits, _, _, aux = encdec_apply(
+            params, cfg, batch["frames"], batch["frame_mask"], batch["tokens"]
+        )
+        ce = _ce(logits[:, :-1], batch["tokens"][:, 1:])
+        loss = ce + AUX_COEF * aux
+        return loss, dict(loss=loss, ce=ce, aux=aux)
+
+    prefix = batch.get("prefix_embeds")
+    if cfg.mtp:
+        hidden, logits, aux = lm_hidden_and_logits(
+            params, cfg, batch["tokens"], prefix_embeds=prefix
+        )
+        P = 0 if prefix is None else prefix.shape[1]
+        text_logits = logits[:, P:]
+        ce = _ce(text_logits, batch["labels"])
+        mtp = mtp_logits(params, cfg, hidden[:, P:], batch["tokens"])
+        # mtp predicts token t+2 from hidden t  ->  labels shifted by one
+        ce_mtp = _ce(mtp[:, :-1], batch["labels"][:, 2:])
+        loss = ce + MTP_COEF * ce_mtp + AUX_COEF * aux
+        return loss, dict(loss=loss, ce=ce, ce_mtp=ce_mtp, aux=aux)
+
+    logits, _, aux = lm_apply(params, cfg, batch["tokens"], prefix_embeds=prefix)
+    P = 0 if prefix is None else prefix.shape[1]
+    ce = _ce(logits[:, P:], batch["labels"])
+    loss = ce + AUX_COEF * aux
+    return loss, dict(loss=loss, ce=ce, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg, compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). If compress_grads, opt_state carries 'residuals' and the
+    gradient passes through int8 + error feedback before the update
+    (modeling the cross-pod reduction; see optim.compression)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        if compress_grads:
+            grads, new_res = error_feedback_update(
+                grads, opt_state["residuals"]
+            )
+        new_params, new_adam = adamw_update(
+            params, grads, opt_state["adam"], opt_cfg
+        )
+        new_state = dict(adam=new_adam)
+        if compress_grads:
+            new_state["residuals"] = new_res
+        metrics = dict(metrics, grad_norm=_safe_norm(grads))
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def _safe_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def init_opt_state(params, opt_cfg, compress_grads: bool = False):
+    from repro.optim import adamw_init
+    from repro.optim.compression import init_residuals
+
+    st = dict(adam=adamw_init(params, opt_cfg))
+    if compress_grads:
+        st["residuals"] = init_residuals(params)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg):
+    def prefill_step(params, cache, batch):
+        if cfg.is_encdec:
+            logits, cache, enc_out, _ = encdec_apply(
+                params, cfg, batch["frames"], batch["frame_mask"],
+                batch["tokens"], cache=cache,
+                start_pos=jnp.zeros((), jnp.int32),
+            )
+            return logits[:, -1], cache, enc_out
+        logits, cache, _ = lm_apply(
+            params, cfg, batch["tokens"], cache=cache,
+            start_pos=jnp.zeros((), jnp.int32),
+            prefix_embeds=batch.get("prefix_embeds"),
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """One new token against an existing cache (the ``decode_*`` shapes)."""
+
+    def decode_step(params, cache, tokens, start_pos, enc_out=None,
+                    frame_mask=None):
+        if cfg.is_encdec:
+            logits, cache, _, _ = encdec_apply(
+                params, cfg, None, frame_mask, tokens, cache=cache,
+                enc_out=enc_out, start_pos=start_pos,
+            )
+            return logits[:, -1], cache
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, cache=cache, start_pos=start_pos
+        )
+        return logits[:, -1], cache
+
+    return decode_step
+
+
+def make_cache(params, cfg, batch: int, max_len: int):
+    if cfg.is_encdec:
+        return encdec_cache_init(params, cfg, batch, max_len)
+    return lm_cache_init(params, cfg, batch, max_len)

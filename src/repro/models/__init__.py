@@ -1,0 +1,26 @@
+"""Model zoo: 10 assigned architectures on a shared composable stack."""
+from repro.models.model import (
+    count_params,
+    encdec_apply,
+    encdec_cache_init,
+    encdec_init,
+    init_model,
+    lm_apply,
+    lm_cache_init,
+    lm_hidden_and_logits,
+    lm_init,
+    mtp_logits,
+)
+
+__all__ = [
+    "init_model",
+    "lm_init",
+    "lm_apply",
+    "lm_cache_init",
+    "lm_hidden_and_logits",
+    "mtp_logits",
+    "encdec_init",
+    "encdec_apply",
+    "encdec_cache_init",
+    "count_params",
+]

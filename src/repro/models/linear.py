@@ -1,0 +1,45 @@
+"""Linear application that dispatches on the weight representation.
+
+Model params hold either a dense (d_in, d_out) array or an ``ICQPacked``
+weight (the paper's codec; packed per *output channel*, i.e. over the
+transposed matrix). Every matmul in the model zoo routes through
+``linear`` so ICQuant is a first-class, drop-in weight format everywhere.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.icquant import (
+    ICQPacked,
+    ICQRuntime,
+    dequantize,
+    dequantize_runtime,
+)
+
+
+def linear(x: jnp.ndarray, w) -> jnp.ndarray:
+    """y = x @ w for dense w of shape (d_in, d_out), ICQPacked (storage
+    format: gap-stream decode in-graph) or ICQRuntime (serving format:
+    decode-free bitmap overlay) — both stored per output channel."""
+    if isinstance(w, ICQPacked):
+        w_hat = dequantize(w)            # (d_out, d_in)
+        return x @ w_hat.T.astype(x.dtype)
+    if isinstance(w, ICQRuntime):
+        w_hat = dequantize_runtime(w)
+        return x @ w_hat.T.astype(x.dtype)
+    return x @ w
+
+
+def as_dense(w, dtype=None) -> jnp.ndarray:
+    """Materialize a weight as a dense (d_in, d_out) array."""
+    if isinstance(w, (ICQPacked, ICQRuntime)):
+        w_hat = (dequantize(w) if isinstance(w, ICQPacked)
+                 else dequantize_runtime(w)).T
+        return w_hat.astype(dtype) if dtype is not None else w_hat
+    return w
+
+
+def weight_shape(w):
+    if isinstance(w, ICQPacked):
+        return (w.d_in, w.d_out)
+    return w.shape

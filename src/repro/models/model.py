@@ -1,0 +1,425 @@
+"""Model assembly: blocks, scanned layer stacks, decoder-only LM, enc-dec.
+
+Families (cfg.family):
+  dense   — GQA or MLA attention + SwiGLU MLP           (llama/phi/internlm/minicpm3)
+  moe     — attention + MoE FFN (optional leading dense layers, DeepSeek)
+  ssm     — Mamba2 SSD mixer + no separate FFN           (mamba2)
+  hybrid  — parallel GQA + Mamba2 heads, then MLP        (hymba)
+  vlm     — dense backbone + precomputed patch-embedding prefix (pixtral)
+  encdec  — bidirectional encoder + causal decoder w/ cross-attn (seamless)
+
+Layer stacks are scanned: per-stack params carry a leading layer axis, so
+HLO size is depth-independent. KV/SSM caches carry the same leading axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_init,
+    gqa_apply,
+    gqa_cache_init,
+    gqa_init,
+    mla_apply,
+    mla_cache_init,
+    mla_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.models.linear import linear
+from repro.models.moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _mixer_kind(cfg, use_cross: bool = False) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    return cfg.attn_type  # gqa | mla
+
+
+def block_init(key, cfg, ffn: str = "mlp", cross: bool = False) -> Params:
+    """ffn: 'mlp' | 'moe' | 'none'; cross adds cross-attention (decoder)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    kind = _mixer_kind(cfg)
+    p: Params = dict(ln1=rmsnorm_init(cfg.d_model, dt))
+    if kind == "gqa":
+        p["attn"] = gqa_init(ks[0], cfg)
+    elif kind == "mla":
+        p["attn"] = mla_init(ks[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.mamba2_init(ks[0], cfg)
+    elif kind == "hybrid":
+        p["attn"] = gqa_init(ks[0], cfg)
+        p["ssm"] = ssm_mod.mamba2_init(ks[1], cfg)
+    if cross:
+        p["cross"] = gqa_init(ks[2], cfg)
+        p["ln_cross"] = rmsnorm_init(cfg.d_model, dt)
+    if ffn != "none":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+        if ffn == "moe":
+            p["moe"] = moe_init(ks[3], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[3], cfg)
+    return p
+
+
+def block_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+    causal: bool = True,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    kind = _mixer_kind(cfg)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+
+    new_cache: Optional[Params] = None
+    if kind == "gqa":
+        out, new_cache = gqa_apply(
+            p["attn"], h, cfg, positions,
+            cache=None if cache is None else cache["attn"], causal=causal,
+        )
+        if cache is not None:
+            new_cache = dict(attn=new_cache)
+    elif kind == "mla":
+        out, mc = mla_apply(
+            p["attn"], h, cfg, positions,
+            cache=None if cache is None else cache["attn"],
+        )
+        if cache is not None:
+            new_cache = dict(attn=mc)
+    elif kind == "ssm":
+        out, sc = ssm_mod.mamba2_apply(
+            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"]
+        )
+        if cache is not None:
+            new_cache = dict(ssm=sc)
+    elif kind == "hybrid":
+        a_out, ac = gqa_apply(
+            p["attn"], h, cfg, positions,
+            cache=None if cache is None else cache["attn"], causal=causal,
+        )
+        s_out, sc = ssm_mod.mamba2_apply(
+            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"]
+        )
+        out = 0.5 * (a_out + s_out)
+        if cache is not None:
+            new_cache = dict(attn=ac, ssm=sc)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in p:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        out, _ = gqa_apply(
+            p["cross"], h, cfg, positions, cross_kv=(enc_out, enc_mask)
+        )
+        x = x + out
+
+    if "moe" in p:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        out, aux = moe_apply(p["moe"], h, cfg)
+        x = x + out
+    elif "mlp" in p:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h)
+    return x, new_cache, aux
+
+
+def block_cache_init(cfg, batch: int, max_len: int) -> Params:
+    kind = _mixer_kind(cfg)
+    c: Params = {}
+    if kind in ("gqa", "hybrid"):
+        c["attn"] = gqa_cache_init(cfg, batch, max_len)
+    if kind == "mla":
+        c["attn"] = mla_cache_init(cfg, batch, max_len)
+    if kind in ("ssm", "hybrid"):
+        c["ssm"] = ssm_mod.mamba2_cache_init(cfg, batch)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# stacked (scanned) layer groups
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg, n_layers: int, ffn: str, cross: bool = False) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, ffn=ffn, cross=cross))(keys)
+
+
+def stack_apply(
+    stack: Params,
+    x: jnp.ndarray,
+    cfg,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+    causal: bool = True,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_mask: Optional[jnp.ndarray] = None,
+):
+    """Scan over the leading layer axis of `stack` (and `cache`)."""
+
+    def body(carry, layer):
+        xx, aux_sum = carry
+        if cache is None:
+            pl, cl = layer, None
+        else:
+            pl, cl = layer
+        xo, co, aux = block_apply(
+            pl, xx, cfg, positions, cache=cl, causal=causal,
+            enc_out=enc_out, enc_mask=enc_mask,
+        )
+        return (xo, aux_sum + aux), co
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    xs = stack if cache is None else (stack, cache)
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), new_cache = jax.lax.scan(body, carry0, xs)
+    else:
+        # unrolled (dry-run mode): exact XLA cost analysis per layer
+        n_layers = jax.tree.leaves(stack)[0].shape[0]
+        carry = carry0
+        outs = []
+        for i in range(n_layers):
+            layer_i = jax.tree.map(lambda a: a[i], xs)
+            carry, co = body(carry, layer_i)
+            outs.append(co)
+        (x, aux) = carry
+        new_cache = (
+            None if cache is None
+            else jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+        )
+    return x, (None if cache is None else new_cache), aux
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p: Params = dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+               ).astype(dt),
+        final_norm=rmsnorm_init(cfg.d_model, dt),
+    )
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+
+    ffn = "moe" if cfg.family == "moe" else ("none" if cfg.family == "ssm" else "mlp")
+    n_dense = cfg.first_dense_layers if cfg.family == "moe" else 0
+    if n_dense:
+        p["dense_stack"] = stack_init(ks[2], cfg, n_dense, ffn="mlp")
+    p["stack"] = stack_init(ks[3], cfg, cfg.n_layers - n_dense, ffn=ffn)
+
+    if cfg.mtp:  # DeepSeek-V3 multi-token prediction, depth 1
+        p["mtp_proj"] = dense_init(ks[4], 2 * cfg.d_model, cfg.d_model, dt)
+        p["mtp_block"] = block_init(ks[5], cfg, ffn="mlp")
+        p["mtp_norm"] = rmsnorm_init(cfg.d_model, dt)
+    return p
+
+
+def _lm_head(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    h = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ p["embed"].T
+    return linear(h, p["lm_head"])
+
+
+def lm_apply(
+    p: Params,
+    cfg,
+    tokens: jnp.ndarray,                   # (B, S_text)
+    cache: Optional[Params] = None,
+    start_pos: Optional[jnp.ndarray] = None,
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) stub frontend
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Returns (logits (B, S, vocab), new_cache, aux_loss).
+
+    S = P + S_text when a frontend prefix is present (VLM/audio stubs).
+    """
+    x = p["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    base = (
+        jnp.zeros((B,), jnp.int32) if start_pos is None
+        else jnp.broadcast_to(start_pos, (B,))
+    )
+    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+    if "dense_stack" in p:
+        dc = None if cache is None else cache["dense_stack"]
+        x, c, aux = stack_apply(p["dense_stack"], x, cfg, positions, cache=dc)
+        aux_total += aux
+        if cache is not None:
+            new_cache["dense_stack"] = c
+    mc = None if cache is None else cache["stack"]
+    x, c, aux = stack_apply(p["stack"], x, cfg, positions, cache=mc)
+    aux_total += aux
+    if cache is not None:
+        new_cache["stack"] = c
+
+    logits = _lm_head(p, cfg, x)
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+def lm_hidden_and_logits(p, cfg, tokens, prefix_embeds=None):
+    """Like lm_apply (no cache) but also returns the final hidden states —
+    used by the MTP loss."""
+    x = p["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_stack" in p:
+        x, _, aux = stack_apply(p["dense_stack"], x, cfg, positions)
+        aux_total += aux
+    x, _, aux = stack_apply(p["stack"], x, cfg, positions)
+    aux_total += aux
+    return x, _lm_head(p, cfg, x), aux_total
+
+
+def mtp_logits(p: Params, cfg, hidden: jnp.ndarray, tokens: jnp.ndarray):
+    """DeepSeek-V3 MTP (depth 1): combine hidden[t] with embed(token[t+1])
+    and predict token[t+2] through one extra block."""
+    B, S, d = hidden.shape
+    nxt = p["embed"][tokens[:, 1:]]                       # (B, S-1, d)
+    h = jnp.concatenate([hidden[:, :-1], nxt], axis=-1)   # (B, S-1, 2d)
+    h = linear(h, p["mtp_proj"])
+    positions = jnp.broadcast_to(
+        jnp.arange(S - 1, dtype=jnp.int32)[None], (B, S - 1)
+    )
+    h, _, _ = block_apply(p["mtp_block"], h, cfg, positions)
+    h = rmsnorm(h, p["mtp_norm"], cfg.norm_eps)
+    return _lm_head(p, cfg, h)
+
+
+def lm_cache_init(p: Params, cfg, batch: int, max_len: int) -> Params:
+    n_dense = cfg.first_dense_layers if cfg.family == "moe" else 0
+    cache: Params = {}
+
+    def stacked(n):
+        layer = block_cache_init(cfg, batch, max_len)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+            if a.ndim else jnp.zeros((n,), a.dtype), layer
+        )
+
+    if n_dense:
+        cache["dense_stack"] = stacked(n_dense)
+    cache["stack"] = stacked(cfg.n_layers - n_dense)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (Seamless backbone: stub frame frontend)
+# ---------------------------------------------------------------------------
+
+def encdec_init(key, cfg) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+               ).astype(dt),
+        enc_stack=stack_init(ks[1], cfg, cfg.encoder_layers, ffn="mlp"),
+        enc_norm=rmsnorm_init(cfg.d_model, dt),
+        dec_stack=stack_init(ks[2], cfg, cfg.decoder_layers, ffn="mlp",
+                             cross=True),
+        final_norm=rmsnorm_init(cfg.d_model, dt),
+        lm_head=dense_init(ks[3], cfg.d_model, cfg.vocab_size, dt),
+    )
+
+
+def encode(p: Params, cfg, frames: jnp.ndarray, frame_mask: jnp.ndarray):
+    """frames: (B, Tsrc, d_model) precomputed stub embeddings."""
+    B, T, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, _, _ = stack_apply(
+        p["enc_stack"], frames, cfg, positions, causal=False
+    )
+    return rmsnorm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def encdec_apply(
+    p: Params,
+    cfg,
+    frames: jnp.ndarray,
+    frame_mask: jnp.ndarray,
+    tokens: jnp.ndarray,
+    cache: Optional[Params] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    start_pos: Optional[jnp.ndarray] = None,
+):
+    """Returns (logits, new_cache, enc_out, aux)."""
+    if enc_out is None:
+        enc_out = encode(p, cfg, frames, frame_mask)
+    x = p["embed"][tokens]
+    B, S, _ = x.shape
+    base = (
+        jnp.zeros((B,), jnp.int32) if start_pos is None
+        else jnp.broadcast_to(start_pos, (B,))
+    )
+    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    dc = None if cache is None else cache["dec_stack"]
+    x, c, aux = stack_apply(
+        p["dec_stack"], x, cfg, positions, cache=dc,
+        enc_out=enc_out, enc_mask=frame_mask,
+    )
+    h = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits = linear(h, p["lm_head"])
+    new_cache = None if cache is None else dict(dec_stack=c)
+    return logits, new_cache, enc_out, aux
+
+
+def encdec_cache_init(p: Params, cfg, batch: int, max_len: int) -> Params:
+    layer = block_cache_init(cfg, batch, max_len)
+    n = cfg.decoder_layers
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+        if a.ndim else jnp.zeros((n,), a.dtype), layer
+    )
+    return dict(dec_stack=stacked)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg) -> Params:
+    if cfg.is_encdec:
+        return encdec_init(key, cfg)
+    return lm_init(key, cfg)
+
+
+def count_params(params: Params) -> int:
+    return int(
+        sum(x.size for x in jax.tree.leaves(params) if hasattr(x, "size"))
+    )

@@ -1,0 +1,239 @@
+"""Mamba2 SSD (state-space duality) mixer, chunk-parallel in JAX.
+
+Follows the minimal SSD reference (Dao & Gu 2024): intra-chunk "attention"
+blocks (quadratic in the chunk) + an inter-chunk scan over compressed
+states (b, h, p, n). The chunk matmuls map onto the MXU; the only
+sequential dependency is the O(L/Q) inter-chunk scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.models.linear import linear
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+def _pin_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """Constrain a (B, S, h, ...) activation to batch x head sharding when
+    running under a (data, model) mesh; no-op otherwise."""
+    spec = [None] * x.ndim
+    spec[0] = "data"
+    spec[2] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec)
+        )
+    except Exception:   # no mesh in context (plain CPU tests)
+        return x
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} x[k] for
+    i >= j, -inf above the diagonal."""
+    q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (b, l, h, p)  — already dt-scaled NOT applied here
+    dt: jnp.ndarray,     # (b, l, h)     — positive (post-softplus)
+    A: jnp.ndarray,      # (h,)          — negative
+    B: jnp.ndarray,      # (b, l, h, n)
+    C: jnp.ndarray,      # (b, l, h, n)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (b, h, p, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (b, l, h, p), final_state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // q
+
+    xs = (x * dt[..., None]).reshape(b, nc, q, h, p).astype(jnp.float32)
+    Bs = B.reshape(b, nc, q, h, n).astype(jnp.float32)
+    Cs = C.reshape(b, nc, q, h, n).astype(jnp.float32)
+    da = (dt * A).reshape(b, nc, q, h).astype(jnp.float32)
+    da_cs = jnp.cumsum(da, axis=2)                         # (b,c,q,h)
+
+    # 1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(segsum(jnp.moveaxis(da, 2, 3)))         # (b,c,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cs, Bs)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * Lmat, xs)
+
+    # 2) per-chunk compressed states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)    # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bs, decay_states, xs)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])              # (b,c,h)
+    h0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev                                    # emit state *before* chunk
+
+    final, prevs = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prevs, 0, 1)                 # (b,c,h,p,n)
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(da_cs)                            # (b,c,q,h)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cs, prev_states, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, L, h, p)[:, :l]
+    return y, final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,      # (b, 1, h, p)
+    dt: jnp.ndarray,     # (b, 1, h)
+    A: jnp.ndarray,      # (h,)
+    B: jnp.ndarray,      # (b, 1, h, n)
+    C: jnp.ndarray,      # (b, 1, h, n)
+    state: jnp.ndarray,  # (b, h, p, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) single-token state update."""
+    dt_ = dt[:, 0].astype(jnp.float32)                      # (b,h)
+    decay = jnp.exp(dt_ * A)                                # (b,h)
+    xb = jnp.einsum(
+        "bhp,bhn->bhpn", (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+        B[:, 0].astype(jnp.float32),
+    )
+    new_state = state * decay[:, :, None, None] + xb
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C[:, 0].astype(jnp.float32))
+    return y[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg) -> Params:
+    dt_ = jnp.dtype(cfg.param_dtype)
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return dict(
+        in_proj=dense_init(ks[0], cfg.d_model, 2 * di + 2 * g * n + h, dt_),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) * 0.1).astype(dt_),
+        conv_b=jnp.zeros((conv_dim,), dt_),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        A_log=jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        D=jnp.ones((h,), jnp.float32),
+        norm=rmsnorm_init(di, dt_),
+        out_proj=dense_init(ks[3], di, cfg.d_model, dt_),
+    )
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width K. xBC: (B, L, C); history: (B, K-1, C)."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    xp = jnp.concatenate([history, xBC], axis=1)
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    new_history = xp[:, -(K - 1):] if K > 1 else history
+    return jax.nn.silu(out + b), new_history
+
+
+def mamba2_apply(
+    p: Params,
+    x: jnp.ndarray,                 # (B, S, d_model)
+    cfg,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B_, S, _ = x.shape
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = linear(x, p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,h)
+
+    conv_hist = cache["conv"] if cache is not None else None
+    xBC, new_hist = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_hist)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    xs = xs.reshape(B_, S, h, hp)
+    # broadcast groups over heads
+    Bm = jnp.repeat(Bm.reshape(B_, S, g, n), h // g, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B_, S, g, n), h // g, axis=2)
+    # pin head sharding through the SSD einsums: without this GSPMD tends
+    # to all-gather the (B,S,h,...) activations every layer (§Perf)
+    xs = _pin_heads(xs)
+    Bm = _pin_heads(Bm)
+    Cm = _pin_heads(Cm)
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssd_chunk)
+        new_cache = None
+    elif S == 1:
+        y, final_state = ssd_decode_step(xs, dt, A, Bm, Cm, cache["ssm"])
+        new_cache = dict(conv=new_hist, ssm=final_state,
+                         index=cache["index"] + S)
+    else:  # prefill into an existing state
+        y, final_state = ssd_chunked(
+            xs, dt, A, Bm, Cm, cfg.ssd_chunk, init_state=cache["ssm"]
+        )
+        new_cache = dict(conv=new_hist, ssm=final_state,
+                         index=cache["index"] + S)
+
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return linear(y, p["out_proj"]), new_cache
+
+
+def mamba2_cache_init(cfg, batch: int) -> Params:
+    dt_ = jnp.dtype(cfg.param_dtype)
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    return dict(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * g * n), dt_),
+        ssm=jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )

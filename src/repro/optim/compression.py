@@ -1,0 +1,60 @@
+"""Int8 gradient compression with error feedback.
+
+Used on the inter-pod all-reduce path (the thin DCN/ICI link in the
+multi-pod mesh): gradients are quantized to int8 with one f32 scale per
+block before the cross-pod reduction, and the quantization residual is
+carried to the next step (error feedback), which keeps SGD/Adam unbiased
+in the long run. This is the paper's own economics applied to training:
+a little side information (scales) makes aggressive quantization safe.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(
+    q: jnp.ndarray, scale: jnp.ndarray, shape, dtype=jnp.float32
+) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape).astype(dtype)
+
+
+def error_feedback_update(
+    grads: Any, residuals: Any
+) -> Tuple[Any, Any]:
+    """Quantize (grad + residual) per leaf; return (dequantized grads to
+    feed the reduction, new residuals)."""
+
+    def one(g, r):
+        gr = g.astype(jnp.float32) + r
+        q, s = compress_int8(gr)
+        deq = decompress_int8(q, s, g.shape)
+        return deq, gr - deq
+
+    out = jax.tree.map(one, grads, residuals)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, res
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,16 @@
+"""Baseline outlier-suppression techniques (paper Section 4.1)."""
+from repro.quant.baselines import (
+    SUPPRESSION_TECHNIQUES,
+    grouped_rtn,
+    incoherence_rtn,
+    mixed_precision_rtn,
+    vanilla_rtn,
+)
+
+__all__ = [
+    "SUPPRESSION_TECHNIQUES",
+    "vanilla_rtn",
+    "grouped_rtn",
+    "mixed_precision_rtn",
+    "incoherence_rtn",
+]

@@ -1,0 +1,8 @@
+from repro.runtime.sharding import (
+    batch_specs,
+    fit_spec,
+    param_specs,
+)
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["param_specs", "batch_specs", "fit_spec", "StragglerMonitor"]

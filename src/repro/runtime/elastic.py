@@ -1,0 +1,46 @@
+"""Elastic re-meshing: rebuild a production mesh after host loss.
+
+Recovery protocol (driver loop in ``launch/train.py``):
+  1. straggler/failure detected -> evict host(s);
+  2. ``shrink_mesh`` picks the largest (data' x model) grid that fits the
+     surviving device count, preferring to shrink the data axis (so TP
+     groups — which hold *shards of single tensors* — stay intact);
+  3. params/optimizer are restored from the latest checkpoint with the
+     new mesh's shardings (``CheckpointManager.restore(sharding_fn=...)``),
+  4. the data pipeline needs no state: batches are a pure function of
+     (seed, step, shard) and shard indices are re-assigned densely.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def shrink_mesh_shape(
+    n_devices: int, model_parallel: int
+) -> Tuple[int, int]:
+    """Largest (data, model) grid with the TP degree preserved."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot preserve TP={model_parallel} with {n_devices} devices"
+        )
+    return (n_devices // model_parallel, model_parallel)
+
+
+def rebuild_mesh(
+    devices: Sequence, model_parallel: int, axis_names=("data", "model")
+) -> Mesh:
+    data, model = shrink_mesh_shape(len(devices), model_parallel)
+    import numpy as np
+
+    grid = np.asarray(devices)[: data * model].reshape(data, model)
+    return Mesh(grid, axis_names)
+
+
+def reassign_shards(
+    old_shards: List[int], failed_hosts: List[int], n_hosts_new: int
+) -> List[int]:
+    """Dense re-assignment of data-pipeline shard ids after eviction."""
+    return list(range(n_hosts_new))

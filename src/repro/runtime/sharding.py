@@ -1,0 +1,182 @@
+"""Path-based sharding rules: param pytree -> PartitionSpec pytree.
+
+Megatron-style tensor parallelism on the ``model`` axis (column-parallel
+up-projections, row-parallel down-projections, head-sharded attention,
+expert-parallel MoE) plus optional FSDP ("zero-3") sharding of the
+leftover parameter dim over the ``data`` axis — required to fit the
+largest assigned architectures' optimizer state.
+
+Divisibility is enforced by ``fit_spec``: any rule whose dim is not
+divisible by its mesh-axis size degrades to replication on that dim (this
+absorbs odd vocab sizes like 73448 without special cases).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rule per leaf name: spec for the *last* ndim dims (left-padded with None)
+_RULES = {
+    # embeddings / heads
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    # attention
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    # MLA
+    "w_dq": (None, None),
+    "w_uq": ("data", "model"),
+    "w_dkv": (None, None),
+    "w_kr": (None, None),
+    "w_uk": ("data", "model"),
+    "w_uv": ("data", "model"),
+    # MLP
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # SSM
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    # MoE router / MTP
+    "router": (None, None),
+    "mtp_proj": ("data", "model"),
+}
+
+# inside a "moe" subtree, expert weights carry a leading E dim
+_MOE_RULES = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def fit_spec(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> P:
+    """Drop axis names whose size does not divide the dim (graceful
+    degradation to replication)."""
+    assert len(spec) == len(shape), (shape, spec)
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+        out.append(ax if dim % size == 0 and size > 1 else None)
+    return P(*out)
+
+
+def _spec_for(path, leaf, mesh: Mesh, fsdp: bool) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1] if names else ""
+    # ICQuant-packed leaves (codes/symbols/counts/codebooks/bitmap under
+    # the weight's name, or FlattenedIndexKey for legacy registration):
+    # all packed tensors are per-output-channel -> shard the d_out dim the
+    # way the dense rule sharded d_out
+    _packed_fields = {"codes": 2, "symbols": 2, "bitmap": 2,
+                      "counts": 1, "codebooks": 3}
+    if isinstance(name, int) or name in _packed_fields:
+        wname = next(
+            (n for n in reversed(names[:-1])
+             if isinstance(n, str) and n in _RULES), "")
+        base = _RULES.get(wname)
+        if base is None or leaf.ndim == 0:
+            return P()
+        out_ax = base[-1]                       # dense rule for d_out
+        if not fsdp and out_ax == "data":
+            out_ax = None
+        if isinstance(name, int):
+            trailing = {0: 2, 1: 2, 2: 1, 3: 3}[name]
+        else:
+            trailing = _packed_fields[name]
+        if leaf.ndim < trailing:
+            return P()
+        if trailing == 1:                       # counts (..., d_out)
+            rule = (None,) * (leaf.ndim - 1) + (out_ax,)
+        elif trailing == 3:                     # codebooks (..., d_out, 2, C)
+            rule = (None,) * (leaf.ndim - 3) + (out_ax, None, None)
+        else:                                   # codes/symbols/bitmap
+            rule = (None,) * (leaf.ndim - 2) + (out_ax, None)
+        return fit_spec(leaf.shape, rule, mesh)
+    in_moe = "moe" in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _RULES
+    rule = rules.get(name)
+    if rule is None or leaf.ndim == 0:
+        return P()
+    if leaf.ndim < len(rule):
+        rule = rule[-leaf.ndim:]
+    # left-pad for layer stacking
+    rule = (None,) * (leaf.ndim - len(rule)) + tuple(rule)
+    if not fsdp:  # strip the FSDP ("data") placements, keep TP only
+        rule = tuple(None if ax == "data" else ax for ax in rule)
+    return fit_spec(leaf.shape, rule, mesh)
+
+
+def param_specs(params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_spec_for(path, leaf, mesh, fsdp) for path, leaf in flat]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def param_shardings(params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, fsdp)
+    )
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard the batch dim over all data-like axes present in the mesh."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ax = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return P()
+        return fit_spec(leaf.shape, (ax,) + (None,) * (leaf.ndim - 1), mesh)
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV caches: batch over data axes, head/state dims over model where
+    divisible. Heuristic: dim 0 = batch (data), dim -2 = heads (model)
+    for 4D cache tensors; SSM states (b, h, p, n): h over model."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ax = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def one(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        # stacked leading layer axis present: treat dims shifted by 1
+        if name in ("k", "v"):           # (L, B, T, H, hd)
+            spec = (None, ax, None, "model", None)[-nd:]
+        elif name == "ssm":              # (L, B, h, p, n)
+            spec = (None, ax, "model", None, None)[-nd:]
+        elif name == "c_kv":             # (L, B, T, r)
+            spec = (None, ax, None, None)[-nd:]
+        elif name == "k_rope":
+            spec = (None, ax, None, None)[-nd:]
+        elif name == "conv":             # (L, B, K-1, convdim)
+            spec = (None, ax, None, "model")[-nd:]
+        elif name == "pos":
+            spec = (None,) * nd
+        else:                            # index counters etc.
+            spec = (None,) * nd
+        return fit_spec(leaf.shape, tuple(spec), mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree.unflatten(treedef, [one(p, l) for p, l in flat])

@@ -1,0 +1,49 @@
+"""Straggler detection for the training driver.
+
+Tracks per-host step times with an EWMA and flags hosts whose latency
+exceeds ``threshold x`` the fleet median. On a real cluster the flagged
+host set feeds the coordinator's eviction/re-mesh decision (see
+``runtime.elastic``); in single-process runs it is exercised by tests
+with synthetic timings.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, alpha: float = 0.2, threshold: float = 2.0,
+                 warmup: int = 3):
+        self.n_hosts = n_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self._ewma: Dict[int, float] = {}
+        self._counts: Dict[int, int] = {}
+
+    def record(self, host: int, step_time_s: float) -> None:
+        prev = self._ewma.get(host)
+        self._ewma[host] = (
+            step_time_s if prev is None
+            else self.alpha * step_time_s + (1 - self.alpha) * prev
+        )
+        self._counts[host] = self._counts.get(host, 0) + 1
+
+    def median(self) -> float:
+        vals = sorted(self._ewma.values())
+        if not vals:
+            return 0.0
+        mid = len(vals) // 2
+        return (
+            vals[mid] if len(vals) % 2
+            else 0.5 * (vals[mid - 1] + vals[mid])
+        )
+
+    def stragglers(self) -> List[int]:
+        med = self.median()
+        if med <= 0:
+            return []
+        return sorted(
+            h for h, t in self._ewma.items()
+            if self._counts.get(h, 0) >= self.warmup and t > self.threshold * med
+        )

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationEngine, Request
+
+__all__ = ["GenerationEngine", "Request"]

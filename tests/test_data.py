@@ -1,0 +1,61 @@
+"""Data pipeline: determinism, shard independence, label alignment."""
+import numpy as np
+
+from repro.data import CalibrationSet, SyntheticLM
+
+
+def test_batches_deterministic():
+    spec = SyntheticLM(vocab_size=512, seq_len=32, seed=7)
+    a = spec.batch(step=5, shard=0, batch_size=4)
+    b = spec.batch(step=5, shard=0, batch_size=4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_shards_differ():
+    spec = SyntheticLM(vocab_size=512, seq_len=32, seed=7)
+    a = spec.batch(step=5, shard=0, batch_size=4)
+    b = spec.batch(step=5, shard=1, batch_size=4)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_steps_differ():
+    spec = SyntheticLM(vocab_size=512, seq_len=32, seed=7)
+    a = spec.batch(step=5, shard=0, batch_size=4)
+    b = spec.batch(step=6, shard=0, batch_size=4)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    spec = SyntheticLM(vocab_size=512, seq_len=32, seed=7)
+    b = spec.batch(step=0, shard=0, batch_size=2)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_in_range():
+    spec = SyntheticLM(vocab_size=100, seq_len=64, seed=1)
+    b = spec.batch(step=0, shard=0, batch_size=8)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_calibration_set_fixed():
+    spec = SyntheticLM(vocab_size=128, seq_len=16, seed=2)
+    cal = CalibrationSet(spec, n_sequences=16, batch_size=4)
+    a = cal.batches()
+    b = cal.batches()
+    assert len(a) == 4
+    np.testing.assert_array_equal(
+        np.asarray(a[0]["tokens"]), np.asarray(b[0]["tokens"])
+    )
+
+
+def test_learnable_structure():
+    """The Markov shaping must lower conditional entropy vs iid zipf —
+    proxy: bigram repeat rate above iid baseline."""
+    spec = SyntheticLM(vocab_size=1024, seq_len=256, seed=3)
+    b = spec.batch(step=0, shard=0, batch_size=8)
+    toks = b["tokens"]
+    # unigram skew: top-10 tokens should cover a large mass (zipf)
+    vals, counts = np.unique(toks, return_counts=True)
+    top10 = np.sort(counts)[-10:].sum() / counts.sum()
+    assert top10 > 0.2

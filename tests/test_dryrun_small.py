@@ -1,0 +1,88 @@
+"""Dry-run machinery on a small placeholder mesh (subprocess: the device
+count must be forced before jax init, exactly like the real dry-run)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import ShapeConfig
+from repro.launch import specs as sp
+from repro.launch.dryrun import collective_bytes
+from repro.launch.steps import make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime.sharding import param_specs, batch_specs
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = dataclasses.replace(smoke_variant(get_config("internlm2-1.8b")),
+                          param_dtype="bfloat16", remat=True,
+                          d_model=128, d_ff=256, n_heads=8, n_kv_heads=4)
+opt_cfg = AdamWConfig(state_dtype="bfloat16")
+shape = ShapeConfig("t", 64, 8, "train")
+params = sp.param_structs(cfg)
+p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                    param_specs(params, mesh, fsdp=True))
+batch = sp.input_specs(cfg, shape)
+b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs(batch, mesh))
+opt = sp.opt_structs(cfg, opt_cfg)
+o_mu = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                    param_specs(opt["adam"]["mu"], mesh, fsdp=True))
+o_sh = dict(adam=dict(mu=o_mu, nu=o_mu, step=NamedSharding(mesh, P())))
+with mesh:
+    lowered = jax.jit(make_train_step(cfg, opt_cfg),
+                      in_shardings=(p_sh, o_sh, b_sh)).lower(params, opt, batch)
+    compiled = lowered.compile()
+cost = compiled.cost_analysis()
+coll = collective_bytes(compiled.as_text())
+print(json.dumps(dict(
+    n_devices=len(jax.devices()),
+    flops=float(cost.get("flops", -1)),
+    collective_total=coll.get("total", 0),
+    has_all_reduce=coll.get("all-reduce", 0) > 0 or coll.get("all-gather", 0) > 0,
+)))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lowering_on_8_device_mesh():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 8
+    assert res["flops"] > 0
+    # FSDP + TP sharding must produce collectives in the compiled module
+    assert res["collective_total"] > 0
+    assert res["has_all_reduce"]
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %x), replica_groups={}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs.1 = f32[32]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %w)
+  %not_a_collective = f32[999]{0} add(f32[999]{0} %a, f32[999]{0} %b)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 8 * 128 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["reduce-scatter"] == 32 * 4
+    assert got["collective-permute"] == 16 * 4
+    assert got["total"] == sum(
+        v for k, v in got.items() if k != "total"
+    )

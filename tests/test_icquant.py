@@ -1,0 +1,126 @@
+"""ICQuant codec: the paper's central claims as tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core.quantizers import (
+    assign_codes,
+    lookup,
+    rtn_inlier_codebook,
+    rtn_outlier_codebook,
+    weighted_kmeans_rows,
+)
+from repro.core.stats import heavy_tailed_weights
+
+
+def _vanilla_rtn_mse(W, n_bits):
+    Wj = jnp.asarray(W)
+    cb = rtn_inlier_codebook(Wj, jnp.ones_like(Wj, dtype=bool), n_bits)
+    return float(((Wj - lookup(assign_codes(Wj, cb), cb)) ** 2).mean())
+
+
+@pytest.mark.parametrize("n_bits", [2, 3])
+def test_icq_n_bits_beats_vanilla_n_plus_1(n_bits):
+    """Paper Fig 3/5: halving the range is worth ~one bit."""
+    W = heavy_tailed_weights(32, 2048, seed=0)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    mse_icq = float(((W - np.asarray(core.dequantize(pk))) ** 2).mean())
+    assert mse_icq < _vanilla_rtn_mse(W, n_bits) / 2.5   # >= ~4x claimed
+    assert mse_icq < _vanilla_rtn_mse(W, n_bits + 1) * 1.05
+
+
+def test_bits_accounting_matches_paper():
+    """gamma=5%, b=6 -> ~n + 0.31 + small codebook overhead."""
+    W = heavy_tailed_weights(64, 4096, seed=1)
+    pk = core.quantize(jnp.asarray(W), 2, gamma=0.05)
+    bits = pk.bits_per_weight()
+    assert pk.b == 6
+    assert 0.29 <= bits["index"] <= 0.33
+    assert bits["total"] < 2.4
+
+
+def test_outlier_partition_exact_count():
+    W = heavy_tailed_weights(16, 1000, seed=2)
+    mask = np.asarray(core.outlier_mask(jnp.asarray(W), 0.05))
+    assert (mask.sum(axis=1) == 50).all()
+    # outliers are the largest-|w| elements per row
+    for r in range(16):
+        thr = np.abs(W[r])[mask[r]].min()
+        assert (np.abs(W[r])[~mask[r]] <= thr + 1e-7).all()
+
+
+def test_exact_reconstruction_when_few_levels():
+    """A row with <= 2^n distinct inlier values and <= 2^n outlier values
+    must be reconstructed exactly (codebook can represent it)."""
+    rng = np.random.default_rng(3)
+    inl = rng.choice([-0.1, 0.0, 0.05, 0.1], size=(4, 100))
+    W = inl.copy()
+    W[:, :5] = rng.choice([1.0, -1.0, 2.0, -2.0], size=(4, 5))  # outliers
+    pk = core.quantize(jnp.asarray(W, dtype=jnp.float32), 2, gamma=0.05,
+                       method="kmeans", kmeans_iters=50)
+    W_hat = np.asarray(core.dequantize(pk))
+    np.testing.assert_allclose(W_hat, W, atol=5e-3)
+
+
+def test_kmeans_beats_rtn():
+    W = heavy_tailed_weights(8, 1024, seed=4)
+    mse = {}
+    for m in ("rtn", "kmeans"):
+        pk = core.quantize(jnp.asarray(W), 3, gamma=0.05, method=m)
+        mse[m] = float(((W - np.asarray(core.dequantize(pk))) ** 2).mean())
+    assert mse["kmeans"] <= mse["rtn"]
+
+
+def test_fisher_weighted_kmeans_prioritizes_sensitive_weights():
+    rng = np.random.default_rng(5)
+    W = rng.standard_normal((4, 512)).astype(np.float32)
+    fisher = np.ones_like(W)
+    fisher[:, :64] = 100.0                      # sensitive region
+    cb, codes = weighted_kmeans_rows(
+        jnp.asarray(W), jnp.asarray(fisher), 8, iters=30
+    )
+    W_hat = np.asarray(lookup(np.asarray(codes), cb))
+    err_sens = ((W - W_hat)[:, :64] ** 2).mean()
+    err_rest = ((W - W_hat)[:, 64:] ** 2).mean()
+    assert err_sens < err_rest
+
+
+def test_signed_tail_outlier_codebook():
+    W = jnp.asarray([[-5.0, -4.0, 0.1, -0.1, 4.0, 5.0, 0.0, 0.2]])
+    mask = jnp.asarray([[True, True, False, False, True, True, False, False]])
+    cb = rtn_outlier_codebook(W, mask, 2)       # 2 levels per tail
+    cb = np.asarray(cb)[0]
+    assert cb[0] == -5.0 and cb[1] == -4.0      # negative tail
+    assert cb[2] == 4.0 and cb[3] == 5.0        # positive tail
+
+
+def test_stacked_dequantize():
+    """Layer-stacked ICQPacked (leading axes) dequantizes per slice."""
+    from repro.launch.quantize import quantize_tree
+
+    rng = np.random.default_rng(6)
+    params = dict(w=jnp.asarray(rng.standard_normal((3, 64, 48)), jnp.float32))
+    qp, acct = quantize_tree(params, 4, gamma=0.05)
+    W_hat = core.dequantize(qp["w"])            # (3, 48, 64)
+    assert W_hat.shape == (3, 48, 64)
+    for i in range(3):
+        pk_i = core.quantize(params["w"][i].T, 4, gamma=0.05)
+        np.testing.assert_allclose(
+            np.asarray(W_hat[i]), np.asarray(core.dequantize(pk_i)), atol=1e-6
+        )
+
+
+def test_dequant_matmul_linear_dispatch():
+    from repro.models.linear import linear
+
+    rng = np.random.default_rng(7)
+    W = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)  # (d_in, d_out)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    pk = core.quantize(W.T, 8, gamma=0.05)      # near-lossless at 8 bits
+    y_q = linear(x, pk)
+    y = x @ W
+    # 8-bit RTN elementwise error ~ range/2^9 accumulates ~sqrt(d_in) in a
+    # matmul: tolerance scaled accordingly
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y), atol=0.35)

@@ -1,0 +1,141 @@
+"""Index-coding invariants: the heart of the paper (§3.2 + Lemma 1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    decode_stream,
+    decode_to_dense_mask,
+    encode_positions,
+    lemma1_bound,
+    mask_to_positions,
+    optimal_b,
+    tile_checkpoints,
+)
+from repro.core.index_coding import positions_to_mask
+
+
+def _decode_positions(stream):
+    pos, mask = decode_stream(stream)
+    return [np.asarray(p)[np.asarray(m)] for p, m in
+            zip(np.asarray(pos), np.asarray(mask))]
+
+
+# ---------------------------------------------------------------------------
+# property: decode(encode(x)) == x for ANY index set
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.data(),
+    st.integers(min_value=1, max_value=8),     # b
+    st.integers(min_value=8, max_value=4096),  # d_in
+)
+def test_roundtrip_property(data, b, d_in):
+    p = data.draw(st.integers(min_value=0, max_value=min(d_in, 64)))
+    positions = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=d_in - 1),
+            min_size=p, max_size=p, unique=True,
+        )
+    )
+    positions = np.sort(np.asarray(positions, dtype=np.int64))[None, :]
+    stream = encode_positions(positions, d_in, b)
+    decoded = _decode_positions(stream)
+    np.testing.assert_array_equal(decoded[0], positions[0])
+
+
+def test_roundtrip_multirow():
+    rng = np.random.default_rng(0)
+    rows, d_in, p, b = 32, 2048, 102, 6
+    positions = np.sort(
+        np.stack([rng.choice(d_in, p, replace=False) for _ in range(rows)]),
+        axis=-1,
+    )
+    stream = encode_positions(positions, d_in, b)
+    for i, dec in enumerate(_decode_positions(stream)):
+        np.testing.assert_array_equal(dec, positions[i])
+
+
+def test_adjacent_and_extreme_positions():
+    d_in, b = 128, 3
+    positions = np.array([[0, 1, 2, 3, 127]])
+    stream = encode_positions(positions, d_in, b)
+    np.testing.assert_array_equal(_decode_positions(stream)[0], positions[0])
+
+
+def test_gap_exactly_multiple_of_m():
+    # the paper's mod corner case: gap == k*(2^b - 1)
+    b = 3  # m = 7
+    d_in = 64
+    positions = np.array([[6, 13, 27]])  # gaps 7, 7, 14
+    stream = encode_positions(positions, d_in, b)
+    np.testing.assert_array_equal(_decode_positions(stream)[0], positions[0])
+
+
+def test_dense_mask_roundtrip():
+    rng = np.random.default_rng(1)
+    mask = np.zeros((4, 256), bool)
+    for r in range(4):
+        mask[r, rng.choice(256, 16, replace=False)] = True
+    positions = mask_to_positions(mask)
+    stream = encode_positions(positions, 256, 5)
+    out = np.asarray(decode_to_dense_mask(stream))
+    np.testing.assert_array_equal(out, mask)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1: measured overhead respects the bound (uniform positions)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gamma,b", [(0.05, 6), (0.05, 5), (0.0825, 5), (0.03, 6)])
+def test_lemma1_bound_holds(gamma, b):
+    rng = np.random.default_rng(2)
+    d_in, rows = 4096, 64
+    p = int(gamma * d_in)
+    positions = np.sort(
+        np.stack([rng.choice(d_in, p, replace=False) for _ in range(rows)]),
+        axis=-1,
+    )
+    stream = encode_positions(positions, d_in, b)
+    measured = stream.storage_bits_per_weight()
+    bound = lemma1_bound(gamma, b)
+    assert measured <= bound * 1.02, (measured, bound)   # 2% sampling slack
+    assert measured >= gamma * b * 0.9                   # sanity: not free
+
+
+def test_optimal_b_matches_paper():
+    # paper: gamma = 5% -> b = 6 minimizes B ~= 0.31 bits/weight
+    assert optimal_b(0.05) == 6
+    assert 0.30 <= lemma1_bound(0.05, 6) <= 0.32
+
+
+# ---------------------------------------------------------------------------
+# tile checkpoints (TPU adaptation): every tile independently decodable
+# ---------------------------------------------------------------------------
+
+def test_tile_checkpoints_cover_all_symbols():
+    rng = np.random.default_rng(3)
+    d_in, rows, p, b, tile = 1024, 8, 51, 6, 256
+    positions = np.sort(
+        np.stack([rng.choice(d_in, p, replace=False) for _ in range(rows)]),
+        axis=-1,
+    )
+    stream = encode_positions(positions, d_in, b)
+    offsets, counts = tile_checkpoints(stream, tile)
+    assert offsets.shape == (rows, d_in // tile)
+    # decoding each tile's symbol slice recovers exactly the positions in it
+    pos_all, mask_all = decode_stream(stream)
+    pos_all, mask_all = np.asarray(pos_all), np.asarray(mask_all)
+    for r in range(rows):
+        got = []
+        for t in range(d_in // tile):
+            o, c = offsets[r, t], counts[r, t]
+            sl = slice(o, o + c)
+            in_tile = mask_all[r, sl] & (pos_all[r, sl] >= t * tile) & (
+                pos_all[r, sl] < (t + 1) * tile
+            )
+            got.extend(pos_all[r, sl][in_tile].tolist())
+        np.testing.assert_array_equal(np.sort(got), positions[r])

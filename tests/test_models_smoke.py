@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU; output shapes + no NaNs; decode parity with full forward."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config, smoke_variant
+from repro.launch.steps import (
+    init_opt_state,
+    loss_fn,
+    make_cache,
+    make_decode_step,
+    make_train_step,
+)
+from repro.models import encdec_apply, init_model, lm_apply
+from repro.optim import AdamWConfig
+
+ARCH_IDS = sorted(ARCHITECTURES)
+
+
+def _smoke_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.is_encdec:
+        return dict(
+            frames=jnp.asarray(
+                rng.standard_normal((B, 8, cfg.d_model)), jnp.float32
+            ),
+            frame_mask=jnp.ones((B, 8), bool),
+            tokens=jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+            ),
+        )
+    batch = dict(
+        tokens=jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        labels=jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    )
+    if cfg.frontend != "none":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_len, cfg.d_model)),
+            jnp.float32,
+        )
+    return batch
+
+
+def _smoke_cfg(arch):
+    return smoke_variant(get_config(arch))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _smoke_cfg(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+    B, S = batch["tokens"].shape
+    if cfg.is_encdec:
+        logits, _, _, _ = encdec_apply(
+            params, cfg, batch["frames"], batch["frame_mask"], batch["tokens"]
+        )
+        assert logits.shape == (B, S, cfg.vocab_size)
+    else:
+        logits, _, _ = lm_apply(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+        )
+        prefix = cfg.frontend_len if cfg.frontend != "none" else 0
+        assert logits.shape == (B, S + prefix, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = _smoke_cfg(arch)
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt_state = init_opt_state(params, opt_cfg)
+    batch = _smoke_batch(cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    new_params, new_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: non-finite loss"
+    assert int(new_state["adam"]["step"]) == 1
+    # params actually changed
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params))
+    )
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x7b",
+                                  "mamba2-130m", "hymba-1.5b",
+                                  "minicpm3-4b"])
+def test_decode_matches_forward(arch):
+    """Step-by-step cached decode reproduces the full forward logits."""
+    cfg = _smoke_cfg(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 12)),
+        jnp.int32,
+    )
+    full, _, _ = lm_apply(params, cfg, toks)
+    cache = make_cache(params, cfg, 2, 16)
+    decode = make_decode_step(cfg)
+    outs = []
+    for t in range(12):
+        lg, cache = decode(params, cache, toks[:, t : t + 1],
+                           jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(full), rtol=3e-4, atol=3e-4
+    )
+
+
+def test_all_ten_architectures_registered():
+    assert len(ARCHITECTURES) == 10
+    expected = {
+        "minicpm3-4b", "internlm2-1.8b", "phi3-mini-3.8b", "llama3.2-1b",
+        "pixtral-12b", "mamba2-130m", "seamless-m4t-large-v2", "hymba-1.5b",
+        "deepseek-v3-671b", "mixtral-8x7b",
+    }
+    assert set(ARCHITECTURES) == expected
+
+
+def test_full_configs_match_assignment():
+    c = get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads) == (61, 7168, 128)
+    assert (c.n_experts, c.experts_per_token, c.moe_d_ff) == (256, 8, 2048)
+    c = get_config("mixtral-8x7b")
+    assert (c.n_experts, c.experts_per_token, c.d_ff) == (8, 2, 14336)
+    c = get_config("minicpm3-4b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (62, 2560, 73448)
+    c = get_config("mamba2-130m")
+    assert (c.ssm_state, c.attention_free) == (128, True)
+    c = get_config("hymba-1.5b")
+    assert (c.d_model, c.n_heads, c.n_kv_heads, c.ssm_state) == (1600, 25, 5, 16)

@@ -1,0 +1,42 @@
+"""Bit-packing round-trip properties."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (
+    codes_per_word,
+    pack_codes,
+    pack_codes_np,
+    packed_width,
+    unpack_codes,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=16),
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_pack_unpack_roundtrip(n_bits, length, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << n_bits, size=(3, length), dtype=np.uint32)
+    words = pack_codes(jnp.asarray(codes), n_bits)
+    assert words.shape == (3, packed_width(length, n_bits))
+    out = unpack_codes(words, n_bits, length)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_numpy_and_jax_packers_agree():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 4, 6, 8):
+        codes = rng.integers(0, 1 << n, size=(5, 97), dtype=np.uint32)
+        a = np.asarray(pack_codes(jnp.asarray(codes), n))
+        b = pack_codes_np(codes, n)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_codes_per_word():
+    assert codes_per_word(2) == 16
+    assert codes_per_word(3) == 10
+    assert codes_per_word(4) == 8

@@ -1,0 +1,63 @@
+"""Random-permutation folding (paper Appendix C.2): exact invariance."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.permute import (
+    fold_mlp_block,
+    invert,
+    make_permutation,
+    permute_in,
+    permute_out,
+)
+
+
+def test_permutation_inverse():
+    p = make_permutation(64, seed=0)
+    inv = invert(p)
+    np.testing.assert_array_equal(p[inv], np.arange(64))
+
+
+def test_single_layer_invariance():
+    rng = np.random.default_rng(1)
+    W = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    p = make_permutation(64, seed=2)
+    # W x == (W P)(P^T x):   (WP)[:, j] = W[:, p[j]],  (P^T x)[j] = x[p[j]]
+    y = W @ x
+    y2 = permute_in(W, p) @ x[p]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_mlp_block_invariance():
+    """SwiGLU block output unchanged after hidden-dim permutation."""
+    rng = np.random.default_rng(3)
+    d, f = 32, 96
+    w_up = jnp.asarray(rng.standard_normal((f, d)), jnp.float32)
+    w_gate = jnp.asarray(rng.standard_normal((f, d)), jnp.float32)
+    w_down = jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((5, d)), jnp.float32)
+
+    def mlp(up, gate, down):
+        h = jax.nn.silu(x @ gate.T) * (x @ up.T)
+        return h @ down.T
+
+    y0 = mlp(w_up, w_gate, w_down)
+    folded, _ = fold_mlp_block(w_up, w_gate, w_down, seed=4)
+    y1 = mlp(folded["w_up"], folded["w_gate"], folded["w_down"])
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_permutation_uniformizes_outliers():
+    """Clustered outliers become uniform after a random permutation."""
+    from repro.core.stats import chi_square_uniformity
+
+    rng = np.random.default_rng(5)
+    W = rng.standard_normal((64, 2048)).astype(np.float32) * 0.01
+    W[:, :256] *= 50.0
+    assert chi_square_uniformity(W, gamma=0.0625) > 0.9
+    p = make_permutation(2048, seed=6)
+    Wp = np.asarray(permute_in(jnp.asarray(W), p))
+    assert chi_square_uniformity(Wp, gamma=0.0625) < 0.12

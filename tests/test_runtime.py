@@ -1,0 +1,146 @@
+"""Runtime: sharding rules, straggler monitor, elastic re-mesh."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime import StragglerMonitor, fit_spec
+from repro.runtime.elastic import rebuild_mesh, shrink_mesh_shape
+from repro.runtime.sharding import batch_specs, param_specs
+
+
+def _mesh_1x1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class _FakeMesh:
+    """Shape-only stand-in so rules can be tested for a 16x16 grid
+    without 256 devices."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+def test_fit_spec_divisibility():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    # divisible -> kept
+    assert fit_spec((4096, 8192), ("data", "model"), mesh) == P("data", "model")
+    # odd vocab -> dropped on that dim only
+    assert fit_spec((73448, 512), ("model", None), mesh) == P(None, None)
+    # tuple axes
+    mesh3 = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    assert fit_spec((64, 10), (("pod", "data"), None), mesh3) == \
+        P(("pod", "data"), None)
+    assert fit_spec((33, 10), (("pod", "data"), None), mesh3) == P(None, None)
+
+
+def test_param_specs_tp_rules():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    sds = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    params = dict(
+        layers=dict(
+            attn=dict(wq=sds(4, 2048, 4096),           # layer-stacked
+                      wo=sds(4, 4096, 2048)),
+            mlp=dict(w_up=sds(4, 2048, 8192),
+                     w_down=sds(4, 8192, 2048)),
+            ln1=sds(4, 2048),
+        )
+    )
+    specs = param_specs(params, mesh, fsdp=False)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", None)
+    assert specs["layers"]["ln1"] == P()        # norms replicated
+    # FSDP adds the data axis on the other dim
+    specs_f = param_specs(params, mesh, fsdp=True)
+    assert specs_f["layers"]["attn"]["wq"] == P(None, "data", "model")
+
+
+def test_param_specs_moe_expert_parallel():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    # ShapeDtypeStructs: rule evaluation needs shapes only (a full-size
+    # deepseek expert stack would be 870 GB)
+    sds = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    params = dict(moe=dict(
+        w_gate=sds(58, 256, 7168, 2048),
+        w_down=sds(58, 256, 2048, 7168),
+        router=sds(7168, 256),
+    ))
+    specs = param_specs(params, mesh, fsdp=True)
+    assert specs["moe"]["w_gate"] == P(None, "model", "data", None)
+    assert specs["moe"]["w_down"] == P(None, "model", None, "data")
+    assert specs["moe"]["router"] == P(None, None)
+    # mixtral: 8 experts don't divide 16 -> EP dropped, TP on d_ff kept
+    params8 = dict(moe=dict(w_gate=sds(32, 8, 4096, 14336)))
+    specs8 = param_specs(params8, mesh, fsdp=False)
+    assert specs8["moe"]["w_gate"] == P(None, None, None, None)
+
+
+def test_batch_specs():
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    batch = dict(tokens=jnp.zeros((256, 4096), jnp.int32))
+    specs = batch_specs(batch, mesh)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    odd = dict(tokens=jnp.zeros((1, 64), jnp.int32))
+    assert batch_specs(odd, mesh)["tokens"] == P(None, None)
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(n_hosts=4, threshold=2.0, warmup=3)
+    for step in range(6):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 5.0)
+    assert mon.stragglers() == [2]
+
+
+def test_straggler_monitor_needs_warmup():
+    mon = StragglerMonitor(n_hosts=2, warmup=5)
+    mon.record(0, 1.0)
+    mon.record(1, 100.0)
+    assert mon.stragglers() == []
+
+
+def test_shrink_mesh_preserves_tp():
+    assert shrink_mesh_shape(240, 16) == (15, 16)
+    with pytest.raises(ValueError):
+        shrink_mesh_shape(8, 16)
+
+
+def test_rebuild_mesh_single_device():
+    mesh = rebuild_mesh(jax.devices(), model_parallel=1)
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_compressed_cross_pod_mean_subprocess():
+    """int8 cross-pod gradient reduction on a (2,2,2) pod mesh."""
+    import os
+    import subprocess
+    import sys
+
+    script = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.runtime.collectives import compressed_cross_pod_mean
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 32)), jnp.float32)
+tree = dict(g=x)
+with mesh:
+    out = jax.jit(lambda t: compressed_cross_pod_mean(t, mesh))(tree)
+# all pods hold the same tree -> mean == original, up to int8 error
+err = float(jnp.abs(out["g"] - x).max())
+scale = float(jnp.abs(x).max()) / 127
+assert err <= scale * 1.05, (err, scale)
+print("OK", err)
+'''
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)), timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.startswith("OK")

@@ -1,0 +1,56 @@
+"""Outlier statistics (paper §2): range fraction, uniformity, overhead."""
+import numpy as np
+import pytest
+
+from repro.core import lemma1_bound
+from repro.core.stats import (
+    chi_square_uniformity,
+    empirical_index_overhead,
+    heavy_tailed_weights,
+    range_taken_by_outliers,
+    synthetic_uniform_overhead,
+)
+
+
+def test_range_fraction_monotonic_and_substantial():
+    W = heavy_tailed_weights(128, 4096, seed=0)
+    fr = range_taken_by_outliers(W, [0.01, 0.05, 0.10])
+    assert fr[0.01] < fr[0.05] < fr[0.10]
+    # paper: ~50% of range taken by the top 5% (heavy-tailed weights)
+    assert 0.35 <= fr[0.05] <= 0.8
+
+
+def test_uniformity_iid_weights_low_rejection():
+    """iid weights => outlier positions uniform => rejection ~ alpha."""
+    W = heavy_tailed_weights(256, 2048, seed=1)
+    rej = chi_square_uniformity(W, gamma=0.0625, group=256)
+    assert rej < 0.12       # alpha = 0.05 + sampling noise
+
+
+def test_uniformity_detects_clustered_outliers():
+    """Concentrate large values in one block: must be rejected."""
+    rng = np.random.default_rng(2)
+    W = rng.standard_normal((64, 2048)).astype(np.float32) * 0.01
+    W[:, :256] *= 50.0      # outliers all in the first group
+    rej = chi_square_uniformity(W, gamma=0.0625, group=256)
+    assert rej > 0.9
+
+
+def test_empirical_overhead_matches_lemma_and_synthetic():
+    """Paper Fig 4: empirical ~= synthetic ~= bound at gamma=5%, b=6."""
+    W = heavy_tailed_weights(128, 4096, seed=3)
+    emp = empirical_index_overhead(W, 0.05, 6)
+    syn = synthetic_uniform_overhead(4096, 128, 0.05, 6, seed=4)
+    bound = lemma1_bound(0.05, 6)
+    assert abs(emp - syn) < 0.02
+    assert emp <= bound * 1.02
+    assert 0.29 <= emp <= 0.33
+
+
+def test_overhead_convex_in_b():
+    """Fig 4: B(b) is convex — too-small b pays escape flags, too-large
+    b pays base cost."""
+    vals = [lemma1_bound(0.05, b) for b in range(2, 11)]
+    bmin = int(np.argmin(vals))
+    assert 0 < bmin < len(vals) - 1
+    assert vals[0] > vals[bmin] and vals[-1] > vals[bmin]
