@@ -1,7 +1,16 @@
-"""Kernel-level benchmark: Pallas (interpret) vs pure-jnp oracle, plus the
-deployment-relevant derived quantity — HBM bytes per weight each format
-moves (the real TPU win; wall-times here are CPU-interpret and only
-meaningful relative to each other)."""
+"""Kernel execution-layer benchmark: reference vs kernel-backed dispatch.
+
+Reference = today's model path for storage-format weights: full in-graph
+``dequantize()`` (gap-stream decode + gather) then a dense matmul, every
+call. Fused = the kernels/backend.py dispatch layer over a prepared
+layout (decode/pad once at load): on TPU the fused Pallas kernel for
+decode and dequant-kernel+MXU-matmul for prefill, off-TPU the prepared
+pure-XLA arm (interpret-free — the Pallas interpreter never sits on the
+measured path).
+
+``benchmarks/run.py`` serializes the returned dict to BENCH_kernels.json
+so the tokens/s + bits/weight trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -11,38 +20,83 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro import core
 from repro.core.stats import heavy_tailed_weights
-from repro.kernels import ops, ref
+from repro.kernels import autotune, backend, ops, ref
+from repro.kernels.platform import default_backend, default_interpret, \
+    detected_platform
+from repro.models.linear import linear
+
+R, C = 512, 2048
+DECODE_M, PREFILL_M = 1, 256
+
+
+def _bench_linear(params_w, x) -> float:
+    f = jax.jit(lambda xx, w: linear(xx, w))
+    return timeit(f, x, params_w)
 
 
 def run() -> dict:
-    out = {}
-    R, C = 512, 2048
-    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, C)),
-                    jnp.float32)
-    dense_bytes = R * C * 2  # bf16 baseline
+    out = dict(
+        platform=detected_platform(),
+        dispatch_backend=default_backend(),
+        interpret_default=default_interpret(),
+        shape=[R, C],
+        by_bits={},
+    )
 
     for n_bits in (2, 3, 4):
         W = heavy_tailed_weights(R, C, seed=n_bits)
         pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
-        rt = ops.to_runtime(pk)
-
-        us_ref = timeit(
-            jax.jit(lambda c, b, k: ref.matmul_ref(x, c, b, k, n_bits, C)),
-            rt["codes"], rt["bitmap"], rt["codebooks"],
-        )
-        us_kern = timeit(
-            lambda: ops.matmul(x, rt, block_m=64, block_n=128, block_k=512),
-        )
-        rt_bits = ops.runtime_bits_per_weight(rt)
+        prep = backend.prepare(pk)
+        rt_bits = prep.bits_per_weight()
         st_bits = pk.bits_per_weight()["total"]
-        weight_bytes = rt_bits / 8 * R * C
-        out[n_bits] = dict(rt_bits=rt_bits, st_bits=st_bits)
-        emit(
-            f"kernels/icq_matmul_n{n_bits}", us_kern,
-            f"ref_us={us_ref:.0f};storage_bits={st_bits:.2f};"
-            f"runtime_bits={rt_bits:.2f};"
-            f"hbm_reduction_vs_bf16={dense_bytes / weight_bytes:.2f}x",
-        )
+
+        row = dict(storage_bits=round(st_bits, 3),
+                   runtime_bits=round(rt_bits, 3),
+                   hbm_reduction_vs_bf16=round(16.0 / rt_bits, 2))
+        for phase, M in (("decode", DECODE_M), ("prefill", PREFILL_M)):
+            x = jnp.asarray(
+                np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
+            us_ref = _bench_linear(pk, x)
+            us_fused = _bench_linear(prep, x)
+            row[phase] = dict(
+                ref_us=round(us_ref, 1),
+                fused_us=round(us_fused, 1),
+                ref_tok_s=round(M / us_ref * 1e6, 1),
+                fused_tok_s=round(M / us_fused * 1e6, 1),
+                speedup=round(us_ref / us_fused, 2),
+                path=backend.choose_path(M, prep),
+            )
+            emit(
+                f"kernels/dispatch_n{n_bits}_{phase}", us_fused,
+                f"ref_us={us_ref:.0f};speedup={us_ref / us_fused:.2f}x;"
+                f"runtime_bits={rt_bits:.2f};path={row[phase]['path']}",
+            )
+        out["by_bits"][n_bits] = row
+
+    # Pallas kernel micro (small shape: interpret mode off-TPU is slow) +
+    # autotuned blocks, recorded to the shared JSON cache for reuse.
+    r2, c2 = 64, 512
+    tuned = autotune.autotune_matmul(DECODE_M, r2, c2, 4, iters=1)
+    out["autotune"] = dict(
+        key=autotune.matmul_key(DECODE_M, r2, c2, 4, "pallas",
+                                default_interpret()),
+        blocks=list(tuned["blocks"]),
+        cached=tuned["cached"],
+        cache_file=autotune.cache_path(),
+    )
+    W2 = heavy_tailed_weights(r2, c2, seed=11)
+    pk2 = core.quantize(jnp.asarray(W2), 4, gamma=0.05)
+    prep2 = backend.prepare(pk2, backend="pallas",
+                            blocks=tuple(tuned["blocks"]))
+    x2 = jnp.asarray(
+        np.random.default_rng(5).standard_normal((DECODE_M, c2)), jnp.float32)
+    us_pallas = _bench_linear(prep2, x2)
+    out["pallas_micro"] = dict(
+        shape=[r2, c2], n_bits=4, M=DECODE_M, us=round(us_pallas, 1),
+        interpret=default_interpret(),
+    )
+    emit("kernels/pallas_fused_micro", us_pallas,
+         f"blocks={tuned['blocks']};interpret={default_interpret()}")
 
     # kmeans assignment (the ICQuant^SK calibration hot loop)
     w = jnp.asarray(heavy_tailed_weights(256, 4096, seed=9))
@@ -54,8 +108,12 @@ def run() -> dict:
     us_ref = timeit(jax.jit(ref.kmeans_assign_ref), w, wt, cnt)
     us_kern = timeit(lambda: ops.kmeans_assign(w, wt, cnt))
     emit("kernels/kmeans_assign", us_kern, f"ref_us={us_ref:.0f};C=16")
+    out["kmeans_assign"] = dict(ref_us=round(us_ref, 1),
+                                kernel_us=round(us_kern, 1))
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -2,13 +2,21 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 
-Output contract: ``name,us_per_call,derived`` CSV lines.
+Output contract: ``name,us_per_call,derived`` CSV lines. The kernels
+module additionally dumps its structured result to ``BENCH_kernels.json``
+(tokens/s + bits/weight, reference vs fused dispatch path) so the perf
+trajectory is tracked across PRs; block-autotuner winners land in the
+shared JSON cache (``ICQ_AUTOTUNE_CACHE``) and are reused on re-runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+# modules whose run() result is archived as BENCH_<name>.json
+JSON_MODULES = {"kernels"}
 
 MODULES = [
     ("outlier_range", "benchmarks.bench_outlier_range"),    # Fig 1/6
@@ -33,7 +41,12 @@ def main() -> None:
         print(f"# === {name} ({module}) ===", flush=True)
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run()
+            result = mod.run()
+            if name in JSON_MODULES and isinstance(result, dict):
+                path = f"BENCH_{name}.json"
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=1)
+                print(f"# wrote {path}", flush=True)
         except Exception:
             traceback.print_exc()
             failed.append(name)

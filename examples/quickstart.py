@@ -37,6 +37,15 @@ print(f"MSE ICQuant 2-bit:     {mse_icq:.3e}  <- ~RTN-3bit quality at ~2.4 bits"
 # 4. serve from the packed format through the fused Pallas kernel
 rt = ops.to_runtime(packed)
 x = jnp.asarray(np.random.default_rng(1).standard_normal((8, 4096)), jnp.float32)
-y = ops.matmul(x, rt)            # interpret-mode on CPU; TPU-native BlockSpecs
+y = ops.matmul(x, rt)            # interpret auto: compiled on TPU, else interp
 y_ref = x @ jnp.asarray(W_hat).T
 print(f"kernel vs reference max err: {float(abs(y - y_ref).max()):.2e}")
+
+# 5. ...or the way the serving engine does it: prepare once (pad/block at
+#    load time), then every model matmul dispatches per-call between the
+#    fused kernel, dequant+MXU matmul, and the pure-XLA arm.
+prep = ops.prepare(packed)
+y2 = ops.linear_apply(x, prep)
+print(f"dispatch [{prep.backend}] vs reference max err: "
+      f"{float(abs(y2 - y_ref).max()):.2e}; "
+      f"runtime HBM: {prep.bits_per_weight():.2f} bits/weight")

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + the kernel-backed execution layer.
+
+  icq_dequant.py  — tile dequantization (one-hot dot_general codebook
+                    lookup; `dequant_padded` hot-path core)
+  icq_matmul.py   — fused dequantize+matmul (`matmul_padded` core)
+  kmeans_assign.py— weighted-Lloyd accumulation (calibration hot loop)
+  ref.py          — pure-jnp oracles (ground truth in tests)
+  ops.py          — jit'd public wrappers + runtime-format conversion
+  backend.py      — prepared layouts + per-call dispatch (the path every
+                    model matmul takes for ICQ weights)
+  autotune.py     — block-size sweeps, JSON-cached winners
+  platform.py     — TPU/CPU detection, interpret/backend defaults
+"""

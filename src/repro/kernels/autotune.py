@@ -1,0 +1,217 @@
+"""Per-(shape, n_bits, backend) block-size autotuner for the ICQ kernels.
+
+The Pallas kernels take ``block_m/n/k`` tile sizes whose best values
+depend on matrix geometry, n_bits (packing granularity) and whether the
+kernel runs compiled on TPU or interpreted. ``autotune_matmul`` /
+``autotune_dequant`` sweep a small candidate list on synthetic runtime
+tensors of the right geometry, time each, and cache the winner:
+
+  * in-memory (process lifetime), and
+  * as JSON on disk (``ICQ_AUTOTUNE_CACHE``, default
+    ``~/.cache/icq_autotune.json``) so ``benchmarks/run.py`` and the
+    serving engine reuse winners across processes.
+
+``lookup(key)`` is cheap and is what ``backend.prepare`` consults; a
+miss falls back to the static defaults, so autotuning is always
+optional.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# winner blocks per key, e.g. {"matmul/m1_o4096_i4096_n2_xla": [8, 128, 512]}
+_MEM: Dict[str, List[int]] = {}
+_LOADED_FROM: Optional[str] = None  # cache file the in-memory view mirrors
+
+MATMUL_CANDIDATES: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 512),
+    (128, 256, 512),
+    (64, 128, 1024),
+    (8, 128, 512),
+)
+DEQUANT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (256, 512),
+    (128, 1024),
+    (512, 256),
+)
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "ICQ_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "icq_autotune.json"),
+    )
+
+
+def matmul_key(M: int, d_out: int, d_in: int, n_bits: int,
+               backend: str, interpret: bool) -> str:
+    mode = f"{backend}{'-int' if interpret else ''}"
+    return f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}"
+
+
+def dequant_key(d_out: int, d_in: int, n_bits: int,
+                backend: str, interpret: bool) -> str:
+    mode = f"{backend}{'-int' if interpret else ''}"
+    return f"dequant/o{d_out}_i{d_in}_n{n_bits}_{mode}"
+
+
+def _load_disk() -> None:
+    """Mirror the current cache file; reload if ICQ_AUTOTUNE_CACHE moved
+    (so entries tuned against an old path never leak into the new file)."""
+    global _LOADED_FROM
+    path = cache_path()
+    if _LOADED_FROM == path:
+        return
+    _MEM.clear()
+    _LOADED_FROM = path
+    try:
+        with open(path) as f:
+            _MEM.update(json.load(f))
+    except (OSError, ValueError):
+        pass
+
+
+def lookup(key: str) -> Optional[List[int]]:
+    _load_disk()
+    return _MEM.get(key)
+
+
+def record(key: str, blocks: Sequence[int]) -> None:
+    _load_disk()
+    _MEM[key] = list(blocks)
+    path = cache_path()
+    try:
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(_MEM, f, indent=1, sort_keys=True)
+    except OSError:
+        pass  # read-only filesystem: in-memory cache still works
+
+
+def reset(forget_disk: bool = True) -> None:
+    """Drop the in-memory cache (tests). forget_disk=False keeps the
+    view empty without re-reading the current file."""
+    global _LOADED_FROM
+    _MEM.clear()
+    _LOADED_FROM = None if forget_disk else cache_path()
+
+
+def _synthetic_runtime(d_out: int, d_in: int, n_bits: int, seed: int = 0):
+    """Random tensors with the exact runtime-format geometry (timing only)."""
+    import jax.numpy as jnp
+
+    from repro.core.packing import packed_width
+
+    rng = np.random.default_rng(seed)
+    wc, wb = packed_width(d_in, n_bits), packed_width(d_in, 1)
+    C = 2 << n_bits
+    codes = jnp.asarray(
+        rng.integers(0, 2**32, size=(d_out, wc), dtype=np.uint32))
+    bitmap = jnp.asarray(
+        rng.integers(0, 2**32, size=(d_out, wb), dtype=np.uint32))
+    codebooks = jnp.asarray(rng.standard_normal((d_out, C)), jnp.float32)
+    return codes, bitmap, codebooks
+
+
+def _time_once(fn, iters: int) -> float:
+    import time
+
+    fn().block_until_ready()                       # compile + warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def autotune_matmul(
+    M: int, d_out: int, d_in: int, n_bits: int,
+    *,
+    interpret: Optional[bool] = None,
+    candidates: Optional[Sequence[Tuple[int, int, int]]] = None,
+    iters: int = 3,
+) -> Dict[str, object]:
+    """Sweep fused-matmul blocks; cache and return the winner.
+
+    Returns {"blocks": (bm, bn, bk), "us": median_us, "cached": bool}.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.icq_matmul import icq_matmul, matmul_blocks
+    from repro.kernels.platform import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    key = matmul_key(M, d_out, d_in, n_bits, "pallas", interpret)
+    hit = lookup(key)
+    if hit is not None:
+        return dict(blocks=tuple(hit), us=None, cached=True)
+
+    codes, bitmap, codebooks = _synthetic_runtime(d_out, d_in, n_bits)
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((M, d_in)), jnp.float32)
+
+    best, best_us = None, float("inf")
+    seen = set()
+    for bm, bn, bk in (candidates or MATMUL_CANDIDATES):
+        resolved = matmul_blocks(M, d_out, d_in, n_bits, bm, bn, bk)
+        if resolved in seen:                        # clamping may collide
+            continue
+        seen.add(resolved)
+        us = _time_once(
+            lambda bm=bm, bn=bn, bk=bk: icq_matmul(
+                x, codes, bitmap, codebooks, n_bits=n_bits, d_in=d_in,
+                block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+            ),
+            iters,
+        )
+        if us < best_us:
+            best, best_us = (bm, bn, bk), us
+    record(key, best)
+    return dict(blocks=best, us=best_us, cached=False)
+
+
+def autotune_dequant(
+    d_out: int, d_in: int, n_bits: int,
+    *,
+    interpret: Optional[bool] = None,
+    candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    iters: int = 3,
+) -> Dict[str, object]:
+    """Sweep dequant blocks; cache and return the winner."""
+    from repro.kernels.icq_dequant import dequant_blocks, icq_dequant
+    from repro.kernels.platform import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    key = dequant_key(d_out, d_in, n_bits, "pallas", interpret)
+    hit = lookup(key)
+    if hit is not None:
+        return dict(blocks=tuple(hit), us=None, cached=True)
+
+    codes, bitmap, codebooks = _synthetic_runtime(d_out, d_in, n_bits)
+    best, best_us = None, float("inf")
+    seen = set()
+    for br, bc in (candidates or DEQUANT_CANDIDATES):
+        resolved = dequant_blocks(d_out, d_in, n_bits, br, bc)
+        if resolved in seen:
+            continue
+        seen.add(resolved)
+        us = _time_once(
+            lambda br=br, bc=bc: icq_dequant(
+                codes, bitmap, codebooks, n_bits=n_bits, d_in=d_in,
+                block_r=br, block_c=bc, interpret=interpret,
+            ),
+            iters,
+        )
+        if us < best_us:
+            best, best_us = (br, bc), us
+    record(key, best)
+    return dict(blocks=best, us=best_us, cached=False)

@@ -1,0 +1,278 @@
+"""Kernel-backed execution layer: dispatch + prepared weight layouts.
+
+This module makes the fused Pallas ICQ kernels the *default* compute
+path for every model matmul, instead of a standalone benchmark toy.
+``models/linear.py`` (and through it the whole model zoo and the
+serving engine) routes any ``ICQPrepared`` weight through
+``linear_apply`` below.
+
+Prepared layout
+---------------
+``prepare()`` converts a storage-format ``ICQPacked`` (or serving-format
+``ICQRuntime`` / runtime dict) into an ``ICQPrepared`` **once at model
+load time**. The layout is the kernel runtime format, pre-padded and
+pre-blocked so the per-call ``jnp.pad`` + reshape work in the kernel
+wrappers disappears from the hot path:
+
+  codes:     (*lead, pn, pk // k)  uint32 — k = 32 // n_bits packed
+             codes; rows padded d_out -> pn = round_up(d_out, block_n),
+             columns padded d_in -> pk = round_up(d_in, block_k) where
+             block_k is a multiple of lcm(k, 32) so code words and
+             bitmap words block on the same column tiles.
+  bitmap:    (*lead, pn, pk // 32) uint32 — 1-bit outlier selector.
+  codebooks: (*lead, pn, 2^(n+1))  f32    — [inlier ++ outlier] levels;
+             padded rows are zero so they contribute nothing.
+  static aux: n_bits, d_out, d_in (true shapes), block_m (cap for the M
+             tile), block_n, block_k (exact divisors of pn / pk),
+             backend ('pallas' | 'xla'), interpret (bool).
+
+Zero padding is safe end-to-end: padded K columns meet zero-padded
+activations in the matmul, padded N rows are sliced off the output, and
+the pure-XLA arm slices to (d_out, d_in) before the dense matmul.
+
+Leading axes (layer-scanned stacks, expert stacks) are kept on the array
+children, so ``ICQPrepared`` nodes slice transparently under
+``jax.lax.scan`` exactly like ``ICQPacked`` does.
+
+Dispatch
+--------
+``linear_apply(x, prep)`` picks per call, keyed on M (= batched tokens),
+shape, and platform (see kernels/platform.py):
+
+  * backend 'xla' (default off-TPU): prepared-layout XLA reconstruction
+    (unpack + take_along_axis; no gap-stream decode) then a dense
+    matmul — bitwise-identical results to the reference ``dequantize``
+    path, without its in-graph index-coding cumsum/scatter.
+  * backend 'pallas', M <= ICQ_DECODE_M (decode): the fused
+    ``icq_matmul`` kernel — packed weights go HBM->VMEM, dense bf16
+    weights never touch HBM.
+  * backend 'pallas', M > ICQ_DECODE_M (prefill): ``icq_dequant`` once,
+    then a dense MXU matmul in the padded space.
+
+Block sizes come from the autotune cache (kernels/autotune.py) when a
+winner for this (shape, n_bits, backend) exists, else static defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.icquant import ICQPacked, ICQRuntime, to_runtime_format
+from repro.kernels import autotune
+from repro.kernels.icq_dequant import _round_up, dequant_padded
+from repro.kernels.icq_matmul import matmul_blocks, matmul_padded
+from repro.kernels.platform import (
+    decode_m_threshold,
+    default_backend,
+    default_interpret,
+)
+
+DEFAULT_BLOCKS = (128, 128, 512)  # (block_m cap, block_n, block_k)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ICQPrepared:
+    """Pre-padded, pre-blocked kernel runtime weight (see module doc)."""
+
+    codes: jnp.ndarray        # (*lead, pn, pk // k) uint32
+    bitmap: jnp.ndarray       # (*lead, pn, pk // 32) uint32
+    codebooks: jnp.ndarray    # (*lead, pn, 2^(n+1)) f32
+    n_bits: int = dataclasses.field(metadata=dict(static=True))
+    d_out: int = dataclasses.field(metadata=dict(static=True))
+    d_in: int = dataclasses.field(metadata=dict(static=True))
+    block_m: int = dataclasses.field(metadata=dict(static=True))
+    block_n: int = dataclasses.field(metadata=dict(static=True))
+    block_k: int = dataclasses.field(metadata=dict(static=True))
+    backend: str = dataclasses.field(metadata=dict(static=True))
+    interpret: bool = dataclasses.field(metadata=dict(static=True))
+
+    def tree_flatten(self):
+        return ((self.codes, self.bitmap, self.codebooks),
+                (self.n_bits, self.d_out, self.d_in, self.block_m,
+                 self.block_n, self.block_k, self.backend, self.interpret))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def bits_per_weight(self) -> float:
+        """HBM bits per logical weight actually resident (padding included)."""
+        cb_bits = jnp.dtype(self.codebooks.dtype).itemsize * 8
+        lead = int(math.prod(self.codes.shape[:-2]))
+        total = (self.codes.size * 32 + self.bitmap.size * 32
+                 + self.codebooks.size * cb_bits)
+        return total / (lead * self.d_out * self.d_in)
+
+
+def _pad_last2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pad = [(0, 0)] * (x.ndim - 2)
+    pad += [(0, rows - x.shape[-2]), (0, cols - x.shape[-1])]
+    return jnp.pad(x, pad)
+
+
+def _as_runtime(w: Union[ICQPacked, ICQRuntime, Dict]) -> ICQRuntime:
+    if isinstance(w, ICQPacked):
+        return to_runtime_format(w)
+    if isinstance(w, dict):
+        return ICQRuntime(
+            codes=w["codes"], bitmap=w["bitmap"], codebooks=w["codebooks"],
+            n_bits=w["n_bits"], d_out=w["codes"].shape[-2], d_in=w["d_in"],
+        )
+    return w
+
+
+def prepare(
+    w: Union[ICQPacked, ICQRuntime, Dict],
+    *,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> ICQPrepared:
+    """Expand + pad + block a quantized weight for the execution layer.
+
+    ``blocks`` is (block_m_cap, block_n, block_k); when None the
+    autotune cache is consulted (decode-shape key, M=1) and static
+    defaults are used on a miss.
+    """
+    rt = _as_runtime(w)
+    backend = default_backend() if backend is None else backend
+    interpret = default_interpret() if interpret is None else interpret
+
+    if blocks is None:
+        hit = autotune.lookup(autotune.matmul_key(
+            1, rt.d_out, rt.d_in, rt.n_bits, "pallas", interpret))
+        blocks = tuple(hit) if hit is not None else DEFAULT_BLOCKS
+    bm_cap, bn, bk = blocks
+    # snap to hardware/packing granularity (M slot resolved per call)
+    _, bn, bk = matmul_blocks(8, rt.d_out, rt.d_in, rt.n_bits,
+                              bm_cap, bn, bk)
+
+    k = 32 // rt.n_bits
+    pn = _round_up(rt.d_out, bn)
+    pk = _round_up(rt.d_in, bk)
+    return ICQPrepared(
+        codes=_pad_last2(rt.codes, pn, pk // k),
+        bitmap=_pad_last2(rt.bitmap, pn, pk // 32),
+        codebooks=_pad_last2(
+            rt.codebooks.astype(jnp.float32), pn, rt.codebooks.shape[-1]),
+        n_bits=rt.n_bits,
+        d_out=rt.d_out,
+        d_in=rt.d_in,
+        block_m=bm_cap,
+        block_n=bn,
+        block_k=bk,
+        backend=backend,
+        interpret=interpret,
+    )
+
+
+def prepare_tree(params: Any, **kw) -> Any:
+    """Convert every ICQPacked/ICQRuntime leaf of a param tree (load time)."""
+    return jax.tree.map(
+        lambda w: prepare(w, **kw)
+        if isinstance(w, (ICQPacked, ICQRuntime)) else w,
+        params,
+        is_leaf=lambda w: isinstance(w, (ICQPacked, ICQRuntime)),
+    )
+
+
+def choose_path(M: int, prep: ICQPrepared) -> str:
+    """'fused' | 'dequant' | 'xla' for a call with M batched tokens."""
+    if prep.backend != "pallas" or prep.codes.ndim != 2:
+        return "xla"
+    return "fused" if M <= decode_m_threshold() else "dequant"
+
+
+def _xla_weight(prep: ICQPrepared) -> jnp.ndarray:
+    """Prepared tensors -> (*lead, d_out, d_in) f32, pure XLA (no kernels)."""
+    codes = packing.unpack_codes(
+        prep.codes[..., : prep.d_out, :], prep.n_bits, prep.d_in
+    ).astype(jnp.int32)
+    sel = packing.unpack_codes(
+        prep.bitmap[..., : prep.d_out, :], 1, prep.d_in
+    ).astype(jnp.int32)
+    idx = sel * (1 << prep.n_bits) + codes
+    return jnp.take_along_axis(
+        prep.codebooks[..., : prep.d_out, :], idx, axis=-1)
+
+
+def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
+    """Materialize (*lead, d_out, d_in) f32. Pallas backend runs the
+    dequant kernel (leading axes fold into grid rows — dequantization is
+    row-independent, so stacks need one kernel call, not a vmap)."""
+    if prep.backend != "pallas":
+        return _xla_weight(prep)
+    k = 32 // prep.n_bits
+    lead = prep.codes.shape[:-2]
+    pn = prep.codes.shape[-2]
+    pk = prep.codes.shape[-1] * k
+    rows = int(math.prod(lead)) * pn
+    out = dequant_padded(
+        prep.codes.reshape(rows, -1),
+        prep.bitmap.reshape(rows, -1),
+        prep.codebooks.reshape(rows, -1),
+        n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
+        interpret=prep.interpret,
+    )
+    out = out.reshape(*lead, pn, pk)
+    return out[..., : prep.d_out, : prep.d_in]
+
+
+def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
+    """y = x @ W_hat^T for x (..., d_in) -> (..., d_out), dispatching on M.
+
+    Output dtype follows x (matching models/linear.py's dense contract).
+    """
+    M = int(math.prod(x.shape[:-1]))
+    if M == 0:   # empty wave: keep the drop-in (0, d_out) contract
+        return jnp.zeros(x.shape[:-1] + (prep.d_out,), x.dtype)
+    path = choose_path(M, prep)
+
+    if path == "xla":
+        # exact-shape slice first: bitwise-identical to the reference
+        # dequantize()-then-matmul path (token-parity guarantee).
+        w = _xla_weight(prep)
+        return x @ jnp.swapaxes(w, -1, -2).astype(x.dtype)
+
+    pk = prep.codes.shape[-1] * (32 // prep.n_bits)
+    x2 = x.reshape(M, prep.d_in).astype(jnp.float32)
+
+    if path == "fused":
+        bm = min(prep.block_m, _round_up(M, 8))
+        pm = _round_up(M, bm)
+        x_p = jnp.pad(x2, ((0, pm - M), (0, pk - prep.d_in)))
+        y = matmul_padded(
+            x_p, prep.codes, prep.bitmap, prep.codebooks,
+            n_bits=prep.n_bits, block_m=bm, block_n=prep.block_n,
+            block_k=prep.block_k, interpret=prep.interpret,
+        )[:M, : prep.d_out]
+    else:  # 'dequant': reconstruct once, ride the dense MXU matmul
+        w = dequant_padded(
+            prep.codes, prep.bitmap, prep.codebooks,
+            n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
+            interpret=prep.interpret,
+        )                                            # (pn, pk)
+        x_p = jnp.pad(x2, ((0, 0), (0, pk - prep.d_in)))
+        y = jax.lax.dot_general(
+            x_p, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, : prep.d_out]
+
+    return y.reshape(*x.shape[:-1], prep.d_out).astype(x.dtype)
+
+
+__all__ = [
+    "ICQPrepared",
+    "prepare",
+    "prepare_tree",
+    "choose_path",
+    "dequantize_prepared",
+    "linear_apply",
+    "DEFAULT_BLOCKS",
+]

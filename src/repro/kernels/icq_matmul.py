@@ -8,10 +8,17 @@ memory roofline term for decode-bound serving drops by ~16/(n+1)x.
 Grid (M/BM, N/BN, K/BK), K innermost; f32 accumulator lives in a VMEM
 scratch buffer and is flushed to the output tile at the last K step
 (standard Pallas matmul schedule, MXU-aligned tiles).
+
+Two entry points, mirroring icq_dequant:
+  * ``matmul_padded`` — hot-path core over pre-blocked weights (see
+    kernels/backend.py ``prepare``); only the activation was padded by
+    the caller, the weight tensors carry no per-call reshape/pad work.
+  * ``icq_matmul``    — pad-on-the-fly wrapper (tests, benchmarks).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +31,9 @@ from repro.kernels.icq_dequant import (
     _pad2,
     _round_up,
     _unpack_block,
+    snap_block_k,
 )
+from repro.kernels.platform import default_interpret
 
 
 def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
@@ -50,9 +59,52 @@ def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "d_in", "block_m", "block_n", "block_k",
-                     "interpret"),
+    static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret"),
 )
+def matmul_padded(
+    x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == pk % block_k == 0
+    codes: jnp.ndarray,      # (pn, pk // k) uint32, pn % block_n == 0
+    bitmap: jnp.ndarray,     # (pn, pk // 32) uint32
+    codebooks: jnp.ndarray,  # (pn, C) f32
+    *,
+    n_bits: int,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Core fused kernel over pre-blocked inputs -> (pm, pn) f32 (padded)."""
+    k = 32 // n_bits
+    pm, pk = x.shape
+    pn = codes.shape[0]
+    C = codebooks.shape[1]
+    grid = (pm // block_m, pn // block_n, pk // block_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_bits=n_bits, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k // k), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // 32), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, C), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, bitmap, codebooks)
+
+
+def matmul_blocks(M: int, d_out: int, d_in: int, n_bits: int,
+                  block_m: int, block_n: int, block_k: int):
+    """Snap requested blocks to packing/tiling granularities -> (bm, bn, bk)."""
+    k = 32 // n_bits
+    lcm = (k * 32) // _gcd(k, 32)
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(d_out, 8))
+    return bm, bn, snap_block_k(d_in, lcm, block_k)
+
+
 def icq_matmul(
     x: jnp.ndarray,          # (M, d_in)
     codes: jnp.ndarray,      # (d_out, Wc) uint32
@@ -64,35 +116,24 @@ def icq_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    """Pad-on-the-fly wrapper -> (M, d_out) f32."""
+    if interpret is None:
+        interpret = default_interpret()
     M = x.shape[0]
     d_out = codes.shape[0]
     k = 32 // n_bits
-    lcm = (k * 32) // _gcd(k, 32)
-    bk = min(max(lcm, (block_k // lcm) * lcm), _round_up(d_in, lcm))
-    bm = min(block_m, _round_up(M, 8))
-    bn = min(block_n, _round_up(d_out, 8))
-
+    bm, bn, bk = matmul_blocks(M, d_out, d_in, n_bits,
+                               block_m, block_n, block_k)
     pm, pk_, pn = _round_up(M, bm), _round_up(d_in, bk), _round_up(d_out, bn)
     x_p = _pad2(x.astype(jnp.float32), pm, pk_)
     codes_p = _pad2(codes, pn, pk_ // k)
     bitmap_p = _pad2(bitmap, pn, pk_ // 32)
     cb_p = _pad2(codebooks, pn, codebooks.shape[1])
-
-    grid = (pm // bm, pn // bn, pk_ // bk)
-    out = pl.pallas_call(
-        functools.partial(_matmul_kernel, n_bits=n_bits, n_k=grid[2]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk // k), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn, bk // 32), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((bn, codebooks.shape[1]), lambda i, j, kk: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    out = matmul_padded(
+        x_p, codes_p, bitmap_p, cb_p,
+        n_bits=n_bits, block_m=bm, block_n=bn, block_k=bk,
         interpret=interpret,
-    )(x_p, codes_p, bitmap_p, cb_p)
+    )
     return out[:M, :d_out]

@@ -45,8 +45,12 @@ def kmeans_assign(
     *,
     block_r: int = 64,
     block_l: int = 1024,
-    interpret: bool = True,
+    interpret=None,          # None = platform default (compiled on TPU)
 ):
+    if interpret is None:
+        from repro.kernels.platform import default_interpret
+
+        interpret = default_interpret()
     R, L = w.shape
     C = centroids.shape[-1]
     br = min(block_r, R)

@@ -3,12 +3,16 @@
 ``to_runtime(packed)`` expands an ICQPacked (storage format: n-bit codes
 + ~0.31 b/w gap stream) into the kernel runtime format (codes + 1-bit
 selector bitmap + flattened dual codebook). The expansion happens once at
-model-load time; see EXPERIMENTS.md §Perf for the v2 checkpointed-stream
-format that shrinks the runtime overlay back toward the storage size.
+model-load time; see kernels/backend.py for the prepared (pre-padded,
+pre-blocked) layout the execution layer serves from.
+
+``interpret`` defaults to None everywhere = platform-autodetected
+(compiled on TPU, interpreter off-TPU; kernels/platform.py) — callers
+never pass it explicitly anymore.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +20,13 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core.icquant import ICQPacked
 from repro.core.index_coding import decode_to_dense_mask
+from repro.kernels.backend import (
+    ICQPrepared,
+    dequantize_prepared,
+    linear_apply,
+    prepare,
+    prepare_tree,
+)
 from repro.kernels.icq_dequant import icq_dequant
 from repro.kernels.icq_matmul import icq_matmul
 from repro.kernels.kmeans_assign import kmeans_assign
@@ -37,23 +48,29 @@ def to_runtime(packed: ICQPacked) -> Dict[str, jnp.ndarray]:
 
 
 def runtime_bits_per_weight(rt: Dict) -> float:
-    """HBM bits per logical weight of the runtime format."""
+    """HBM bits per logical weight of the runtime format.
+
+    Codebook entries are charged at their true stored width (``to_runtime``
+    casts codebooks to f32, i.e. 32 bits/entry — not the bf16 width of the
+    storage format).
+    """
     d_out = rt["codes"].shape[0]
+    cb_bits = jnp.dtype(rt["codebooks"].dtype).itemsize * 8
     total = (
         rt["codes"].size * 32 + rt["bitmap"].size * 32
-        + rt["codebooks"].size * 16
+        + rt["codebooks"].size * cb_bits
     )
     return total / (d_out * rt["d_in"])
 
 
-def dequant(rt: Dict, interpret: bool = True, **blocks) -> jnp.ndarray:
+def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
     return icq_dequant(
         rt["codes"], rt["bitmap"], rt["codebooks"],
         n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
     )
 
 
-def matmul(x, rt: Dict, interpret: bool = True, **blocks) -> jnp.ndarray:
+def matmul(x, rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
     return icq_matmul(
         x, rt["codes"], rt["bitmap"], rt["codebooks"],
         n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
@@ -61,4 +78,5 @@ def matmul(x, rt: Dict, interpret: bool = True, **blocks) -> jnp.ndarray:
 
 
 __all__ = ["to_runtime", "runtime_bits_per_weight", "dequant", "matmul",
-           "kmeans_assign"]
+           "kmeans_assign", "ICQPrepared", "prepare", "prepare_tree",
+           "dequantize_prepared", "linear_apply"]

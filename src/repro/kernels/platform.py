@@ -1,0 +1,72 @@
+"""Platform detection + execution-mode defaults for the ICQ kernel layer.
+
+Central policy knob for every Pallas entry point in this package:
+
+  * ``detected_platform()``  — jax default backend ('tpu' | 'cpu' | 'gpu'),
+    overridable with ``ICQ_PLATFORM`` (useful for forcing the TPU code
+    path through eval_shape-style lowering tests on CPU).
+  * ``default_interpret()``  — Pallas kernels compile natively on TPU and
+    fall back to ``interpret=True`` everywhere else. ``ICQ_INTERPRET=0/1``
+    forces either mode.
+  * ``default_backend()``    — which dispatch arm family the execution
+    layer prefers when the caller does not say: the Pallas kernels on
+    TPU, the pure-XLA prepared path elsewhere (interpret-mode Pallas is
+    a correctness tool, not a serving path). ``ICQ_BACKEND=pallas|xla``
+    overrides.
+  * ``decode_m_threshold()`` — largest M routed to the fused
+    dequant+matmul kernel; bigger batches dequantize once per call and
+    ride the dense MXU matmul. ``ICQ_DECODE_M`` overrides.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def detected_platform() -> str:
+    override = os.environ.get("ICQ_PLATFORM")
+    if override:
+        return override.lower()
+    try:
+        return jax.default_backend()
+    except Exception:  # backend init failure: assume portable host
+        return "cpu"
+
+
+def default_interpret() -> bool:
+    """Interpret only off-TPU (satellite: no caller passes this anymore)."""
+    env = os.environ.get("ICQ_INTERPRET")
+    if env:  # set-but-empty means unset (CI YAML / shell expansion)
+        if env.lower() in _TRUTHY:
+            return True
+        if env.lower() in _FALSY:
+            return False
+        raise ValueError(
+            f"ICQ_INTERPRET must be one of {_TRUTHY + _FALSY}, got {env!r}")
+    return detected_platform() != "tpu"
+
+
+def default_backend() -> str:
+    """'pallas' on TPU, 'xla' elsewhere; ICQ_BACKEND overrides."""
+    env = os.environ.get("ICQ_BACKEND")
+    if env:
+        env = env.lower()
+        if env not in ("pallas", "xla"):
+            raise ValueError(f"ICQ_BACKEND must be 'pallas' or 'xla', got {env!r}")
+        return env
+    return "pallas" if detected_platform() == "tpu" else "xla"
+
+
+def decode_m_threshold() -> int:
+    """M at or below this routes to the fused icq_matmul kernel."""
+    env = os.environ.get("ICQ_DECODE_M")
+    if not env:  # unset or set-but-empty
+        return 32
+    try:
+        return int(env)
+    except ValueError:
+        raise ValueError(f"ICQ_DECODE_M must be an integer, got {env!r}")

@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--train-steps", type=int, default=10)
+    ap.add_argument("--weight-cache", default="prepared",
+                    choices=["prepared", "dense", "none"],
+                    help="load-time ICQ weight conversion: 'prepared' = "
+                         "kernel dispatch layout, 'dense' = dequant-once "
+                         "cache, 'none' = reference in-graph decode")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -39,7 +44,8 @@ def main():
         params, acct = quantize_tree(params, args.bits, gamma=args.gamma)
         print(f"[serve] quantized to {acct['mean_bits']:.2f} bits/weight")
 
-    engine = GenerationEngine(params, cfg, batch_size=args.batch, max_len=64)
+    engine = GenerationEngine(params, cfg, batch_size=args.batch, max_len=64,
+                              weight_cache=args.weight_cache)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))

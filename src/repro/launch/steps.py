@@ -161,3 +161,37 @@ def make_cache(params, cfg, batch: int, max_len: int):
     if cfg.is_encdec:
         return encdec_cache_init(params, cfg, batch, max_len)
     return lm_cache_init(params, cfg, batch, max_len)
+
+
+def prepare_serving_params(params, mode: str = "prepared", **prepare_kw):
+    """One-time load-step weight conversion for the serving hot path.
+
+    mode:
+      'prepared' — ICQPacked/ICQRuntime leaves -> ICQPrepared (kernel
+                   execution layer; gap-stream decode + padding happen
+                   exactly once, never inside the jitted step).
+      'dense'    — dequantize-once weight cache: leaves materialize to
+                   dense (d_in, d_out) arrays at load time, so
+                   prefill-heavy waves never redecode per step (costs
+                   full bf16 HBM; right call only when HBM is plentiful).
+      'none'     — leave params untouched (reference path).
+    """
+    from repro.core.icquant import ICQPacked, ICQRuntime
+    from repro.kernels import backend as _backend
+
+    if mode in (None, "none"):
+        return params
+    if mode == "prepared":
+        return _backend.prepare_tree(params, **prepare_kw)
+    if mode == "dense":
+        from repro.models.linear import as_dense
+
+        return jax.tree.map(
+            lambda w: as_dense(w)
+            if isinstance(w, (ICQPacked, ICQRuntime, _backend.ICQPrepared))
+            else w,
+            params,
+            is_leaf=lambda w: isinstance(
+                w, (ICQPacked, ICQRuntime, _backend.ICQPrepared)),
+        )
+    raise ValueError(f"unknown serving weight mode {mode!r}")

@@ -19,6 +19,7 @@ from repro.core.icquant import (
     dequantize as _icq_dequantize,
     dequantize_runtime as _icq_dequantize_rt,
 )
+from repro.kernels.backend import ICQPrepared, dequantize_prepared
 from repro.models.layers import dense_init, mlp_apply, mlp_init
 
 Params = Dict[str, jnp.ndarray]
@@ -26,7 +27,11 @@ Params = Dict[str, jnp.ndarray]
 
 def _expert_weight(w, dtype):
     """Materialize stacked expert weights (E, d_in, d_out) from dense or
-    ICQuant-packed storage (packed per output channel, transposed)."""
+    ICQuant-packed storage (packed per output channel, transposed).
+    Prepared weights go through the kernel execution layer (one dequant
+    kernel call over the whole expert stack — rows are independent)."""
+    if isinstance(w, ICQPrepared):
+        return jnp.swapaxes(dequantize_prepared(w), -1, -2).astype(dtype)
     if isinstance(w, ICQPacked):
         return jnp.swapaxes(_icq_dequantize(w), -1, -2).astype(dtype)
     if isinstance(w, ICQRuntime):

@@ -16,6 +16,15 @@ per step. The engine therefore runs *wave-synchronous static batching*:
 Works with dense bf16 weights or ICQuant-packed weights (the `linear`
 dispatch inside the model handles both) — the quantized-serving example
 and benchmarks drive this engine.
+
+Quantized weights are converted ONCE at engine construction
+(``weight_cache='prepared'``, the default): ICQPacked storage weights
+become pre-padded ICQPrepared layouts, so the per-step jitted program
+routes every matmul through the kernel-backed dispatch layer
+(kernels/backend.py) with no gap-stream decode or full ``dequantize()``
+in the hot path. ``weight_cache='dense'`` instead materializes dense
+weights once (dequant-once cache for prefill-heavy waves on HBM-rich
+hosts); ``weight_cache='none'`` keeps the reference in-graph decode.
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_cache, make_decode_step
+from repro.launch.steps import make_cache, make_decode_step, \
+    prepare_serving_params
 
 
 @dataclasses.dataclass
@@ -40,8 +50,9 @@ class Request:
 
 
 class GenerationEngine:
-    def __init__(self, params, cfg, batch_size: int, max_len: int):
-        self.params = params
+    def __init__(self, params, cfg, batch_size: int, max_len: int,
+                 weight_cache: str = "prepared"):
+        self.params = prepare_serving_params(params, mode=weight_cache)
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len

@@ -1,0 +1,235 @@
+"""Kernel-backed execution layer: prepare, dispatch, autotune, serving.
+
+(Names mention "kernel" so ``pytest -k kernel`` smoke-sweeps this file
+together with tests/test_kernels.py.)
+"""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core.icquant import to_runtime_format
+from repro.core.stats import heavy_tailed_weights
+from repro.kernels import autotune, backend, ops
+from repro.kernels.platform import (
+    decode_m_threshold,
+    default_backend,
+    default_interpret,
+)
+from repro.launch.quantize import quantize_tree
+from repro.launch.steps import prepare_serving_params
+from repro.models.linear import as_dense, linear, weight_shape
+
+
+def _pack(R=48, C=330, n_bits=3, seed=1):
+    W = heavy_tailed_weights(R, C, seed=seed)
+    return core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_kernel_weight_shape_all_representations():
+    """Regression: weight_shape(ICQRuntime) used to fall through to
+    w.shape and raise AttributeError."""
+    pk = _pack()
+    rt = to_runtime_format(pk)
+    prep = backend.prepare(pk)
+    assert weight_shape(pk) == (330, 48)
+    assert weight_shape(rt) == (330, 48)          # <- the old crash
+    assert weight_shape(prep) == (330, 48)
+    assert weight_shape(jnp.zeros((7, 9))) == (7, 9)
+
+
+def test_kernel_runtime_bits_counts_f32_codebooks():
+    """runtime_bits_per_weight must charge codebooks at their stored f32
+    width: total ≈ n (codes) + 1 (bitmap) + 32·2^(n+1)/d_in (codebooks),
+    exactly when d_in divides the packing words."""
+    d_out, d_in = 64, 4096
+    for n_bits in (2, 4):
+        pk = _pack(d_out, d_in, n_bits, seed=n_bits)
+        rt = ops.to_runtime(pk)
+        assert rt["codebooks"].dtype == jnp.float32
+        got = ops.runtime_bits_per_weight(rt)
+        want = n_bits + 1 + 32 * (2 << n_bits) / d_in
+        assert got == pytest.approx(want, rel=1e-6), (n_bits, got, want)
+
+
+def test_kernel_interpret_default_platform_and_env(monkeypatch):
+    monkeypatch.delenv("ICQ_INTERPRET", raising=False)
+    monkeypatch.delenv("ICQ_BACKEND", raising=False)
+    monkeypatch.setenv("ICQ_PLATFORM", "tpu")
+    assert default_interpret() is False
+    assert default_backend() == "pallas"
+    monkeypatch.setenv("ICQ_PLATFORM", "cpu")
+    assert default_interpret() is True
+    assert default_backend() == "xla"
+    monkeypatch.setenv("ICQ_INTERPRET", "0")
+    assert default_interpret() is False
+    monkeypatch.setenv("ICQ_BACKEND", "pallas")
+    assert default_backend() == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# prepared layout
+# ---------------------------------------------------------------------------
+
+def test_kernel_prepared_layout_blocked_and_padded():
+    pk = _pack(48, 330, 3)
+    prep = backend.prepare(pk, backend="pallas")
+    k = 32 // 3
+    assert prep.codes.shape[-2] % prep.block_n == 0
+    assert prep.codes.shape[-1] * k % prep.block_k == 0
+    assert prep.bitmap.shape[-1] * 32 == prep.codes.shape[-1] * k
+    assert prep.codes.shape[-2] >= prep.d_out
+    # padding accounted in the HBM bits (and still far under bf16)
+    assert prep.bits_per_weight() < 16
+
+
+def test_kernel_prepare_accepts_runtime_and_dict():
+    pk = _pack()
+    w_ref = np.asarray(core.dequantize(pk))
+    for src in (to_runtime_format(pk), ops.to_runtime(pk)):
+        prep = backend.prepare(src)
+        np.testing.assert_array_equal(
+            np.asarray(backend.dequantize_prepared(prep)), w_ref)
+
+
+def test_kernel_prepare_tree_and_dense_cache_modes():
+    leaf = jnp.asarray(heavy_tailed_weights(96, 64, seed=5)).T  # (64, 96)
+    params = dict(a=dict(w=leaf), ln=jnp.ones((4,)))
+    qparams, _ = quantize_tree(params, 4)
+    prepped = prepare_serving_params(qparams, mode="prepared")
+    assert isinstance(prepped["a"]["w"], backend.ICQPrepared)
+    assert prepped["ln"] is qparams["ln"]
+    dense = prepare_serving_params(qparams, mode="dense")
+    assert dense["a"]["w"].shape == leaf.shape      # (d_in, d_out) restored
+    np.testing.assert_array_equal(
+        np.asarray(dense["a"]["w"]),
+        np.asarray(as_dense(qparams["a"]["w"])))
+    assert prepare_serving_params(qparams, mode="none") is qparams
+    with pytest.raises(ValueError):
+        prepare_serving_params(qparams, mode="bogus")
+
+
+def test_kernel_prepared_slices_under_scan_like_indexing():
+    """Layer-stacked prepared weights must survive the scan leaf slicing
+    stack_apply performs (children lose the lead axis, statics persist)."""
+    stacked = jnp.stack([
+        jnp.asarray(heavy_tailed_weights(40, 64, seed=s)).T for s in (1, 2)
+    ])                                               # (2, 64, 40) leaf
+    qp, _ = quantize_tree(dict(w=stacked), 4)
+    prep = backend.prepare_tree(qp)["w"]
+    assert prep.codes.ndim == 3
+    layer0 = jax.tree.map(lambda a: a[0], prep)
+    assert isinstance(layer0, backend.ICQPrepared)
+    assert layer0.codes.ndim == 2
+    w0 = np.asarray(backend.dequantize_prepared(layer0))
+    w_ref = np.asarray(core.dequantize(qp["w"]))[0]
+    np.testing.assert_array_equal(w0, w_ref)
+
+
+def test_kernel_moe_stacked_prepared_dequant_matches_reference():
+    stacked = jnp.stack([
+        jnp.asarray(heavy_tailed_weights(48, 96, seed=s)).T for s in range(3)
+    ])                                               # (3, 96, 48)
+    qp, _ = quantize_tree(dict(w=stacked), 3)
+    w_ref = np.asarray(core.dequantize(qp["w"]))     # (3, 48, 96)
+    for be in ("xla", "pallas"):
+        prep = backend.prepare(qp["w"], backend=be)
+        got = np.asarray(backend.dequantize_prepared(prep))
+        np.testing.assert_allclose(got, w_ref, rtol=1e-6)
+
+    from repro.models.moe import _expert_weight
+    ew = _expert_weight(backend.prepare(qp["w"]), jnp.float32)
+    assert ew.shape == (3, 96, 48)
+    np.testing.assert_allclose(
+        np.asarray(ew), np.swapaxes(w_ref, -1, -2), rtol=1e-6)
+
+
+def test_kernel_dispatch_threshold_env(monkeypatch):
+    pk = _pack()
+    prep = backend.prepare(pk, backend="pallas")
+    assert backend.choose_path(decode_m_threshold(), prep) == "fused"
+    assert backend.choose_path(decode_m_threshold() + 1, prep) == "dequant"
+    monkeypatch.setenv("ICQ_DECODE_M", "4")
+    assert backend.choose_path(8, prep) == "dequant"
+    # xla backend always takes the xla arm
+    assert backend.choose_path(1, backend.prepare(pk, backend="xla")) == "xla"
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+def test_kernel_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    cache = tmp_path / "tune.json"
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(cache))
+    autotune.reset()
+    got = autotune.autotune_matmul(
+        1, 16, 96, 4, interpret=True,
+        candidates=[(8, 16, 96), (8, 8, 96)], iters=1)
+    assert not got["cached"] and got["blocks"] in ((8, 16, 96), (8, 8, 96))
+    assert cache.exists()
+    key = autotune.matmul_key(1, 16, 96, 4, "pallas", True)
+    assert json.loads(cache.read_text())[key] == list(got["blocks"])
+    # second call: in-memory hit
+    again = autotune.autotune_matmul(1, 16, 96, 4, interpret=True)
+    assert again["cached"] and again["blocks"] == got["blocks"]
+    # fresh process simulation: disk hit
+    autotune.reset()
+    assert autotune.lookup(key) == list(got["blocks"])
+    autotune.reset()
+
+
+def test_kernel_prepare_consults_autotune_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    autotune.reset()
+    pk = _pack(48, 330, 3)
+    key = autotune.matmul_key(1, 48, 330, 3, "pallas", default_interpret())
+    # n=3 -> lcm(k=10, 32)=160, padded d_in=480: block_k=480 survives the
+    # padding-minimizing snap (snap_block_k) unchanged
+    autotune.record(key, [64, 32, 480])
+    prep = backend.prepare(pk, backend="pallas")
+    assert (prep.block_m, prep.block_n, prep.block_k) == (64, 32, 480)
+    # a cached block_k that would inflate padding gets snapped down
+    autotune.record(key, [64, 32, 320])
+    prep2 = backend.prepare(pk, backend="pallas")
+    assert prep2.block_k == 160 and prep2.codes.shape[-1] * 10 == 480
+    autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# serving engine routes through the dispatch layer
+# ---------------------------------------------------------------------------
+
+def test_kernel_engine_prepared_token_parity():
+    """GenerationEngine decode with ICQ weights goes through the prepared
+    dispatch layer (no full dequantize() in the per-step hot path) and
+    generates IDENTICAL tokens to the reference in-graph-decode path."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models import init_model
+    from repro.serving import GenerationEngine, Request
+
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    qparams, _ = quantize_tree(params, 4, gamma=0.05)
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, 5).astype(np.int32)
+
+    e_ref = GenerationEngine(qparams, cfg, batch_size=1, max_len=24,
+                             weight_cache="none")
+    e_prep = GenerationEngine(qparams, cfg, batch_size=1, max_len=24)
+    assert any(
+        isinstance(w, backend.ICQPrepared)
+        for w in jax.tree.leaves(
+            e_prep.params,
+            is_leaf=lambda x: isinstance(x, backend.ICQPrepared))
+    ), "engine did not prepare ICQ weights"
+    for e in (e_ref, e_prep):
+        e.submit(Request(0, prompt, max_new_tokens=4))
+    assert e_prep.run()[0].generated == e_ref.run()[0].generated

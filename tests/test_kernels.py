@@ -6,7 +6,7 @@ import pytest
 
 from repro import core
 from repro.core.stats import heavy_tailed_weights
-from repro.kernels import ops, ref
+from repro.kernels import backend, ops, ref
 
 
 @pytest.mark.parametrize("n_bits", [2, 3, 4, 8])
@@ -60,6 +60,43 @@ def test_kmeans_assign_matches_ref(shape, C):
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(vs_k), np.asarray(vs_r),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_bits", [2, 3, 4])
+@pytest.mark.parametrize("shape", [(64, 512), (48, 330)])  # aligned + ragged
+@pytest.mark.parametrize("M", [1, 8, 300])                 # both dispatch arms
+def test_dispatch_parity_fused_vs_dequantize(n_bits, shape, M):
+    """backend.linear_apply (pallas arms) ≍ dequantize()-then-matmul.
+
+    M ∈ {1, 8} rides the fused icq_matmul kernel, M = 300 the
+    icq_dequant-then-dense-matmul arm; (48, 330) is ragged w.r.t. the
+    block lcm for every n_bits."""
+    R, C = shape
+    W = heavy_tailed_weights(R, C, seed=n_bits * 10 + R)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    from repro.kernels.platform import decode_m_threshold
+
+    prep = backend.prepare(pk, backend="pallas")
+    want_path = "fused" if M <= decode_m_threshold() else "dequant"
+    assert backend.choose_path(M, prep) == want_path
+    x = jnp.asarray(
+        np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
+    y_ref = np.asarray(x @ core.dequantize(pk).T)
+    y = np.asarray(backend.linear_apply(x, prep))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_dispatch_xla_arm_bitwise_equals_reference():
+    """The pure-XLA arm (CPU default) must reproduce the reference
+    dequantize path bit-for-bit (token-parity guarantee for serving)."""
+    W = heavy_tailed_weights(48, 330, seed=3)
+    pk = core.quantize(jnp.asarray(W), 3, gamma=0.05)
+    prep = backend.prepare(pk, backend="xla")
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 5, 330)), jnp.float32)
+    y_ref = np.asarray(x @ core.dequantize(pk).T)
+    np.testing.assert_array_equal(
+        np.asarray(backend.linear_apply(x, prep)), y_ref)
 
 
 def test_runtime_format_bits():
