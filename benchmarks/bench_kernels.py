@@ -1,4 +1,5 @@
-"""Kernel execution-layer benchmark: reference vs kernel-backed dispatch.
+"""Kernel execution-layer benchmark: reference vs kernel-backed dispatch,
+v1 (dense-bitmap) vs v2 (checkpointed gap-stream) runtime formats.
 
 Reference = today's model path for storage-format weights: full in-graph
 ``dequantize()`` (gap-stream decode + gather) then a dense matmul, every
@@ -8,8 +9,10 @@ decode and dequant-kernel+MXU-matmul for prefill, off-TPU the prepared
 pure-XLA arm (interpret-free — the Pallas interpreter never sits on the
 measured path).
 
-``benchmarks/run.py`` serializes the returned dict to BENCH_kernels.json
-so the tokens/s + bits/weight trajectory is tracked across PRs.
+Per (n_bits, fmt) the table records the honest HBM accounting
+(``runtime_bits_per_weight`` + the outlier-selection share) next to
+tokens/s, so the v1->v2 trade — ~0.55 b/w of HBM back for the decode
+work moving in-kernel — is tracked across PRs in BENCH_kernels.json.
 """
 from __future__ import annotations
 
@@ -46,57 +49,81 @@ def run() -> dict:
     for n_bits in (2, 3, 4):
         W = heavy_tailed_weights(R, C, seed=n_bits)
         pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
-        prep = backend.prepare(pk)
-        rt_bits = prep.bits_per_weight()
-        st_bits = pk.bits_per_weight()["total"]
+        row = dict(storage_bits=round(pk.bits_per_weight()["total"], 3),
+                   storage_stream_bits=round(pk.bits_per_weight()["index"], 3))
 
-        row = dict(storage_bits=round(st_bits, 3),
-                   runtime_bits=round(rt_bits, 3),
-                   hbm_reduction_vs_bf16=round(16.0 / rt_bits, 2))
-        for phase, M in (("decode", DECODE_M), ("prefill", PREFILL_M)):
-            x = jnp.asarray(
-                np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
-            us_ref = _bench_linear(pk, x)
-            us_fused = _bench_linear(prep, x)
-            row[phase] = dict(
-                ref_us=round(us_ref, 1),
-                fused_us=round(us_fused, 1),
-                ref_tok_s=round(M / us_ref * 1e6, 1),
-                fused_tok_s=round(M / us_fused * 1e6, 1),
-                speedup=round(us_ref / us_fused, 2),
-                path=backend.choose_path(M, prep),
+        for fmt in ("v1", "v2"):
+            rt = ops.to_runtime(pk, fmt=fmt)
+            prep = backend.prepare(pk, fmt=fmt)
+            frow = dict(
+                runtime_bits=round(ops.runtime_bits_per_weight(rt), 3),
+                outlier_bits=round(
+                    ops.runtime_outlier_bits_per_weight(rt), 3),
+                prepared_bits=round(prep.bits_per_weight(), 3),
+                hbm_reduction_vs_bf16=round(
+                    16.0 / prep.bits_per_weight(), 2),
+                block_k=prep.block_k,
             )
-            emit(
-                f"kernels/dispatch_n{n_bits}_{phase}", us_fused,
-                f"ref_us={us_ref:.0f};speedup={us_ref / us_fused:.2f}x;"
-                f"runtime_bits={rt_bits:.2f};path={row[phase]['path']}",
-            )
+            for phase, M in (("decode", DECODE_M), ("prefill", PREFILL_M)):
+                x = jnp.asarray(
+                    np.random.default_rng(M).standard_normal((M, C)),
+                    jnp.float32)
+                us_ref = _bench_linear(pk, x)
+                us_fused = _bench_linear(prep, x)
+                frow[phase] = dict(
+                    ref_us=round(us_ref, 1),
+                    fused_us=round(us_fused, 1),
+                    ref_tok_s=round(M / us_ref * 1e6, 1),
+                    fused_tok_s=round(M / us_fused * 1e6, 1),
+                    speedup=round(us_ref / us_fused, 2),
+                    path=backend.choose_path(M, prep),
+                )
+                # v1 keeps the legacy un-suffixed metric name so the
+                # cross-PR time series stays continuous (mirrors the
+                # autotune cache-key spelling)
+                sfx = "" if fmt == "v1" else f"_{fmt}"
+                emit(
+                    f"kernels/dispatch_n{n_bits}{sfx}_{phase}", us_fused,
+                    f"ref_us={us_ref:.0f};speedup={us_ref / us_fused:.2f}x;"
+                    f"runtime_bits={frow['runtime_bits']};"
+                    f"outlier_bits={frow['outlier_bits']};"
+                    f"path={frow[phase]['path']}",
+                )
+            row[fmt] = frow
+        row["v2_outlier_saving_bits"] = round(
+            row["v1"]["outlier_bits"] - row["v2"]["outlier_bits"], 3)
         out["by_bits"][n_bits] = row
 
     # Pallas kernel micro (small shape: interpret mode off-TPU is slow) +
-    # autotuned blocks, recorded to the shared JSON cache for reuse.
+    # autotuned blocks per format, recorded to the shared JSON cache.
     r2, c2 = 64, 512
-    tuned = autotune.autotune_matmul(DECODE_M, r2, c2, 4, iters=1)
-    out["autotune"] = dict(
-        key=autotune.matmul_key(DECODE_M, r2, c2, 4, "pallas",
-                                default_interpret()),
-        blocks=list(tuned["blocks"]),
-        cached=tuned["cached"],
-        cache_file=autotune.cache_path(),
-    )
     W2 = heavy_tailed_weights(r2, c2, seed=11)
     pk2 = core.quantize(jnp.asarray(W2), 4, gamma=0.05)
-    prep2 = backend.prepare(pk2, backend="pallas",
-                            blocks=tuple(tuned["blocks"]))
     x2 = jnp.asarray(
         np.random.default_rng(5).standard_normal((DECODE_M, c2)), jnp.float32)
-    us_pallas = _bench_linear(prep2, x2)
-    out["pallas_micro"] = dict(
-        shape=[r2, c2], n_bits=4, M=DECODE_M, us=round(us_pallas, 1),
-        interpret=default_interpret(),
-    )
-    emit("kernels/pallas_fused_micro", us_pallas,
-         f"blocks={tuned['blocks']};interpret={default_interpret()}")
+    out["pallas_micro"] = {}
+    out["autotune"] = {}
+    for fmt in ("v1", "v2"):
+        tuned = autotune.autotune_matmul(DECODE_M, r2, c2, 4, iters=1,
+                                         fmt=fmt)
+        out["autotune"][fmt] = dict(
+            key=autotune.matmul_key(DECODE_M, r2, c2, 4, "pallas",
+                                    default_interpret(), fmt=fmt),
+            blocks=list(tuned["blocks"]),
+            cached=tuned["cached"],
+            cache_file=autotune.cache_path(),
+        )
+        prep2 = backend.prepare(pk2, backend="pallas", fmt=fmt,
+                                blocks=tuple(tuned["blocks"]))
+        us_pallas = _bench_linear(prep2, x2)
+        out["pallas_micro"][fmt] = dict(
+            shape=[r2, c2], n_bits=4, M=DECODE_M, us=round(us_pallas, 1),
+            interpret=default_interpret(),
+        )
+        micro_name = "kernels/pallas_fused_micro" + (
+            "" if fmt == "v1" else f"_{fmt}")
+        emit(micro_name, us_pallas,
+             f"blocks={tuned['blocks']};interpret={default_interpret()}")
 
     # kmeans assignment (the ICQuant^SK calibration hot loop)
     w = jnp.asarray(heavy_tailed_weights(256, 4096, seed=9))

@@ -43,9 +43,16 @@ print(f"kernel vs reference max err: {float(abs(y - y_ref).max()):.2e}")
 
 # 5. ...or the way the serving engine does it: prepare once (pad/block at
 #    load time), then every model matmul dispatches per-call between the
-#    fused kernel, dequant+MXU matmul, and the pure-XLA arm.
-prep = ops.prepare(packed)
+#    fused kernel, dequant+MXU matmul, and the pure-XLA arm. The default
+#    v2 runtime serves the checkpointed gap stream directly (~0.3-0.45
+#    b/w outlier overhead); fmt="v1" expands the dense 1-bit bitmap
+#    (~1 b/w) the kernels decode for free.
+prep = ops.prepare(packed)                    # fmt='v2' by default
 y2 = ops.linear_apply(x, prep)
-print(f"dispatch [{prep.backend}] vs reference max err: "
+prep_v1 = ops.prepare(packed, fmt="v1")
+print(f"dispatch [{prep.backend}/{prep.fmt}] vs reference max err: "
       f"{float(abs(y2 - y_ref).max()):.2e}; "
-      f"runtime HBM: {prep.bits_per_weight():.2f} bits/weight")
+      f"runtime HBM: v2 {prep.bits_per_weight():.2f} vs "
+      f"v1 {prep_v1.bits_per_weight():.2f} bits/weight "
+      f"(outlier overhead {prep.outlier_bits_per_weight():.2f} vs "
+      f"{prep_v1.outlier_bits_per_weight():.2f})")

@@ -183,6 +183,132 @@ def mask_to_positions(outlier_mask: np.ndarray) -> np.ndarray:
     return positions
 
 
+def _reach(symbols: np.ndarray, counts: np.ndarray, b: int) -> np.ndarray:
+    """0-based position consumed by each symbol; +inf past the real count."""
+    rows, s_max = symbols.shape
+    m = (1 << b) - 1
+    sym = symbols.astype(np.int64)
+    inc = np.where(sym == m, m, sym + 1)
+    idx = np.arange(s_max)
+    valid = idx[None, :] < counts[:, None]
+    reach = np.cumsum(np.where(valid, inc, 0), axis=1) - 1
+    return np.where(valid, reach, np.iinfo(np.int64).max)
+
+
+def stream_checkpoints(
+    symbols: np.ndarray,
+    counts: np.ndarray,
+    b: int,
+    tile: int,
+    total_len: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(row, tile) checkpoints for the v2 runtime format.
+
+    For column tiles [t*tile, (t+1)*tile) covering [0, total_len) returns
+
+      offsets: (rows, T+1) uint16 — index of the first symbol whose decoded
+               position reaches tile t; ``offsets[:, T]`` is the per-row
+               symbol count (sentinel), so tile t's symbols are exactly
+               ``[offsets[t], offsets[t+1])``.
+      dbase:   (rows, T) uint8 (uint16 when b > 8) — base-position delta:
+               ``t*tile - dbase[t]`` is the absolute position consumed
+               before the tile's first symbol. The delta is < 2^b because
+               the symbol straddling the boundary advances at most
+               2^b - 1 positions, so it packs into b bits.
+
+    A kernel block reconstructs its selector locally: masked cumsum of the
+    tile's symbol increments added to the checkpoint base — no row-prefix
+    scan, no dense bitmap. Cost: (16*(T+1) + 8*T) / total_len bits/weight.
+    Host-side numpy (encode/pack time).
+    """
+    symbols = np.asarray(symbols)
+    counts = np.asarray(counts, dtype=np.int64)
+    rows, s_max = symbols.shape
+    if total_len % tile:
+        raise ValueError(f"total_len {total_len} not a multiple of tile {tile}")
+    if counts.size and counts.max() > np.iinfo(np.uint16).max:
+        raise ValueError("symbol counts exceed uint16 checkpoint range")
+    T = total_len // tile
+    reach = _reach(symbols, counts, b) if s_max else \
+        np.full((rows, 0), 0, dtype=np.int64)
+    d_dtype = np.uint8 if b <= 8 else np.uint16
+    d_max = int(np.iinfo(d_dtype).max)
+    offsets = np.empty((rows, T + 1), np.uint16)
+    dbase = np.zeros((rows, T), d_dtype)
+    for t in range(T + 1):
+        lo = t * tile
+        off = (reach < lo).sum(axis=1) if s_max else np.zeros(rows, np.int64)
+        offsets[:, t] = off
+        if t < T and s_max:
+            prev = np.take_along_axis(
+                reach, np.maximum(off - 1, 0)[:, None], axis=1)[:, 0] + 1
+            prev = np.where(off > 0, prev, 0)
+            # tiles past the last symbol never decode; clamp their delta
+            dbase[:, t] = np.clip(lo - prev, 0, d_max).astype(d_dtype)
+    return offsets, dbase
+
+
+def selector_from_checkpoints(
+    sym_cols: jnp.ndarray,
+    offsets: jnp.ndarray,
+    dbase: jnp.ndarray,
+    *,
+    b: int,
+    tile: int,
+    out_len: int,
+) -> jnp.ndarray:
+    """Pure-jnp v2 decode: checkpointed streams -> dense 0/1 selector.
+
+    sym_cols: (rows, S) int — unpacked b-bit symbols (value-1 encoding).
+    offsets/dbase: per-tile checkpoints from ``stream_checkpoints``.
+    Mirrors the Pallas kernels' per-tile masked-cumsum math exactly (the
+    XLA dispatch arm and tests use this), so both arms see bit-identical
+    selectors. Returns (rows, out_len) int32.
+    """
+    rows, S = sym_cols.shape
+    T = offsets.shape[-1] - 1
+    m = (1 << b) - 1
+    sym = sym_cols.astype(jnp.int32)[:, None, :]              # (rows, 1, S)
+    off = offsets.astype(jnp.int32)
+    o0, o1 = off[:, :-1, None], off[:, 1:, None]              # (rows, T, 1)
+    j = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    in_tile = (j >= o0) & (j < o1)                            # (rows, T, S)
+    inc = jnp.where(sym == m, m, sym + 1) * in_tile
+    lo = (jnp.arange(T, dtype=jnp.int32) * tile)[None, :, None]
+    base = lo - dbase.astype(jnp.int32)[:, :, None]
+    pos = base + jnp.cumsum(inc, axis=-1) - 1
+    emit = in_tile & (sym != m)
+    dense = positions_to_mask(pos.reshape(-1, S), emit.reshape(-1, S), out_len)
+    return dense.reshape(rows, T, out_len).any(axis=1).astype(jnp.int32)
+
+
+def selector_from_stream_cols(
+    sym_cols: jnp.ndarray,
+    counts: jnp.ndarray,
+    *,
+    b: int,
+    out_len: int,
+) -> jnp.ndarray:
+    """Global-cumsum v2 decode: unpacked symbols + per-row counts ->
+    dense 0/1 selector (rows, out_len) int32.
+
+    Bit-identical to ``selector_from_checkpoints`` (the gap stream
+    encodes one set of positions; both formulations recover it with
+    exact integer math) at 1/T the work — the XLA dispatch arm uses this
+    per call, while the per-tile variant validates the checkpoint
+    sidecar in tests and mirrors the kernels.
+    """
+    rows, S = sym_cols.shape
+    m = (1 << b) - 1
+    sym = sym_cols.astype(jnp.int32)
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    in_range = j < counts.astype(jnp.int32)[:, None]
+    inc = jnp.where(sym == m, m, sym + 1) * in_range
+    pos = jnp.cumsum(inc, axis=-1) - 1
+    emit = in_range & (sym != m)
+    return positions_to_mask(pos, emit, out_len).astype(jnp.int32)
+
+
 def tile_checkpoints(stream: GapStream, tile: int) -> Tuple[np.ndarray, np.ndarray]:
     """Checkpointed stream (TPU adaptation, DESIGN.md §4.2).
 

@@ -46,6 +46,25 @@ def unpack_codes(words: jnp.ndarray, n_bits: int, length: int) -> jnp.ndarray:
     return flat[..., :length]
 
 
+def pack_symbols_np(symbols: np.ndarray, b: int) -> np.ndarray:
+    """Pack (rows, s_max) b-bit gap symbols into uint32 words (v2 runtime).
+
+    Same little-endian-in-word field layout as ``pack_codes`` (the kernels
+    unpack both with one shift/mask helper); symbols are stored value-1 so
+    they fit exactly b bits. Rows with no symbols still get one zero word
+    so downstream block shapes never collapse to width 0.
+    """
+    symbols = np.asarray(symbols)
+    if symbols.shape[-1] == 0:
+        return np.zeros(symbols.shape[:-1] + (1,), dtype=np.uint32)
+    return pack_codes_np(symbols.astype(np.uint32), b)
+
+
+def symbol_cols(words_width: int, b: int) -> int:
+    """Unpacked column count of a packed symbol tensor of given width."""
+    return words_width * codes_per_word(b)
+
+
 def pack_codes_np(codes: np.ndarray, n_bits: int) -> np.ndarray:
     """Host-side numpy packer (pack time)."""
     k = codes_per_word(n_bits)

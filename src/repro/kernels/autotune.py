@@ -48,15 +48,19 @@ def cache_path() -> str:
 
 
 def matmul_key(M: int, d_out: int, d_in: int, n_bits: int,
-               backend: str, interpret: bool) -> str:
+               backend: str, interpret: bool, fmt: str = "v1") -> str:
+    """Cache key; runtime formats tune independently (v1 keys keep the
+    legacy un-suffixed spelling so existing cache files stay valid)."""
     mode = f"{backend}{'-int' if interpret else ''}"
-    return f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}"
+    sfx = "" if fmt == "v1" else f"_{fmt}"
+    return f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}{sfx}"
 
 
 def dequant_key(d_out: int, d_in: int, n_bits: int,
-                backend: str, interpret: bool) -> str:
+                backend: str, interpret: bool, fmt: str = "v1") -> str:
     mode = f"{backend}{'-int' if interpret else ''}"
-    return f"dequant/o{d_out}_i{d_in}_n{n_bits}_{mode}"
+    sfx = "" if fmt == "v1" else f"_{fmt}"
+    return f"dequant/o{d_out}_i{d_in}_n{n_bits}_{mode}{sfx}"
 
 
 def _load_disk() -> None:
@@ -119,6 +123,34 @@ def _synthetic_runtime(d_out: int, d_in: int, n_bits: int, seed: int = 0):
     return codes, bitmap, codebooks
 
 
+def _synthetic_stream(d_out: int, d_in: int, gamma: float = 0.05,
+                      seed: int = 0):
+    """Plausible gap stream (sorted uniform outlier positions) for timing
+    the v2 kernels: returns an encoded GapStream of the right geometry."""
+    from repro.core.bounds import optimal_b
+    from repro.core.index_coding import encode_positions
+
+    rng = np.random.default_rng(seed)
+    p = max(1, int(gamma * d_in))
+    pos = np.sort(
+        rng.random((d_out, d_in)).argpartition(p, axis=1)[:, :p], axis=1)
+    return encode_positions(pos, d_in, optimal_b(gamma))
+
+
+def _v2_sidecar(stream, tile: int, pk: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.index_coding import stream_checkpoints
+    from repro.core.packing import pack_symbols_np
+
+    sym = np.asarray(jax.device_get(stream.symbols))
+    cnt = np.asarray(jax.device_get(stream.counts))
+    offs, dbase = stream_checkpoints(sym, cnt, stream.b, tile, pk)
+    return (jnp.asarray(pack_symbols_np(sym, stream.b)),
+            jnp.asarray(offs), jnp.asarray(dbase))
+
+
 def _time_once(fn, iters: int) -> float:
     import time
 
@@ -137,19 +169,31 @@ def autotune_matmul(
     interpret: Optional[bool] = None,
     candidates: Optional[Sequence[Tuple[int, int, int]]] = None,
     iters: int = 3,
+    fmt: str = "v1",
 ) -> Dict[str, object]:
     """Sweep fused-matmul blocks; cache and return the winner.
+
+    ``fmt`` selects the runtime format being tuned (independent cache
+    entries — v2 kernels have different VMEM/decode trade-offs).
+    Candidates whose VMEM estimate exceeds the budget are skipped before
+    ever reaching the compiler; if every candidate busts the budget the
+    most-clamped one still runs so a winner always exists.
 
     Returns {"blocks": (bm, bn, bk), "us": median_us, "cached": bool}.
     """
     import jax.numpy as jnp
 
-    from repro.kernels.icq_matmul import icq_matmul, matmul_blocks
+    from repro.core.packing import symbol_cols
+    from repro.kernels import backend as _backend
+    from repro.kernels.icq_matmul import (
+        icq_matmul, icq_matmul_v2, matmul_blocks,
+    )
+    from repro.kernels.icq_dequant import _round_up
     from repro.kernels.platform import default_interpret
 
     if interpret is None:
         interpret = default_interpret()
-    key = matmul_key(M, d_out, d_in, n_bits, "pallas", interpret)
+    key = matmul_key(M, d_out, d_in, n_bits, "pallas", interpret, fmt=fmt)
     hit = lookup(key)
     if hit is not None:
         return dict(blocks=tuple(hit), us=None, cached=True)
@@ -157,23 +201,48 @@ def autotune_matmul(
     codes, bitmap, codebooks = _synthetic_runtime(d_out, d_in, n_bits)
     x = jnp.asarray(
         np.random.default_rng(1).standard_normal((M, d_in)), jnp.float32)
+    stream = _synthetic_stream(d_out, d_in) if fmt == "v2" else None
+    s_cols = symbol_cols(
+        max(-(-stream.symbols.shape[-1] // (32 // stream.b)), 1), stream.b
+    ) if fmt == "v2" else 0
+    C = 2 << n_bits
 
     best, best_us = None, float("inf")
     seen = set()
+    budget = _backend.vmem_budget_bytes()
     for bm, bn, bk in (candidates or MATMUL_CANDIDATES):
-        resolved = matmul_blocks(M, d_out, d_in, n_bits, bm, bn, bk)
+        resolved = matmul_blocks(M, d_out, d_in, n_bits, bm, bn, bk, fmt=fmt)
         if resolved in seen:                        # clamping may collide
             continue
+        if _backend.vmem_bytes_estimate(
+                *resolved, n_bits=n_bits, C=C, fmt=fmt,
+                s_cols=s_cols) > budget:
+            continue                                # would bust VMEM
         seen.add(resolved)
-        us = _time_once(
-            lambda bm=bm, bn=bn, bk=bk: icq_matmul(
+        if fmt == "v2":
+            tile = resolved[2]
+            pk = _round_up(d_in, tile)
+            syms, offs, dbase = _v2_sidecar(stream, tile, pk)
+            fn = lambda bm=bm, bn=bn, t=tile, s=syms, o=offs, d=dbase: \
+                icq_matmul_v2(
+                    x, codes, s, o, d, codebooks, n_bits=n_bits,
+                    b=stream.b, d_in=d_in, tile=t, block_m=bm, block_n=bn,
+                    interpret=interpret,
+                )
+        else:
+            fn = lambda bm=bm, bn=bn, bk=bk: icq_matmul(
                 x, codes, bitmap, codebooks, n_bits=n_bits, d_in=d_in,
                 block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
-            ),
-            iters,
-        )
+            )
+        us = _time_once(fn, iters)
         if us < best_us:
             best, best_us = (bm, bn, bk), us
+    if best is None:  # every candidate over budget: run the clamped floor
+        bm, bn, bk = _backend._clamp_blocks_to_budget(
+            *matmul_blocks(M, d_out, d_in, n_bits, *MATMUL_CANDIDATES[0],
+                           fmt=fmt),
+            n_bits=n_bits, C=C, fmt=fmt, d_in=d_in, s_cols=s_cols)
+        best, best_us = (bm, bn, bk), None
     record(key, best)
     return dict(blocks=best, us=best_us, cached=False)
 
@@ -184,34 +253,65 @@ def autotune_dequant(
     interpret: Optional[bool] = None,
     candidates: Optional[Sequence[Tuple[int, int]]] = None,
     iters: int = 3,
+    fmt: str = "v1",
 ) -> Dict[str, object]:
     """Sweep dequant blocks; cache and return the winner."""
-    from repro.kernels.icq_dequant import dequant_blocks, icq_dequant
+    from repro.kernels import backend as _backend
+    from repro.kernels.icq_dequant import (
+        _round_up, dequant_blocks, icq_dequant, icq_dequant_v2,
+    )
     from repro.kernels.platform import default_interpret
 
     if interpret is None:
         interpret = default_interpret()
-    key = dequant_key(d_out, d_in, n_bits, "pallas", interpret)
+    key = dequant_key(d_out, d_in, n_bits, "pallas", interpret, fmt=fmt)
     hit = lookup(key)
     if hit is not None:
         return dict(blocks=tuple(hit), us=None, cached=True)
 
+    from repro.core.packing import symbol_cols
+
     codes, bitmap, codebooks = _synthetic_runtime(d_out, d_in, n_bits)
+    stream = _synthetic_stream(d_out, d_in) if fmt == "v2" else None
+    s_cols = symbol_cols(
+        max(-(-stream.symbols.shape[-1] // (32 // stream.b)), 1), stream.b
+    ) if fmt == "v2" else 0
     best, best_us = None, float("inf")
     seen = set()
+    budget = _backend.vmem_budget_bytes()
+    C = 2 << n_bits
     for br, bc in (candidates or DEQUANT_CANDIDATES):
-        resolved = dequant_blocks(d_out, d_in, n_bits, br, bc)
+        resolved = dequant_blocks(d_out, d_in, n_bits, br, bc, fmt=fmt)
         if resolved in seen:
             continue
+        if _backend.vmem_bytes_estimate(
+                8, *resolved, n_bits=n_bits, C=C, fmt=fmt,
+                s_cols=s_cols) > budget:
+            continue
         seen.add(resolved)
-        us = _time_once(
-            lambda br=br, bc=bc: icq_dequant(
+        if fmt == "v2":
+            tile = resolved[1]
+            syms, offs, dbase = _v2_sidecar(
+                stream, tile, _round_up(d_in, tile))
+            fn = lambda br=br, t=tile, s=syms, o=offs, d=dbase: \
+                icq_dequant_v2(
+                    codes, s, o, d, codebooks, n_bits=n_bits, b=stream.b,
+                    d_in=d_in, tile=t, block_r=br, interpret=interpret,
+                )
+        else:
+            fn = lambda br=br, bc=bc: icq_dequant(
                 codes, bitmap, codebooks, n_bits=n_bits, d_in=d_in,
                 block_r=br, block_c=bc, interpret=interpret,
-            ),
-            iters,
-        )
+            )
+        us = _time_once(fn, iters)
         if us < best_us:
             best, best_us = (br, bc), us
+    if best is None:  # every candidate over budget: run the clamped floor
+        br, bc = dequant_blocks(d_out, d_in, n_bits,
+                                *DEQUANT_CANDIDATES[-1], fmt=fmt)
+        _, br, bc = _backend._clamp_blocks_to_budget(
+            8, br, bc, n_bits=n_bits, C=C, fmt=fmt, d_in=d_in,
+            s_cols=s_cols)
+        best, best_us = (br, bc), None
     record(key, best)
     return dict(blocks=best, us=best_us, cached=False)

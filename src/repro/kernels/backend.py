@@ -12,23 +12,50 @@ Prepared layout
 ``ICQRuntime`` / runtime dict) into an ``ICQPrepared`` **once at model
 load time**. The layout is the kernel runtime format, pre-padded and
 pre-blocked so the per-call ``jnp.pad`` + reshape work in the kernel
-wrappers disappears from the hot path:
+wrappers disappears from the hot path.
 
+Two runtime formats (``fmt``, default ``platform.default_runtime_fmt()``
+= 'v2', env override ``ICQ_RUNTIME_FMT=v1|v2``):
+
+  v1 — dense selector bitmap (the PR-1 layout, bitwise-parity fallback):
   codes:     (*lead, pn, pk // k)  uint32 — k = 32 // n_bits packed
              codes; rows padded d_out -> pn = round_up(d_out, block_n),
              columns padded d_in -> pk = round_up(d_in, block_k) where
              block_k is a multiple of lcm(k, 32) so code words and
              bitmap words block on the same column tiles.
-  bitmap:    (*lead, pn, pk // 32) uint32 — 1-bit outlier selector.
-  codebooks: (*lead, pn, 2^(n+1))  f32    — [inlier ++ outlier] levels;
+  bitmap:    (*lead, pn, pk // 32) uint32 — 1-bit outlier selector
+             (~ +1.0 bit/weight of HBM outlier overhead).
+
+  v2 — checkpointed gap stream (the paper-faithful ~0.3 b/w stream,
+  served directly; the kernels decode their selector tile in VMEM):
+  syms:      (*lead, pn, SW) uint32 — packed b-bit gap symbols
+             (value-1 encoding, all-ones = escape flag).
+  offs:      (*lead, pn, T+1) uint16 — symbol-stream offset at every
+             block_k boundary (T = pk / block_k; last column is the
+             per-row symbol count sentinel).
+  dbase:     (*lead, pn, T) uint8 (uint16 if b > 8) — checkpoint base
+             delta: t*block_k - dbase[t] is the absolute position
+             consumed before tile t's first symbol.
+             Outlier overhead ~= stream (~0.31-0.38 with word/row
+             padding) + 24/block_k checkpoint bits ~= 0.40-0.45 b/w.
+             block_k IS the checkpoint tile: re-blocking requires
+             re-preparing. v2 column granularity is k alone (no bitmap
+             to 32-align), so n=3 keeps large tiles.
+
+  Shared:
+  codebooks: (*lead, pn, 2^(n+1)) f32 (or bf16 with
+             ``codebook_dtype='bf16'``) — [inlier ++ outlier] levels;
              padded rows are zero so they contribute nothing.
   static aux: n_bits, d_out, d_in (true shapes), block_m (cap for the M
              tile), block_n, block_k (exact divisors of pn / pk),
-             backend ('pallas' | 'xla'), interpret (bool).
+             backend ('pallas' | 'xla'), interpret (bool), fmt
+             ('v1' | 'v2'), b (gap-symbol width; 0 for v1).
 
 Zero padding is safe end-to-end: padded K columns meet zero-padded
 activations in the matmul, padded N rows are sliced off the output, and
 the pure-XLA arm slices to (d_out, d_in) before the dense matmul.
+Padded rows have offs = 0 (empty symbol runs), so v2 decodes them to an
+all-zero selector.
 
 Leading axes (layer-scanned stacks, expert stacks) are kept on the array
 children, so ``ICQPrepared`` nodes slice transparently under
@@ -39,10 +66,13 @@ Dispatch
 ``linear_apply(x, prep)`` picks per call, keyed on M (= batched tokens),
 shape, and platform (see kernels/platform.py):
 
-  * backend 'xla' (default off-TPU): prepared-layout XLA reconstruction
-    (unpack + take_along_axis; no gap-stream decode) then a dense
-    matmul — bitwise-identical results to the reference ``dequantize``
-    path, without its in-graph index-coding cumsum/scatter.
+  * backend 'xla' (default off-TPU): prepared-layout XLA reconstruction,
+    then a dense matmul — bitwise-identical results to the reference
+    ``dequantize`` path. For v1 that is bitmap unpack + take_along_axis;
+    for v2 the checkpointed stream is decoded in-graph (global cumsum +
+    scatter — exact integer math, so v1/v2/reference agree bit-for-bit;
+    unlike the kernel arms this re-decodes per call, the price of the
+    fallback arm keeping v2's HBM footprint).
   * backend 'pallas', M <= ICQ_DECODE_M (decode): the fused
     ``icq_matmul`` kernel — packed weights go HBM->VMEM, dense bf16
     weights never touch HBM.
@@ -50,39 +80,71 @@ shape, and platform (see kernels/platform.py):
     then a dense MXU matmul in the padded space.
 
 Block sizes come from the autotune cache (kernels/autotune.py) when a
-winner for this (shape, n_bits, backend) exists, else static defaults.
+winner for this (shape, n_bits, backend, fmt) exists, else static
+defaults; either way candidates are clamped so the kernel's VMEM
+working set (one-hot codebook temporary + accumulator + selector-decode
+temporaries) stays under ``ICQ_VMEM_BUDGET_MB`` (default 16) instead of
+failing in the compiler.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import packing
 from repro.core.icquant import ICQPacked, ICQRuntime, to_runtime_format
+from repro.core.index_coding import (
+    selector_from_stream_cols,
+    stream_checkpoints,
+)
 from repro.kernels import autotune
-from repro.kernels.icq_dequant import _round_up, dequant_padded
-from repro.kernels.icq_matmul import matmul_blocks, matmul_padded
+from repro.kernels.icq_dequant import (
+    SEL_CHUNK,
+    _round_up,
+    column_granularity,
+    dequant_padded,
+    dequant_padded_v2,
+    snap_block_k,
+)
+from repro.kernels.icq_matmul import (
+    matmul_blocks,
+    matmul_padded,
+    matmul_padded_v2,
+)
 from repro.kernels.platform import (
     decode_m_threshold,
     default_backend,
     default_interpret,
+    default_runtime_fmt,
 )
 
 DEFAULT_BLOCKS = (128, 128, 512)  # (block_m cap, block_n, block_k)
+
+_CODEBOOK_DTYPES = {None: jnp.float32, "f32": jnp.float32,
+                    "bf16": jnp.bfloat16}
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class ICQPrepared:
-    """Pre-padded, pre-blocked kernel runtime weight (see module doc)."""
+    """Pre-padded, pre-blocked kernel runtime weight (see module doc).
+
+    v1 carries ``bitmap`` (``syms``/``offs``/``dbase`` are None);
+    v2 carries the checkpointed stream (``bitmap`` is None).
+    """
 
     codes: jnp.ndarray        # (*lead, pn, pk // k) uint32
-    bitmap: jnp.ndarray       # (*lead, pn, pk // 32) uint32
-    codebooks: jnp.ndarray    # (*lead, pn, 2^(n+1)) f32
+    bitmap: Optional[jnp.ndarray]     # v1: (*lead, pn, pk // 32) uint32
+    codebooks: jnp.ndarray    # (*lead, pn, 2^(n+1)) f32/bf16
+    syms: Optional[jnp.ndarray]       # v2: (*lead, pn, SW) uint32
+    offs: Optional[jnp.ndarray]       # v2: (*lead, pn, T+1) uint16
+    dbase: Optional[jnp.ndarray]      # v2: (*lead, pn, T) uint8/uint16
     n_bits: int = dataclasses.field(metadata=dict(static=True))
     d_out: int = dataclasses.field(metadata=dict(static=True))
     d_in: int = dataclasses.field(metadata=dict(static=True))
@@ -91,22 +153,44 @@ class ICQPrepared:
     block_k: int = dataclasses.field(metadata=dict(static=True))
     backend: str = dataclasses.field(metadata=dict(static=True))
     interpret: bool = dataclasses.field(metadata=dict(static=True))
+    fmt: str = dataclasses.field(default="v1", metadata=dict(static=True))
+    b: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     def tree_flatten(self):
-        return ((self.codes, self.bitmap, self.codebooks),
+        return ((self.codes, self.bitmap, self.codebooks,
+                 self.syms, self.offs, self.dbase),
                 (self.n_bits, self.d_out, self.d_in, self.block_m,
-                 self.block_n, self.block_k, self.backend, self.interpret))
+                 self.block_n, self.block_k, self.backend, self.interpret,
+                 self.fmt, self.b))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
+    def _tensors(self):
+        return [t for t in (self.codes, self.bitmap, self.codebooks,
+                            self.syms, self.offs, self.dbase)
+                if t is not None]
+
     def bits_per_weight(self) -> float:
-        """HBM bits per logical weight actually resident (padding included)."""
-        cb_bits = jnp.dtype(self.codebooks.dtype).itemsize * 8
+        """HBM bits per logical weight actually resident (padding included).
+
+        Widths derive from each array's itemsize, so uint16/uint8
+        checkpoint sidecars and bf16 codebooks are charged at their true
+        stored width."""
         lead = int(math.prod(self.codes.shape[:-2]))
-        total = (self.codes.size * 32 + self.bitmap.size * 32
-                 + self.codebooks.size * cb_bits)
+        total = sum(t.size * jnp.dtype(t.dtype).itemsize * 8
+                    for t in self._tensors())
+        return total / (lead * self.d_out * self.d_in)
+
+    def outlier_bits_per_weight(self) -> float:
+        """HBM bits/weight spent on outlier *selection* only (v1 bitmap,
+        or v2 stream + checkpoints) — the quantity the paper's ~0.3 b/w
+        index coding result is about."""
+        lead = int(math.prod(self.codes.shape[:-2]))
+        sel = [t for t in (self.bitmap, self.syms, self.offs, self.dbase)
+               if t is not None]
+        total = sum(t.size * jnp.dtype(t.dtype).itemsize * 8 for t in sel)
         return total / (lead * self.d_out * self.d_in)
 
 
@@ -127,48 +211,199 @@ def _as_runtime(w: Union[ICQPacked, ICQRuntime, Dict]) -> ICQRuntime:
     return w
 
 
+# ---------------------------------------------------------------------------
+# VMEM budgeting
+# ---------------------------------------------------------------------------
+
+def vmem_budget_bytes() -> int:
+    """Per-kernel VMEM working-set budget (ICQ_VMEM_BUDGET_MB, default 16)."""
+    env = os.environ.get("ICQ_VMEM_BUDGET_MB")
+    mb = float(env) if env else 16.0
+    return int(mb * 2**20)
+
+
+def vmem_bytes_estimate(block_m: int, block_n: int, block_k: int, *,
+                        n_bits: int, C: int, fmt: str = "v1",
+                        s_cols: int = 0) -> int:
+    """Rough VMEM bytes for one fused-matmul block (dequant is a subset).
+
+    Dominated by the (BN, BK, C) one-hot codebook-select temporary; v2
+    adds the unpacked symbol stream and the (BN, SEL_CHUNK, BK) selector
+    compare chunk. Deliberately coarse — used to reject/clamp block
+    candidates before the compiler OOMs, not to bill exact bytes."""
+    f32 = 4
+    est = block_m * block_k * f32                      # x tile
+    est += 2 * block_m * block_n * f32                 # acc scratch + out
+    est += block_n * block_k * f32                     # dequantized W tile
+    est += block_n * block_k * C * f32                 # one-hot select temp
+    est += block_n * (block_k // (32 // n_bits)) * 4   # packed codes
+    if fmt == "v2":
+        est += 3 * block_n * s_cols * 4                # syms + pos/rel temps
+        est += block_n * min(SEL_CHUNK, max(s_cols, 1)) * block_k * f32
+    else:
+        est += block_n * (block_k // 32) * 4           # bitmap words
+    return est
+
+
+def _clamp_blocks_to_budget(bm: int, bn: int, bk: int, *, n_bits: int,
+                            C: int, fmt: str, d_in: int, s_cols: int,
+                            allow_bk: bool = True):
+    """Shrink (bn, bk, bm) until the VMEM estimate fits the budget."""
+    budget = vmem_budget_bytes()
+    lcm = column_granularity(n_bits, fmt)
+    while vmem_bytes_estimate(bm, bn, bk, n_bits=n_bits, C=C, fmt=fmt,
+                              s_cols=s_cols) > budget:
+        if allow_bk and bk > lcm:
+            nbk = snap_block_k(d_in, lcm, max(lcm, bk // 2))
+            if nbk < bk:
+                bk = nbk
+                continue
+        if bn > 8:
+            bn //= 2
+            continue
+        if bm > 8:
+            bm //= 2
+            continue
+        break  # minimal blocks; let the compiler have the final word
+    return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# prepare
+# ---------------------------------------------------------------------------
+
+def _encode_v2_sidecar(symbols, counts, b: int, d_out: int, tile: int,
+                       total_len: int):
+    """Pack the gap stream + build checkpoints, host-side (load time).
+
+    symbols/counts may carry leading stack axes; returns jnp arrays
+    (syms uint32, offs uint16, dbase uint8/16) with those axes restored.
+    """
+    sym_np = np.asarray(jax.device_get(symbols))
+    cnt_np = np.asarray(jax.device_get(counts))
+    lead = sym_np.shape[:-2] if sym_np.ndim > 2 else ()
+    rows = int(np.prod(lead, dtype=np.int64)) * d_out if lead else d_out
+    sym2 = sym_np.reshape(rows, sym_np.shape[-1])
+    cnt2 = cnt_np.reshape(rows)
+    words = packing.pack_symbols_np(sym2, b)
+    offs, dbase = stream_checkpoints(sym2, cnt2, b, tile, total_len)
+    return (
+        jnp.asarray(words.reshape(*lead, d_out, words.shape[-1])),
+        jnp.asarray(offs.reshape(*lead, d_out, offs.shape[-1])),
+        jnp.asarray(dbase.reshape(*lead, d_out, dbase.shape[-1])),
+    )
+
+
 def prepare(
     w: Union[ICQPacked, ICQRuntime, Dict],
     *,
     blocks: Optional[Tuple[int, int, int]] = None,
     backend: Optional[str] = None,
     interpret: Optional[bool] = None,
+    fmt: Optional[str] = None,
+    codebook_dtype: Optional[str] = None,
 ) -> ICQPrepared:
     """Expand + pad + block a quantized weight for the execution layer.
 
     ``blocks`` is (block_m_cap, block_n, block_k); when None the
     autotune cache is consulted (decode-shape key, M=1) and static
-    defaults are used on a miss.
+    defaults are used on a miss. Either way blocks are clamped to the
+    VMEM budget.
+
+    ``fmt`` is 'v1' | 'v2' | None (None = platform default, normally
+    'v2'). v2 needs the gap stream, so it requires an ``ICQPacked`` (or
+    a v2 runtime dict from ``ops.to_runtime(fmt='v2')``); bitmap-only
+    sources (``ICQRuntime``, v1 dicts) silently fall back to v1 — they
+    already paid the dense-bitmap expansion.
+
+    ``codebook_dtype`` is 'f32' (default) or 'bf16' — bf16 halves the
+    codebook HBM charge at ~3 decimal digits of level precision.
     """
-    rt = _as_runtime(w)
     backend = default_backend() if backend is None else backend
     interpret = default_interpret() if interpret is None else interpret
+    want = default_runtime_fmt() if fmt is None else fmt
+    if want not in ("v1", "v2"):
+        raise ValueError(f"fmt must be 'v1' or 'v2', got {want!r}")
+    if codebook_dtype not in _CODEBOOK_DTYPES:
+        raise ValueError(
+            f"codebook_dtype must be 'f32' or 'bf16', got {codebook_dtype!r}")
+    cb_dtype = _CODEBOOK_DTYPES[codebook_dtype]
 
+    is_v2_dict = isinstance(w, dict) and w.get("fmt", "v1") == "v2"
+    if is_v2_dict and want == "v1":
+        raise ValueError("cannot prepare a v2 runtime dict as fmt='v1' — "
+                         "the dense bitmap was never materialized")
+    has_stream = isinstance(w, ICQPacked) or is_v2_dict
+    fmt = "v2" if (want == "v2" and has_stream) else "v1"
+
+    # -- source tensors ------------------------------------------------
+    bitmap = syms = offs = dbase = None
+    b = 0
+    if is_v2_dict:
+        codes, codebooks = w["codes"], w["codebooks"]
+        n_bits, d_in, b = w["n_bits"], w["d_in"], w["b"]
+        d_out = codes.shape[-2]
+        syms, offs, dbase = w["syms"], w["offs"], w["dbase"]
+        tile_src = w["tile"]
+    elif fmt == "v2":  # ICQPacked, stream kept — never build the bitmap
+        n_bits, d_out, d_in, b = w.n_bits, w.d_out, w.d_in, w.b
+        codes = w.codes
+        codebooks = w.codebooks.reshape(*w.codes.shape[:-2], d_out, -1)
+    else:
+        rt = _as_runtime(w)
+        codes, bitmap, codebooks = rt.codes, rt.bitmap, rt.codebooks
+        n_bits, d_out, d_in = rt.n_bits, rt.d_out, rt.d_in
+
+    # -- block selection ----------------------------------------------
     if blocks is None:
         hit = autotune.lookup(autotune.matmul_key(
-            1, rt.d_out, rt.d_in, rt.n_bits, "pallas", interpret))
+            1, d_out, d_in, n_bits, "pallas", interpret, fmt=fmt))
         blocks = tuple(hit) if hit is not None else DEFAULT_BLOCKS
     bm_cap, bn, bk = blocks
     # snap to hardware/packing granularity (M slot resolved per call)
-    _, bn, bk = matmul_blocks(8, rt.d_out, rt.d_in, rt.n_bits,
-                              bm_cap, bn, bk)
+    _, bn, bk = matmul_blocks(8, d_out, d_in, n_bits, bm_cap, bn, bk,
+                              fmt=fmt)
+    if is_v2_dict:
+        bk = tile_src  # checkpoints were built for this tile
+    C = codebooks.shape[-1]
+    s_cols = 0
+    if fmt == "v2":
+        words = syms.shape[-1] if is_v2_dict else \
+            max(packing.packed_width(w.symbols.shape[-1], b), 1)
+        s_cols = packing.symbol_cols(words, b)
+    bm_cap, bn, bk = _clamp_blocks_to_budget(
+        bm_cap, bn, bk, n_bits=n_bits, C=C, fmt=fmt, d_in=d_in,
+        s_cols=s_cols, allow_bk=not is_v2_dict)
 
-    k = 32 // rt.n_bits
-    pn = _round_up(rt.d_out, bn)
-    pk = _round_up(rt.d_in, bk)
+    k = 32 // n_bits
+    pn = _round_up(d_out, bn)
+    pk = _round_up(d_in, bk)
+
+    # -- v2 sidecar -----------------------------------------------------
+    if fmt == "v2" and not is_v2_dict:
+        syms, offs, dbase = _encode_v2_sidecar(
+            w.symbols, w.counts, b, d_out, tile=bk, total_len=pk)
+
+    def pad_rows(x):
+        return None if x is None else _pad_last2(x, pn, x.shape[-1])
+
     return ICQPrepared(
-        codes=_pad_last2(rt.codes, pn, pk // k),
-        bitmap=_pad_last2(rt.bitmap, pn, pk // 32),
-        codebooks=_pad_last2(
-            rt.codebooks.astype(jnp.float32), pn, rt.codebooks.shape[-1]),
-        n_bits=rt.n_bits,
-        d_out=rt.d_out,
-        d_in=rt.d_in,
+        codes=_pad_last2(codes, pn, pk // k),
+        bitmap=None if fmt == "v2" else _pad_last2(bitmap, pn, pk // 32),
+        codebooks=_pad_last2(codebooks.astype(cb_dtype), pn, C),
+        syms=pad_rows(syms),
+        offs=pad_rows(offs),
+        dbase=pad_rows(dbase),
+        n_bits=n_bits,
+        d_out=d_out,
+        d_in=d_in,
         block_m=bm_cap,
         block_n=bn,
         block_k=bk,
         backend=backend,
         interpret=interpret,
+        fmt=fmt,
+        b=b,
     )
 
 
@@ -189,21 +424,55 @@ def choose_path(M: int, prep: ICQPrepared) -> str:
     return "fused" if M <= decode_m_threshold() else "dequant"
 
 
+# ---------------------------------------------------------------------------
+# execution arms
+# ---------------------------------------------------------------------------
+
+def _xla_selector(prep: ICQPrepared) -> jnp.ndarray:
+    """(*lead, d_out, d_in) int32 selector via the prepared tensors."""
+    if prep.fmt == "v1":
+        return packing.unpack_codes(
+            prep.bitmap[..., : prep.d_out, :], 1, prep.d_in
+        ).astype(jnp.int32)
+    S = packing.symbol_cols(prep.syms.shape[-1], prep.b)
+    sym = packing.unpack_codes(prep.syms[..., : prep.d_out, :], prep.b, S)
+    lead = sym.shape[:-2]
+    rows = int(math.prod(lead)) * prep.d_out
+    # counts live in the checkpoint sentinel column; the global-cumsum
+    # decode is bit-identical to the kernels' per-tile checkpoint decode
+    # (same positions) at a fraction of the work.
+    counts = prep.offs[..., : prep.d_out, -1].reshape(rows)
+    sel = selector_from_stream_cols(
+        sym.reshape(rows, S).astype(jnp.int32), counts,
+        b=prep.b, out_len=prep.d_in,
+    )
+    return sel.reshape(*lead, prep.d_out, prep.d_in)
+
+
 def _xla_weight(prep: ICQPrepared) -> jnp.ndarray:
-    """Prepared tensors -> (*lead, d_out, d_in) f32, pure XLA (no kernels)."""
+    """Prepared tensors -> (*lead, d_out, d_in) weights, pure XLA.
+
+    v1 unpacks the bitmap; v2 decodes the gap stream in-graph with the
+    same exact integer math as the kernels' checkpoint decode, so the
+    selector — and therefore the gathered weight — is bit-identical
+    across formats and to the reference ``dequantize`` path. Output
+    dtype follows the stored codebooks (f32, or bf16 codebook cache).
+    """
     codes = packing.unpack_codes(
         prep.codes[..., : prep.d_out, :], prep.n_bits, prep.d_in
     ).astype(jnp.int32)
-    sel = packing.unpack_codes(
-        prep.bitmap[..., : prep.d_out, :], 1, prep.d_in
-    ).astype(jnp.int32)
-    idx = sel * (1 << prep.n_bits) + codes
+    idx = _xla_selector(prep) * (1 << prep.n_bits) + codes
     return jnp.take_along_axis(
         prep.codebooks[..., : prep.d_out, :], idx, axis=-1)
 
 
+def _rows2(x: jnp.ndarray) -> jnp.ndarray:
+    """Fold leading stack axes of a prepared child into rows."""
+    return x.reshape(-1, x.shape[-1])
+
+
 def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
-    """Materialize (*lead, d_out, d_in) f32. Pallas backend runs the
+    """Materialize (*lead, d_out, d_in) weights. Pallas backend runs the
     dequant kernel (leading axes fold into grid rows — dequantization is
     row-independent, so stacks need one kernel call, not a vmap)."""
     if prep.backend != "pallas":
@@ -212,14 +481,24 @@ def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
     lead = prep.codes.shape[:-2]
     pn = prep.codes.shape[-2]
     pk = prep.codes.shape[-1] * k
-    rows = int(math.prod(lead)) * pn
-    out = dequant_padded(
-        prep.codes.reshape(rows, -1),
-        prep.bitmap.reshape(rows, -1),
-        prep.codebooks.reshape(rows, -1),
-        n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
-        interpret=prep.interpret,
-    )
+    if prep.fmt == "v2":
+        out = dequant_padded_v2(
+            _rows2(prep.codes),
+            _rows2(prep.syms),
+            _rows2(prep.offs),
+            _rows2(prep.dbase),
+            _rows2(prep.codebooks),
+            n_bits=prep.n_bits, b=prep.b, block_r=prep.block_n,
+            interpret=prep.interpret,
+        )
+    else:
+        out = dequant_padded(
+            _rows2(prep.codes),
+            _rows2(prep.bitmap),
+            _rows2(prep.codebooks),
+            n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
+            interpret=prep.interpret,
+        )
     out = out.reshape(*lead, pn, pk)
     return out[..., : prep.d_out, : prep.d_in]
 
@@ -247,17 +526,33 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
         bm = min(prep.block_m, _round_up(M, 8))
         pm = _round_up(M, bm)
         x_p = jnp.pad(x2, ((0, pm - M), (0, pk - prep.d_in)))
-        y = matmul_padded(
-            x_p, prep.codes, prep.bitmap, prep.codebooks,
-            n_bits=prep.n_bits, block_m=bm, block_n=prep.block_n,
-            block_k=prep.block_k, interpret=prep.interpret,
-        )[:M, : prep.d_out]
+        if prep.fmt == "v2":
+            y = matmul_padded_v2(
+                x_p, prep.codes, prep.syms, prep.offs, prep.dbase,
+                prep.codebooks,
+                n_bits=prep.n_bits, b=prep.b, block_m=bm,
+                block_n=prep.block_n, interpret=prep.interpret,
+            )[:M, : prep.d_out]
+        else:
+            y = matmul_padded(
+                x_p, prep.codes, prep.bitmap, prep.codebooks,
+                n_bits=prep.n_bits, block_m=bm, block_n=prep.block_n,
+                block_k=prep.block_k, interpret=prep.interpret,
+            )[:M, : prep.d_out]
     else:  # 'dequant': reconstruct once, ride the dense MXU matmul
-        w = dequant_padded(
-            prep.codes, prep.bitmap, prep.codebooks,
-            n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
-            interpret=prep.interpret,
-        )                                            # (pn, pk)
+        if prep.fmt == "v2":
+            w = dequant_padded_v2(
+                prep.codes, prep.syms, prep.offs, prep.dbase,
+                prep.codebooks,
+                n_bits=prep.n_bits, b=prep.b, block_r=prep.block_n,
+                interpret=prep.interpret,
+            )                                        # (pn, pk)
+        else:
+            w = dequant_padded(
+                prep.codes, prep.bitmap, prep.codebooks,
+                n_bits=prep.n_bits, block_r=prep.block_n,
+                block_c=prep.block_k, interpret=prep.interpret,
+            )                                        # (pn, pk)
         x_p = jnp.pad(x2, ((0, 0), (0, pk - prep.d_in)))
         y = jax.lax.dot_general(
             x_p, w, (((1,), (1,)), ((), ())),
@@ -274,5 +569,7 @@ __all__ = [
     "choose_path",
     "dequantize_prepared",
     "linear_apply",
+    "vmem_bytes_estimate",
+    "vmem_budget_bytes",
     "DEFAULT_BLOCKS",
 ]

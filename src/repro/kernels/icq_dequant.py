@@ -7,13 +7,23 @@ unpack is shift/mask on the VPU and the codebook lookup is a one-hot
 batched contraction that rides the MXU instead of C serial VPU selects.
 
 Block layout: grid (d_out/BR, d_in/BC); code words and bitmap words are
-blocked along the same column tiles (BC is a multiple of lcm(k, 32)).
+blocked along the same column tiles (BC is a multiple of lcm(k, 32) for
+the v1 bitmap format, of k alone for v2 — there is no bitmap to align).
 
-Two entry points:
-  * ``dequant_padded`` — the hot-path core. Inputs must already be
+Two runtime formats share the kernels:
+  * v1 — dense 1-bit selector bitmap (``dequant_padded``): selector
+    unpack is shift/mask, HBM overhead ~1 bit/weight.
+  * v2 — checkpointed gap stream (``dequant_padded_v2``): the block
+    reconstructs its selector locally from b-bit gap symbols + per-tile
+    checkpoints via ``_decode_block_selector`` (a short masked cumsum),
+    HBM overhead ~0.35-0.45 bit/weight. ``block_c`` must equal the
+    checkpoint tile the sidecar was built for.
+
+Two entry points per format:
+  * ``dequant_padded[_v2]`` — the hot-path cores. Inputs must already be
     padded/blocked (see kernels/backend.py ``prepare``); no per-call
     reshape or ``jnp.pad`` happens here.
-  * ``icq_dequant``   — convenience wrapper that pads on the fly
+  * ``icq_dequant[_v2]``   — convenience wrappers that pad on the fly
     (benchmarks, tests, one-off calls).
 
 ``interpret=None`` resolves via kernels.platform: compiled on TPU,
@@ -29,6 +39,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.platform import default_interpret
+
+# v2 selector decode: symbols compared against the column iota in chunks
+# of this many symbols, bounding the (BR, chunk, BC) one-hot temporary.
+SEL_CHUNK = 16
 
 
 def _unpack_block(words: jnp.ndarray, n_bits: int, out_cols: int) -> jnp.ndarray:
@@ -56,6 +70,49 @@ def _codebook_select(idx: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )
+
+
+def _decode_block_selector(syms: jnp.ndarray, offs: jnp.ndarray,
+                           dbase: jnp.ndarray, kk, *,
+                           b: int, block_k: int) -> jnp.ndarray:
+    """Checkpointed gap stream -> (BR, block_k) 0/1 selector for tile kk.
+
+    syms:  (BR, SW) uint32 — the row's full packed b-bit symbol stream
+           (value-1 encoding, all-ones = escape flag).
+    offs:  (BR, T+1) uint16 — symbol offset at every tile boundary
+           (sentinel column = per-row symbol count).
+    dbase: (BR, T) uint8/uint16 — kk*block_k - dbase[kk] is the absolute
+           position consumed before the tile's first symbol.
+    kk:    column-tile index (pl.program_id of the K grid axis).
+
+    Decode is block-local: mask the stream to [offs[kk], offs[kk+1]),
+    cumsum the masked gap increments (escape = 2^b - 1 positions, no
+    emission) on top of the checkpoint base, then scatter-by-compare the
+    emitted positions against the tile's column iota. No row prefix is
+    scanned and no dense bitmap ever exists.
+    """
+    k_b = 32 // b
+    S = syms.shape[-1] * k_b
+    sym = _unpack_block(syms, b, S)                            # (BR, S)
+    off = offs.astype(jnp.int32)
+    pair = jax.lax.dynamic_slice_in_dim(off, kk, 2, axis=1)    # (BR, 2)
+    o0, o1 = pair[:, :1], pair[:, 1:]
+    d0 = jax.lax.dynamic_slice_in_dim(
+        dbase.astype(jnp.int32), kk, 1, axis=1)                # (BR, 1)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+    in_tile = (j >= o0) & (j < o1)
+    m = (1 << b) - 1
+    inc = jnp.where(sym == m, m, sym + 1) * in_tile.astype(jnp.int32)
+    rel = jnp.cumsum(inc, axis=-1) - d0 - 1          # position - kk*block_k
+    emit = in_tile & (sym != m)
+    sel = jnp.zeros((syms.shape[0], block_k), jnp.int32)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_k), 2)
+    for s0 in range(0, S, SEL_CHUNK):
+        r = rel[:, s0:s0 + SEL_CHUNK]
+        e = emit[:, s0:s0 + SEL_CHUNK]
+        hit = (r[:, :, None] == iota_c) & e[:, :, None]
+        sel = sel + hit.astype(jnp.int32).sum(axis=1)
+    return sel
 
 
 def _dequant_kernel(codes_ref, bitmap_ref, cb_ref, out_ref, *, n_bits: int):
@@ -98,6 +155,95 @@ def dequant_padded(
     )(codes, bitmap, codebooks)
 
 
+def _dequant_kernel_v2(codes_ref, syms_ref, offs_ref, dbase_ref, cb_ref,
+                       out_ref, *, n_bits: int, b: int):
+    BC = out_ref.shape[-1]
+    codes = _unpack_block(codes_ref[...], n_bits, BC)
+    sel = _decode_block_selector(
+        syms_ref[...], offs_ref[...], dbase_ref[...], pl.program_id(1),
+        b=b, block_k=BC,
+    )
+    idx = sel * (1 << n_bits) + codes
+    out_ref[...] = _codebook_select(idx, cb_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "b", "block_r", "interpret")
+)
+def dequant_padded_v2(
+    codes: jnp.ndarray,      # (pr, pc // k) uint32, pr % block_r == 0
+    syms: jnp.ndarray,       # (pr, SW) uint32 packed b-bit gap symbols
+    offs: jnp.ndarray,       # (pr, T+1) uint16 tile symbol offsets
+    dbase: jnp.ndarray,      # (pr, T) uint8/uint16 tile base deltas
+    codebooks: jnp.ndarray,  # (pr, C)
+    *,
+    n_bits: int,
+    b: int,
+    block_r: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """v2 core over pre-blocked inputs -> (pr, pc) f32 (still padded).
+
+    The column block is the checkpoint tile: block_c = pc / T, where T
+    comes from the sidecar shape (``prepare`` guarantees pc == T * tile).
+    """
+    k = 32 // n_bits
+    pr, pc = codes.shape[0], codes.shape[1] * k
+    T = offs.shape[1] - 1
+    block_c = pc // T
+    grid = (pr // block_r, T)
+    C = codebooks.shape[1]
+    SW = syms.shape[1]
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel_v2, n_bits=n_bits, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c // k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, SW), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, T + 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, T), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, C), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pr, pc), jnp.float32),
+        interpret=interpret,
+    )(codes, syms, offs, dbase, codebooks)
+
+
+def icq_dequant_v2(
+    codes: jnp.ndarray,      # (d_out, Wc) uint32
+    syms: jnp.ndarray,       # (d_out, SW) uint32
+    offs: jnp.ndarray,       # (d_out, T+1) uint16
+    dbase: jnp.ndarray,      # (d_out, T) uint8/uint16
+    codebooks: jnp.ndarray,  # (d_out, 2^(n+1))
+    *,
+    n_bits: int,
+    b: int,
+    d_in: int,
+    tile: int,
+    block_r: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pad-on-the-fly v2 wrapper -> (d_out, d_in) f32 reconstruction."""
+    if interpret is None:
+        interpret = default_interpret()
+    d_out = codes.shape[0]
+    k = 32 // n_bits
+    T = offs.shape[1] - 1
+    pc = T * tile
+    br = min(block_r, _round_up(d_out, 8))
+    pr = _round_up(d_out, br)
+    out = dequant_padded_v2(
+        _pad2(codes, pr, pc // k),
+        _pad2(syms, pr, syms.shape[1]),
+        _pad2(offs, pr, offs.shape[1]),
+        _pad2(dbase, pr, dbase.shape[1]),
+        _pad2(codebooks, pr, codebooks.shape[1]),
+        n_bits=n_bits, b=b, block_r=br, interpret=interpret,
+    )
+    return out[:d_out, :d_in]
+
+
 def snap_block_k(d_in: int, lcm: int, block_k: int) -> int:
     """Largest lcm-multiple <= block_k that divides round_up(d_in, lcm).
 
@@ -110,11 +256,20 @@ def snap_block_k(d_in: int, lcm: int, block_k: int) -> int:
     return lcm * t
 
 
-def dequant_blocks(d_out: int, d_in: int, n_bits: int,
-                   block_r: int, block_c: int):
-    """Snap requested blocks to the packing granularities -> (br, bc)."""
+def column_granularity(n_bits: int, fmt: str = "v1") -> int:
+    """Smallest legal column-block unit: code words and (v1 only) bitmap
+    words must block on the same column tiles. v2 has no bitmap, so only
+    the k = 32//n code-packing granularity binds — for n=3 (k=10) that
+    drops the unit from lcm(10, 32)=160 to 10 and lets the checkpoint
+    tile stay large (checkpoint cost scales as 1/tile)."""
     k = 32 // n_bits
-    lcm = (k * 32) // _gcd(k, 32)
+    return k if fmt == "v2" else (k * 32) // _gcd(k, 32)
+
+
+def dequant_blocks(d_out: int, d_in: int, n_bits: int,
+                   block_r: int, block_c: int, fmt: str = "v1"):
+    """Snap requested blocks to the packing granularities -> (br, bc)."""
+    lcm = column_granularity(n_bits, fmt)
     br = min(block_r, _round_up(d_out, 8))
     return br, snap_block_k(d_in, lcm, block_c)
 

@@ -27,10 +27,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.icq_dequant import (
     _codebook_select,
-    _gcd,
+    _decode_block_selector,
     _pad2,
     _round_up,
     _unpack_block,
+    column_granularity,
     snap_block_k,
 )
 from repro.kernels.platform import default_interpret
@@ -95,11 +96,125 @@ def matmul_padded(
     )(x, codes, bitmap, codebooks)
 
 
-def matmul_blocks(M: int, d_out: int, d_in: int, n_bits: int,
-                  block_m: int, block_n: int, block_k: int):
-    """Snap requested blocks to packing/tiling granularities -> (bm, bn, bk)."""
+def _matmul_kernel_v2(x_ref, codes_ref, syms_ref, offs_ref, dbase_ref,
+                      cb_ref, out_ref, acc_ref, *, n_bits: int, b: int,
+                      n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    BK = x_ref.shape[-1]
+    codes = _unpack_block(codes_ref[...], n_bits, BK)          # (BN, BK)
+    sel = _decode_block_selector(
+        syms_ref[...], offs_ref[...], dbase_ref[...], pl.program_id(2),
+        b=b, block_k=BK,
+    )
+    w = _codebook_select(sel * (1 << n_bits) + codes, cb_ref[...])
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w,
+        (((1,), (1,)), ((), ())),                              # x @ w.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "b", "block_m", "block_n", "interpret"),
+)
+def matmul_padded_v2(
+    x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == 0
+    codes: jnp.ndarray,      # (pn, pk // k) uint32, pn % block_n == 0
+    syms: jnp.ndarray,       # (pn, SW) uint32 packed b-bit gap symbols
+    offs: jnp.ndarray,       # (pn, T+1) uint16 tile symbol offsets
+    dbase: jnp.ndarray,      # (pn, T) uint8/uint16 tile base deltas
+    codebooks: jnp.ndarray,  # (pn, C)
+    *,
+    n_bits: int,
+    b: int,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    """v2 fused core over pre-blocked inputs -> (pm, pn) f32 (padded).
+
+    block_k is the checkpoint tile (pk / T from the sidecar shape); the
+    selector never exists as a bitmap in HBM — each K block decodes its
+    own tile of the gap stream in VMEM.
+    """
     k = 32 // n_bits
-    lcm = (k * 32) // _gcd(k, 32)
+    pm, pk = x.shape
+    pn = codes.shape[0]
+    C = codebooks.shape[1]
+    T = offs.shape[1] - 1
+    block_k = pk // T
+    SW = syms.shape[1]
+    grid = (pm // block_m, pn // block_n, T)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel_v2, n_bits=n_bits, b=b, n_k=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k // k), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, SW), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((block_n, T + 1), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((block_n, T), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((block_n, C), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, syms, offs, dbase, codebooks)
+
+
+def icq_matmul_v2(
+    x: jnp.ndarray,          # (M, d_in)
+    codes: jnp.ndarray,      # (d_out, Wc) uint32
+    syms: jnp.ndarray,       # (d_out, SW) uint32
+    offs: jnp.ndarray,       # (d_out, T+1) uint16
+    dbase: jnp.ndarray,      # (d_out, T) uint8/uint16
+    codebooks: jnp.ndarray,  # (d_out, 2^(n+1))
+    *,
+    n_bits: int,
+    b: int,
+    d_in: int,
+    tile: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pad-on-the-fly v2 wrapper -> (M, d_out) f32."""
+    if interpret is None:
+        interpret = default_interpret()
+    M = x.shape[0]
+    d_out = codes.shape[0]
+    k = 32 // n_bits
+    T = offs.shape[1] - 1
+    pk = T * tile
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(d_out, 8))
+    pm, pn = _round_up(M, bm), _round_up(d_out, bn)
+    out = matmul_padded_v2(
+        _pad2(x.astype(jnp.float32), pm, pk),
+        _pad2(codes, pn, pk // k),
+        _pad2(syms, pn, syms.shape[1]),
+        _pad2(offs, pn, offs.shape[1]),
+        _pad2(dbase, pn, dbase.shape[1]),
+        _pad2(codebooks, pn, codebooks.shape[1]),
+        n_bits=n_bits, b=b, block_m=bm, block_n=bn, interpret=interpret,
+    )
+    return out[:M, :d_out]
+
+
+def matmul_blocks(M: int, d_out: int, d_in: int, n_bits: int,
+                  block_m: int, block_n: int, block_k: int,
+                  fmt: str = "v1"):
+    """Snap requested blocks to packing/tiling granularities -> (bm, bn, bk)."""
+    lcm = column_granularity(n_bits, fmt)
     bm = min(block_m, _round_up(M, 8))
     bn = min(block_n, _round_up(d_out, 8))
     return bm, bn, snap_block_k(d_in, lcm, block_k)

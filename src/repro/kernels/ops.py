@@ -1,10 +1,28 @@
 """Jit'd public wrappers around the Pallas kernels + format conversion.
 
-``to_runtime(packed)`` expands an ICQPacked (storage format: n-bit codes
-+ ~0.31 b/w gap stream) into the kernel runtime format (codes + 1-bit
-selector bitmap + flattened dual codebook). The expansion happens once at
+``to_runtime(packed, fmt=...)`` converts an ICQPacked (storage format:
+n-bit codes + ~0.31 b/w gap stream) into a kernel runtime dict. Two
+formats exist; ``runtime_bits_per_weight`` charges every tensor at its
+true stored width (dtype itemsize), so the numbers below are honest HBM
+residency:
+
+  ============  =========================  =======================
+  component     v1 (dense bitmap)          v2 (checkpointed stream)
+  ============  =========================  =======================
+  codes         n bits                     n bits
+  selector      ~1.0 (1-bit bitmap)        ~0.33-0.38 (b-bit symbols,
+                                           word/row padded)
+  checkpoints   —                          ~24/tile (u16 offset +
+                                           u8 base delta per tile)
+  codebooks     2^(n+1) * 32 / d_in        same (16 with bf16 option)
+  ============  =========================  =======================
+
+i.e. v2 serves at ~0.40-0.45 b/w of outlier overhead vs ~1.0 for v1 —
+the paper's index-coding saving carried through to the serving path
+instead of being given back at load time. The expansion happens once at
 model-load time; see kernels/backend.py for the prepared (pre-padded,
-pre-blocked) layout the execution layer serves from.
+pre-blocked) layout the execution layer serves from, and
+``ICQ_RUNTIME_FMT`` for the global format override.
 
 ``interpret`` defaults to None everywhere = platform-autodetected
 (compiled on TPU, interpreter off-TPU; kernels/platform.py) — callers
@@ -16,10 +34,11 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import packing
 from repro.core.icquant import ICQPacked
-from repro.core.index_coding import decode_to_dense_mask
+from repro.core.index_coding import decode_to_dense_mask, stream_checkpoints
 from repro.kernels.backend import (
     ICQPrepared,
     dequantize_prepared,
@@ -27,43 +46,102 @@ from repro.kernels.backend import (
     prepare,
     prepare_tree,
 )
-from repro.kernels.icq_dequant import icq_dequant
-from repro.kernels.icq_matmul import icq_matmul
+from repro.kernels.icq_dequant import (
+    _round_up,
+    column_granularity,
+    icq_dequant,
+    icq_dequant_v2,
+    snap_block_k,
+)
+from repro.kernels.icq_matmul import icq_matmul, icq_matmul_v2
 from repro.kernels.kmeans_assign import kmeans_assign
 
+_CB_DTYPES = {None: jnp.float32, "f32": jnp.float32, "bf16": jnp.bfloat16}
 
-def to_runtime(packed: ICQPacked) -> Dict[str, jnp.ndarray]:
-    """ICQPacked (2-D only) -> kernel runtime tensors."""
+
+def to_runtime(packed: ICQPacked, fmt: str = "v1", *, tile: int = 512,
+               codebook_dtype: Optional[str] = None) -> Dict:
+    """ICQPacked (2-D only) -> kernel runtime tensors.
+
+    fmt='v1': dense 1-bit selector bitmap (legacy bench/test format).
+    fmt='v2': packed b-bit gap symbols + per-``tile`` checkpoints
+              (``tile`` is snapped to the code-packing granularity and
+              becomes the kernels' column block).
+    """
     assert packed.codes.ndim == 2, "expand stacked weights per slice"
-    sel = decode_to_dense_mask(packed.stream).astype(jnp.uint32)
-    bitmap = packing.pack_codes(sel, 1)
-    codebooks = packed.codebooks.reshape(packed.d_out, -1).astype(jnp.float32)
+    if codebook_dtype not in _CB_DTYPES:
+        raise ValueError(
+            f"codebook_dtype must be 'f32' or 'bf16', got {codebook_dtype!r}")
+    codebooks = packed.codebooks.reshape(packed.d_out, -1).astype(
+        _CB_DTYPES[codebook_dtype])
+    common = dict(codes=packed.codes, codebooks=codebooks,
+                  n_bits=packed.n_bits, d_in=packed.d_in)
+    if fmt == "v1":
+        sel = decode_to_dense_mask(packed.stream).astype(jnp.uint32)
+        return dict(common, fmt="v1", bitmap=packing.pack_codes(sel, 1))
+    if fmt != "v2":
+        raise ValueError(f"fmt must be 'v1' or 'v2', got {fmt!r}")
+    tile = snap_block_k(packed.d_in, column_granularity(packed.n_bits, "v2"),
+                        tile)
+    pk = _round_up(packed.d_in, tile)
+    sym_np = np.asarray(jax.device_get(packed.symbols))
+    cnt_np = np.asarray(jax.device_get(packed.counts))
+    offs, dbase = stream_checkpoints(sym_np, cnt_np, packed.b, tile, pk)
     return dict(
-        codes=packed.codes,
-        bitmap=bitmap,
-        codebooks=codebooks,
-        n_bits=packed.n_bits,
-        d_in=packed.d_in,
+        common, fmt="v2",
+        syms=jnp.asarray(packing.pack_symbols_np(sym_np, packed.b)),
+        offs=jnp.asarray(offs),
+        dbase=jnp.asarray(dbase),
+        b=packed.b,
+        tile=tile,
     )
 
 
-def runtime_bits_per_weight(rt: Dict) -> float:
-    """HBM bits per logical weight of the runtime format.
+_TENSOR_KEYS = ("codes", "bitmap", "syms", "offs", "dbase", "codebooks")
 
-    Codebook entries are charged at their true stored width (``to_runtime``
-    casts codebooks to f32, i.e. 32 bits/entry — not the bf16 width of the
-    storage format).
-    """
+
+def runtime_bits_per_weight(rt: Dict) -> float:
+    """HBM bits per logical weight of a runtime dict.
+
+    Every tensor is charged at its true stored width (dtype itemsize *
+    8), so uint32 code/bitmap words, uint16/uint8 checkpoint sidecars
+    and f32-vs-bf16 codebooks all bill honestly."""
     d_out = rt["codes"].shape[0]
-    cb_bits = jnp.dtype(rt["codebooks"].dtype).itemsize * 8
-    total = (
-        rt["codes"].size * 32 + rt["bitmap"].size * 32
-        + rt["codebooks"].size * cb_bits
+    total = sum(
+        rt[k].size * jnp.dtype(rt[k].dtype).itemsize * 8
+        for k in _TENSOR_KEYS if rt.get(k) is not None
     )
     return total / (d_out * rt["d_in"])
 
 
+def runtime_outlier_bits_per_weight(rt: Dict) -> float:
+    """Bits/weight spent on outlier *selection* (bitmap, or stream +
+    checkpoints) — the overhead the paper's ~0.3 b/w result bounds."""
+    d_out = rt["codes"].shape[0]
+    total = sum(
+        rt[k].size * jnp.dtype(rt[k].dtype).itemsize * 8
+        for k in ("bitmap", "syms", "offs", "dbase") if rt.get(k) is not None
+    )
+    return total / (d_out * rt["d_in"])
+
+
+def _check_blocks(blocks: Dict, allowed: tuple, fmt: str) -> None:
+    bad = set(blocks) - set(allowed)
+    if bad:
+        raise TypeError(
+            f"block kwargs {sorted(bad)} do not apply to the {fmt} runtime "
+            f"format (its column block is the checkpoint tile); "
+            f"allowed: {sorted(allowed)}")
+
+
 def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
+    if rt.get("fmt", "v1") == "v2":
+        _check_blocks(blocks, ("block_r",), "v2")
+        return icq_dequant_v2(
+            rt["codes"], rt["syms"], rt["offs"], rt["dbase"], rt["codebooks"],
+            n_bits=rt["n_bits"], b=rt["b"], d_in=rt["d_in"], tile=rt["tile"],
+            interpret=interpret, **blocks,
+        )
     return icq_dequant(
         rt["codes"], rt["bitmap"], rt["codebooks"],
         n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
@@ -71,12 +149,21 @@ def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray
 
 
 def matmul(x, rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
+    if rt.get("fmt", "v1") == "v2":
+        _check_blocks(blocks, ("block_m", "block_n"), "v2")
+        return icq_matmul_v2(
+            x, rt["codes"], rt["syms"], rt["offs"], rt["dbase"],
+            rt["codebooks"],
+            n_bits=rt["n_bits"], b=rt["b"], d_in=rt["d_in"], tile=rt["tile"],
+            interpret=interpret, **blocks,
+        )
     return icq_matmul(
         x, rt["codes"], rt["bitmap"], rt["codebooks"],
         n_bits=rt["n_bits"], d_in=rt["d_in"], interpret=interpret, **blocks
     )
 
 
-__all__ = ["to_runtime", "runtime_bits_per_weight", "dequant", "matmul",
+__all__ = ["to_runtime", "runtime_bits_per_weight",
+           "runtime_outlier_bits_per_weight", "dequant", "matmul",
            "kmeans_assign", "ICQPrepared", "prepare", "prepare_tree",
            "dequantize_prepared", "linear_apply"]

@@ -16,6 +16,10 @@ Central policy knob for every Pallas entry point in this package:
   * ``decode_m_threshold()`` — largest M routed to the fused
     dequant+matmul kernel; bigger batches dequantize once per call and
     ride the dense MXU matmul. ``ICQ_DECODE_M`` overrides.
+  * ``default_runtime_fmt()`` — prepared-weight runtime format:
+    'v2' (checkpointed gap stream, ~0.3-0.45 b/w outlier overhead) by
+    default, 'v1' (dense 1-bit selector bitmap, ~1 b/w) as the
+    bitwise-parity fallback. ``ICQ_RUNTIME_FMT=v1|v2`` overrides.
 """
 from __future__ import annotations
 
@@ -59,6 +63,18 @@ def default_backend() -> str:
             raise ValueError(f"ICQ_BACKEND must be 'pallas' or 'xla', got {env!r}")
         return env
     return "pallas" if detected_platform() == "tpu" else "xla"
+
+
+def default_runtime_fmt() -> str:
+    """'v2' checkpointed-stream runtime unless ICQ_RUNTIME_FMT says 'v1'."""
+    env = os.environ.get("ICQ_RUNTIME_FMT")
+    if env:  # set-but-empty means unset
+        env = env.lower()
+        if env not in ("v1", "v2"):
+            raise ValueError(
+                f"ICQ_RUNTIME_FMT must be 'v1' or 'v2', got {env!r}")
+        return env
+    return "v2"
 
 
 def decode_m_threshold() -> int:

@@ -31,6 +31,11 @@ def main():
                     help="load-time ICQ weight conversion: 'prepared' = "
                          "kernel dispatch layout, 'dense' = dequant-once "
                          "cache, 'none' = reference in-graph decode")
+    ap.add_argument("--runtime-fmt", default=None, choices=["v1", "v2"],
+                    help="prepared runtime format: 'v2' checkpointed gap "
+                         "stream (~0.3-0.45 b/w outlier overhead, default) "
+                         "or 'v1' dense selector bitmap (~1 b/w); default "
+                         "follows ICQ_RUNTIME_FMT / platform policy")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -45,7 +50,8 @@ def main():
         print(f"[serve] quantized to {acct['mean_bits']:.2f} bits/weight")
 
     engine = GenerationEngine(params, cfg, batch_size=args.batch, max_len=64,
-                              weight_cache=args.weight_cache)
+                              weight_cache=args.weight_cache,
+                              runtime_fmt=args.runtime_fmt)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))

@@ -168,8 +168,13 @@ def prepare_serving_params(params, mode: str = "prepared", **prepare_kw):
 
     mode:
       'prepared' — ICQPacked/ICQRuntime leaves -> ICQPrepared (kernel
-                   execution layer; gap-stream decode + padding happen
-                   exactly once, never inside the jitted step).
+                   execution layer; padding + checkpoint/bitmap build
+                   happen exactly once, never inside the jitted step).
+                   Extra ``prepare_kw`` reach ``backend.prepare`` —
+                   notably ``fmt='v1'|'v2'`` (runtime format; default is
+                   the platform's, normally the v2 checkpointed gap
+                   stream at ~0.3-0.45 b/w outlier overhead) and
+                   ``codebook_dtype='f32'|'bf16'``.
       'dense'    — dequantize-once weight cache: leaves materialize to
                    dense (d_in, d_out) arrays at load time, so
                    prefill-heavy waves never redecode per step (costs

@@ -21,10 +21,13 @@ Quantized weights are converted ONCE at engine construction
 (``weight_cache='prepared'``, the default): ICQPacked storage weights
 become pre-padded ICQPrepared layouts, so the per-step jitted program
 routes every matmul through the kernel-backed dispatch layer
-(kernels/backend.py) with no gap-stream decode or full ``dequantize()``
-in the hot path. ``weight_cache='dense'`` instead materializes dense
-weights once (dequant-once cache for prefill-heavy waves on HBM-rich
-hosts); ``weight_cache='none'`` keeps the reference in-graph decode.
+(kernels/backend.py). ``runtime_fmt`` picks the prepared runtime format
+(None = platform default, normally 'v2' — the checkpointed gap-stream
+layout serving at ~0.3-0.45 b/w outlier overhead, with kernels decoding
+selector tiles in VMEM; 'v1' = dense-bitmap fallback at ~1 b/w).
+``weight_cache='dense'`` instead materializes dense weights once
+(dequant-once cache for prefill-heavy waves on HBM-rich hosts);
+``weight_cache='none'`` keeps the reference in-graph decode.
 """
 from __future__ import annotations
 
@@ -51,8 +54,10 @@ class Request:
 
 class GenerationEngine:
     def __init__(self, params, cfg, batch_size: int, max_len: int,
-                 weight_cache: str = "prepared"):
-        self.params = prepare_serving_params(params, mode=weight_cache)
+                 weight_cache: str = "prepared",
+                 runtime_fmt: Optional[str] = None):
+        kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
+        self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len

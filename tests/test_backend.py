@@ -80,14 +80,30 @@ def test_kernel_interpret_default_platform_and_env(monkeypatch):
 
 def test_kernel_prepared_layout_blocked_and_padded():
     pk = _pack(48, 330, 3)
-    prep = backend.prepare(pk, backend="pallas")
     k = 32 // 3
+
+    prep = backend.prepare(pk, backend="pallas", fmt="v1")
+    assert prep.fmt == "v1" and prep.syms is None
     assert prep.codes.shape[-2] % prep.block_n == 0
     assert prep.codes.shape[-1] * k % prep.block_k == 0
     assert prep.bitmap.shape[-1] * 32 == prep.codes.shape[-1] * k
     assert prep.codes.shape[-2] >= prep.d_out
     # padding accounted in the HBM bits (and still far under bf16)
     assert prep.bits_per_weight() < 16
+
+    prep2 = backend.prepare(pk, backend="pallas", fmt="v2")
+    assert prep2.fmt == "v2" and prep2.bitmap is None
+    assert prep2.b == pk.b
+    pk_cols = prep2.codes.shape[-1] * k
+    assert pk_cols % prep2.block_k == 0
+    # checkpoint sidecar blocked to block_k: one offset per tile + sentinel
+    T = pk_cols // prep2.block_k
+    assert prep2.offs.shape == (prep2.codes.shape[-2], T + 1)
+    assert prep2.dbase.shape == (prep2.codes.shape[-2], T)
+    assert prep2.offs.dtype == jnp.uint16
+    assert prep2.dbase.dtype == jnp.uint8          # b = 6 <= 8
+    # v2 serves cheaper than the dense bitmap for the same weight
+    assert prep2.bits_per_weight() < prep.bits_per_weight()
 
 
 def test_kernel_prepare_accepts_runtime_and_dict():
@@ -194,13 +210,178 @@ def test_kernel_prepare_consults_autotune_cache(tmp_path, monkeypatch):
     # n=3 -> lcm(k=10, 32)=160, padded d_in=480: block_k=480 survives the
     # padding-minimizing snap (snap_block_k) unchanged
     autotune.record(key, [64, 32, 480])
-    prep = backend.prepare(pk, backend="pallas")
+    prep = backend.prepare(pk, backend="pallas", fmt="v1")
     assert (prep.block_m, prep.block_n, prep.block_k) == (64, 32, 480)
     # a cached block_k that would inflate padding gets snapped down
     autotune.record(key, [64, 32, 320])
-    prep2 = backend.prepare(pk, backend="pallas")
+    prep2 = backend.prepare(pk, backend="pallas", fmt="v1")
     assert prep2.block_k == 160 and prep2.codes.shape[-1] * 10 == 480
+
+    # v2 tunes under its own key (bitmap-free column granularity = k):
+    # requesting 320 snaps to the largest divisor of 330/10=33 tiles -> 110
+    key2 = autotune.matmul_key(1, 48, 330, 3, "pallas", default_interpret(),
+                               fmt="v2")
+    assert key2 != key and key2.endswith("_v2")
+    autotune.record(key2, [64, 32, 320])
+    prep3 = backend.prepare(pk, backend="pallas", fmt="v2")
+    assert prep3.block_k == 110 and prep3.offs.shape[-1] == 330 // 110 + 1
     autotune.reset()
+
+
+def test_kernel_autotune_corrupted_cache_falls_back(tmp_path, monkeypatch):
+    """A corrupted / partial cache file must mean 'sweep', never a crash."""
+    cache = tmp_path / "tune.json"
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(cache))
+    for garbage in ('{"matmul/m1_o16_i96_n4_pallas-int": [8, 16', "not json",
+                    ""):
+        cache.write_text(garbage)
+        autotune.reset()
+        assert autotune.lookup("matmul/m1_o16_i96_n4_pallas-int") is None
+        got = autotune.autotune_matmul(
+            1, 16, 96, 4, interpret=True,
+            candidates=[(8, 16, 96)], iters=1)
+        assert not got["cached"] and got["blocks"] == (8, 16, 96)
+        # the sweep rewrote a valid cache file over the garbage
+        assert json.loads(cache.read_text())
+    autotune.reset()
+
+
+def test_kernel_autotune_v2_sweep_and_key(tmp_path, monkeypatch):
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    autotune.reset()
+    got = autotune.autotune_matmul(
+        1, 16, 96, 4, interpret=True, fmt="v2",
+        candidates=[(8, 16, 96), (8, 8, 96)], iters=1)
+    assert not got["cached"]
+    key = autotune.matmul_key(1, 16, 96, 4, "pallas", True, fmt="v2")
+    assert autotune.lookup(key) == list(got["blocks"])
+    # the v1 spelling of the same shape is a distinct cache entry
+    assert autotune.lookup(
+        autotune.matmul_key(1, 16, 96, 4, "pallas", True)) is None
+    autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# v2 checkpointed-stream runtime format
+# ---------------------------------------------------------------------------
+
+def test_kernel_runtime_fmt_env_override(monkeypatch):
+    from repro.kernels.platform import default_runtime_fmt
+
+    monkeypatch.delenv("ICQ_RUNTIME_FMT", raising=False)
+    assert default_runtime_fmt() == "v2"
+    pk = _pack()
+    assert backend.prepare(pk).fmt == "v2"
+    monkeypatch.setenv("ICQ_RUNTIME_FMT", "v1")
+    assert default_runtime_fmt() == "v1"
+    assert backend.prepare(pk).fmt == "v1"
+    monkeypatch.setenv("ICQ_RUNTIME_FMT", "v3")
+    with pytest.raises(ValueError):
+        default_runtime_fmt()
+
+
+def test_kernel_prepare_v2_falls_back_for_bitmap_sources():
+    """ICQRuntime / v1 dicts carry no gap stream: prepare(fmt='v2') keeps
+    serving them as v1 instead of failing."""
+    pk = _pack()
+    for src in (to_runtime_format(pk), ops.to_runtime(pk, fmt="v1")):
+        prep = backend.prepare(src, fmt="v2")
+        assert prep.fmt == "v1" and prep.bitmap is not None
+
+
+def test_kernel_prepare_accepts_v2_dict():
+    pk = _pack()
+    rt = ops.to_runtime(pk, fmt="v2", tile=128)
+    prep = backend.prepare(rt)
+    assert prep.fmt == "v2"
+    assert prep.block_k == rt["tile"]       # checkpoint tile is binding
+    np.testing.assert_array_equal(
+        np.asarray(backend.dequantize_prepared(prep)),
+        np.asarray(core.dequantize(pk)))
+    with pytest.raises(ValueError):
+        backend.prepare(rt, fmt="v1")       # bitmap never materialized
+
+
+def test_kernel_codebook_dtype_bf16():
+    """Satellite: bf16 codebook option halves the codebook HBM charge;
+    dequant error stays within bf16 rounding of the f32 levels."""
+    pk = _pack(64, 512, 4)
+    w32 = np.asarray(core.dequantize(pk))
+    for fmt in ("v1", "v2"):
+        p32 = backend.prepare(pk, fmt=fmt, codebook_dtype="f32")
+        p16 = backend.prepare(pk, fmt=fmt, codebook_dtype="bf16")
+        assert p16.codebooks.dtype == jnp.bfloat16
+        cb_elems = p32.codebooks.size
+        want_saving = cb_elems * 16 / (64 * 512)
+        got_saving = p32.bits_per_weight() - p16.bits_per_weight()
+        assert got_saving == pytest.approx(want_saving, rel=1e-6)
+        w16 = np.asarray(backend.dequantize_prepared(p16), np.float32)
+        np.testing.assert_allclose(w16, w32, rtol=8e-3, atol=8e-3)
+    with pytest.raises(ValueError):
+        backend.prepare(pk, codebook_dtype="f64")
+
+
+def test_kernel_vmem_budget_clamps_blocks(monkeypatch):
+    """Satellite: block candidates whose one-hot temp + accumulator bust
+    the VMEM budget are clamped in prepare() before any compiler sees
+    them (n_bits=8 -> C=512 makes the default blocks cost >100 MB)."""
+    pk = _pack(64, 512, 8)
+    prep = backend.prepare(pk, backend="pallas", fmt="v1")
+    C = prep.codebooks.shape[-1]
+    assert C == 512
+    est = backend.vmem_bytes_estimate(
+        prep.block_m, prep.block_n, prep.block_k, n_bits=8, C=C, fmt="v1")
+    assert est <= backend.vmem_budget_bytes()
+    assert (prep.block_n, prep.block_k) != backend.DEFAULT_BLOCKS[1:]
+    # a tighter explicit budget clamps harder
+    monkeypatch.setenv("ICQ_VMEM_BUDGET_MB", "2")
+    tight = backend.prepare(pk, backend="pallas", fmt="v1")
+    est2 = backend.vmem_bytes_estimate(
+        tight.block_m, tight.block_n, tight.block_k, n_bits=8, C=C, fmt="v1")
+    assert est2 <= 2 * 2**20 or (tight.block_n == 8 and tight.block_m == 8)
+    # parity survives clamping
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((3, 512)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(backend.linear_apply(x, tight)),
+        np.asarray(x @ core.dequantize(pk).T), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_bits", [2, 3, 4])
+def test_kernel_v2_outlier_overhead_bench_configs(n_bits):
+    """Acceptance: on the bench geometry the v2 runtime pays <= 0.45 b/w
+    for outlier selection (stream + checkpoints + padding) where the v1
+    bitmap pays ~1.0 — measured by runtime_bits_per_weight accounting."""
+    pk = _pack(512, 2048, n_bits, seed=n_bits)
+    rt1 = ops.to_runtime(pk, fmt="v1")
+    rt2 = ops.to_runtime(pk, fmt="v2")
+    over1 = ops.runtime_outlier_bits_per_weight(rt1)
+    over2 = ops.runtime_outlier_bits_per_weight(rt2)
+    assert over1 >= 1.0                       # dense 1-bit selector
+    assert over2 <= 0.45, (n_bits, over2)     # checkpointed stream
+    # total runtime bits drop by the same margin
+    assert ops.runtime_bits_per_weight(rt1) - ops.runtime_bits_per_weight(
+        rt2) == pytest.approx(over1 - over2, rel=1e-6)
+    # and stay within ~0.15 b/w of the storage stream itself
+    assert over2 <= pk.bits_per_weight()["index"] + 0.15
+
+
+def test_kernel_runtime_bits_itemsize_derived():
+    """Satellite: accounting derives widths from itemsize — the uint16
+    offsets and uint8 deltas of the v2 sidecar bill at 16/8 bits, not a
+    hardcoded 32."""
+    pk = _pack(64, 512, 4)
+    rt = ops.to_runtime(pk, fmt="v2")
+    total_w = 64 * 512
+    want = (
+        rt["codes"].size * 32 + rt["syms"].size * 32
+        + rt["offs"].size * 16 + rt["dbase"].size * 8
+        + rt["codebooks"].size * 32
+    ) / total_w
+    assert ops.runtime_bits_per_weight(rt) == pytest.approx(want, rel=1e-9)
+    rt16 = ops.to_runtime(pk, fmt="v2", codebook_dtype="bf16")
+    assert ops.runtime_bits_per_weight(rt) - ops.runtime_bits_per_weight(
+        rt16) == pytest.approx(rt["codebooks"].size * 16 / total_w, rel=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +391,8 @@ def test_kernel_prepare_consults_autotune_cache(tmp_path, monkeypatch):
 def test_kernel_engine_prepared_token_parity():
     """GenerationEngine decode with ICQ weights goes through the prepared
     dispatch layer (no full dequantize() in the per-step hot path) and
-    generates IDENTICAL tokens to the reference in-graph-decode path."""
+    generates IDENTICAL tokens to the reference in-graph-decode path —
+    for both the v1 bitmap and the v2 checkpointed-stream formats."""
     from repro.configs import get_config, smoke_variant
     from repro.models import init_model
     from repro.serving import GenerationEngine, Request
@@ -223,13 +405,19 @@ def test_kernel_engine_prepared_token_parity():
 
     e_ref = GenerationEngine(qparams, cfg, batch_size=1, max_len=24,
                              weight_cache="none")
-    e_prep = GenerationEngine(qparams, cfg, batch_size=1, max_len=24)
-    assert any(
-        isinstance(w, backend.ICQPrepared)
-        for w in jax.tree.leaves(
-            e_prep.params,
-            is_leaf=lambda x: isinstance(x, backend.ICQPrepared))
-    ), "engine did not prepare ICQ weights"
-    for e in (e_ref, e_prep):
-        e.submit(Request(0, prompt, max_new_tokens=4))
-    assert e_prep.run()[0].generated == e_ref.run()[0].generated
+    e_ref.submit(Request(0, prompt, max_new_tokens=4))
+    ref_tokens = e_ref.run()[0].generated
+
+    for fmt in ("v1", "v2"):
+        e_prep = GenerationEngine(qparams, cfg, batch_size=1, max_len=24,
+                                  runtime_fmt=fmt)
+        leaves = [
+            w for w in jax.tree.leaves(
+                e_prep.params,
+                is_leaf=lambda x: isinstance(x, backend.ICQPrepared))
+            if isinstance(w, backend.ICQPrepared)
+        ]
+        assert leaves, "engine did not prepare ICQ weights"
+        assert all(w.fmt == fmt for w in leaves)
+        e_prep.submit(Request(0, prompt, max_new_tokens=4))
+        assert e_prep.run()[0].generated == ref_tokens, fmt

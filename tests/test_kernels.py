@@ -99,6 +99,99 @@ def test_dispatch_xla_arm_bitwise_equals_reference():
         np.asarray(backend.linear_apply(x, prep)), y_ref)
 
 
+@pytest.mark.parametrize("n_bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(16, 96), (48, 330), (64, 512)])
+def test_dequant_kernel_v2_matches_ref(n_bits, shape):
+    """v2 in-kernel gap->selector decode ≍ the core reconstruction."""
+    R, C = shape
+    W = heavy_tailed_weights(R, C, seed=n_bits * 100 + R)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    rt = ops.to_runtime(pk, fmt="v2", tile=128)
+    w_k = ops.dequant(rt, block_r=32)
+    np.testing.assert_array_equal(
+        np.asarray(w_k), np.asarray(core.dequantize(pk)))
+    # v2's column block is the checkpoint tile: a block_c request is a
+    # caller error, not something to silently ignore
+    with pytest.raises(TypeError):
+        ops.dequant(rt, block_c=64)
+
+
+@pytest.mark.parametrize("n_bits", [2, 3, 4])
+@pytest.mark.parametrize("M", [1, 8, 33])
+def test_matmul_kernel_v2_matches_ref(n_bits, M):
+    R, C = 64, 512
+    W = heavy_tailed_weights(R, C, seed=7)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    rt = ops.to_runtime(pk, fmt="v2", tile=256)
+    x = jnp.asarray(
+        np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
+    y_ref = x.astype(jnp.float32) @ core.dequantize(pk).T
+    y_k = ops.matmul(x, rt, block_m=16, block_n=32)
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_bits", [2, 4])
+@pytest.mark.parametrize("M", [1, 300])     # fused arm, dequant arm
+def test_v1_v2_bitwise_parity_both_arms(n_bits, M):
+    """Acceptance: with identical blocking geometry the v2 stream decode
+    must be bit-identical to the v1 bitmap path on BOTH dispatch arms
+    (same selector -> same gathered weights -> same f32 accumulation)."""
+    R, C = 64, 512                           # aligned: v1/v2 snap equally
+    pk = core.quantize(
+        jnp.asarray(heavy_tailed_weights(R, C, seed=n_bits)), n_bits,
+        gamma=0.05)
+    blocks = (16, 32, 256)
+    p1 = backend.prepare(pk, backend="pallas", fmt="v1", blocks=blocks)
+    p2 = backend.prepare(pk, backend="pallas", fmt="v2", blocks=blocks)
+    assert (p1.block_n, p1.block_k) == (p2.block_n, p2.block_k)
+    np.testing.assert_array_equal(
+        np.asarray(backend.dequantize_prepared(p1)),
+        np.asarray(backend.dequantize_prepared(p2)))
+    from repro.kernels.platform import decode_m_threshold
+    want = "fused" if M <= decode_m_threshold() else "dequant"
+    assert backend.choose_path(M, p1) == want
+    x = jnp.asarray(
+        np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(backend.linear_apply(x, p1)),
+        np.asarray(backend.linear_apply(x, p2)))
+
+
+@pytest.mark.parametrize("fmt", ["v1", "v2"])
+def test_dispatch_xla_arm_bitwise_equals_reference_both_fmts(fmt):
+    """The pure-XLA arm must reproduce the reference dequantize path
+    bit-for-bit in either runtime format (token-parity guarantee): the
+    v2 checkpoint decode yields the exact selector the stream encodes."""
+    W = heavy_tailed_weights(48, 330, seed=3)
+    pk = core.quantize(jnp.asarray(W), 3, gamma=0.05)
+    prep = backend.prepare(pk, backend="xla", fmt=fmt)
+    assert prep.fmt == fmt
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 5, 330)), jnp.float32)
+    y_ref = np.asarray(x @ core.dequantize(pk).T)
+    np.testing.assert_array_equal(
+        np.asarray(backend.linear_apply(x, prep)), y_ref)
+
+
+@pytest.mark.parametrize("n_bits", [2, 3])
+@pytest.mark.parametrize("M", [1, 300])
+def test_dispatch_parity_v2_ragged(n_bits, M):
+    """v2 pallas arms on a ragged shape (block lcm does not divide d_in)
+    still match the reference to f32-accumulation tolerance."""
+    R, C = 48, 330
+    pk = core.quantize(
+        jnp.asarray(heavy_tailed_weights(R, C, seed=n_bits * 10 + R)),
+        n_bits, gamma=0.05)
+    prep = backend.prepare(pk, backend="pallas", fmt="v2")
+    x = jnp.asarray(
+        np.random.default_rng(M).standard_normal((M, C)), jnp.float32)
+    y_ref = np.asarray(x @ core.dequantize(pk).T)
+    np.testing.assert_allclose(
+        np.asarray(backend.linear_apply(x, prep)), y_ref,
+        rtol=2e-5, atol=2e-5)
+
+
 def test_runtime_format_bits():
     """Runtime overlay = n + 1 + codebooks bits; storage = n + ~0.31."""
     W = heavy_tailed_weights(256, 4096, seed=9)
@@ -122,4 +215,25 @@ def test_matmul_kernel_lowers_for_tpu():
         lambda xx, cc, bb, kk: ops.matmul(xx, dict(rt, codes=cc, bitmap=bb,
                                                    codebooks=kk)),
         x, rt["codes"], rt["bitmap"], rt["codebooks"],
+    )
+
+
+def test_v2_kernels_lower_for_tpu():
+    """Same Python-level lowering check for the v2 stream-decode kernels
+    (dynamic checkpoint slices, chunked selector compare)."""
+    W = heavy_tailed_weights(64, 512, seed=10)
+    pk = core.quantize(jnp.asarray(W), 4, gamma=0.05)
+    rt = ops.to_runtime(pk, fmt="v2")
+    x = jnp.zeros((8, 512), jnp.float32)
+    jax.eval_shape(
+        lambda xx, cc, ss, oo, dd, kk: ops.matmul(
+            xx, dict(rt, codes=cc, syms=ss, offs=oo, dbase=dd,
+                     codebooks=kk)),
+        x, rt["codes"], rt["syms"], rt["offs"], rt["dbase"],
+        rt["codebooks"],
+    )
+    jax.eval_shape(
+        lambda cc, ss, oo, dd, kk: ops.dequant(
+            dict(rt, codes=cc, syms=ss, offs=oo, dbase=dd, codebooks=kk)),
+        rt["codes"], rt["syms"], rt["offs"], rt["dbase"], rt["codebooks"],
     )

@@ -1,0 +1,124 @@
+"""v2 checkpoint sidecar: encode-time invariants + jnp decode parity.
+
+(Separate from test_index_coding.py so it runs without hypothesis.)
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.index_coding import (
+    decode_stream,
+    decode_to_dense_mask,
+    encode_positions,
+    selector_from_checkpoints,
+    stream_checkpoints,
+)
+from repro.core.packing import pack_symbols_np, symbol_cols, unpack_codes
+
+
+def _random_stream(rows=16, d_in=1024, p=51, b=6, seed=0):
+    rng = np.random.default_rng(seed)
+    positions = np.sort(
+        np.stack([rng.choice(d_in, p, replace=False) for _ in range(rows)]),
+        axis=-1,
+    )
+    return encode_positions(positions, d_in, b), positions
+
+
+def test_checkpoints_offsets_partition_the_stream():
+    stream, _ = _random_stream()
+    sym = np.asarray(jax.device_get(stream.symbols))
+    cnt = np.asarray(jax.device_get(stream.counts))
+    tile = 256
+    offs, dbase = stream_checkpoints(sym, cnt, stream.b, tile, stream.d_in)
+    T = stream.d_in // tile
+    assert offs.shape == (sym.shape[0], T + 1)
+    assert dbase.shape == (sym.shape[0], T)
+    assert offs.dtype == np.uint16 and dbase.dtype == np.uint8
+    # offsets are monotone and the sentinel is the per-row symbol count
+    assert (np.diff(offs.astype(np.int64), axis=1) >= 0).all()
+    np.testing.assert_array_equal(offs[:, -1].astype(np.int64), cnt)
+    np.testing.assert_array_equal(offs[:, 0], 0)
+    # the base delta fits in b bits (that is what makes it a uint8)
+    assert int(dbase.max()) < (1 << stream.b) - 1
+    # each tile's run covers exactly the symbols whose decoded position
+    # lands in the tile
+    pos, mask = map(np.asarray, jax.device_get(decode_stream(stream)))
+    for r in range(sym.shape[0]):
+        for t in range(T):
+            lo, hi = t * tile, (t + 1) * tile
+            run = slice(int(offs[r, t]), int(offs[r, t + 1]))
+            in_run = pos[r, run][mask[r, run]]
+            want = pos[r, mask[r]][(pos[r, mask[r]] >= lo)
+                                   & (pos[r, mask[r]] < hi)]
+            np.testing.assert_array_equal(np.sort(in_run), np.sort(want))
+
+
+def test_checkpoint_jnp_decode_matches_dense_mask():
+    """selector_from_checkpoints (the XLA-arm / kernel-mirror math)
+    reproduces the reference dense decode bit-for-bit, including when
+    the tiled range is padded past d_in."""
+    for seed, tile in ((0, 128), (1, 256), (2, 512)):
+        stream, positions = _random_stream(seed=seed)
+        sym = np.asarray(jax.device_get(stream.symbols))
+        cnt = np.asarray(jax.device_get(stream.counts))
+        total = -(-stream.d_in // tile) * tile + tile   # extra empty tile
+        offs, dbase = stream_checkpoints(sym, cnt, stream.b, tile, total)
+        words = pack_symbols_np(sym, stream.b)
+        S = symbol_cols(words.shape[-1], stream.b)
+        sym_cols = unpack_codes(
+            jnp.asarray(words), stream.b, S).astype(jnp.int32)
+        sel = selector_from_checkpoints(
+            sym_cols, jnp.asarray(offs), jnp.asarray(dbase),
+            b=stream.b, tile=tile, out_len=stream.d_in)
+        ref = np.asarray(decode_to_dense_mask(stream)).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(sel), ref)
+        # and the selector marks exactly the encoded positions
+        np.testing.assert_array_equal(
+            np.nonzero(np.asarray(sel))[1].reshape(positions.shape),
+            positions)
+
+
+def test_checkpoints_empty_rows_and_tiles():
+    """Rows whose outliers all sit in one tile leave the other tiles'
+    runs empty; all-zero sidecars decode to an all-zero selector."""
+    d_in, b, tile = 512, 5, 128
+    positions = np.array([[0, 1, 2], [509, 510, 511]])
+    stream = encode_positions(positions, d_in, b)
+    sym = np.asarray(jax.device_get(stream.symbols))
+    cnt = np.asarray(jax.device_get(stream.counts))
+    offs, dbase = stream_checkpoints(sym, cnt, b, tile, d_in)
+    # row 0: everything decodes in tile 0, rows of trailing tiles empty
+    assert offs[0, 1] == offs[0, -1]
+    # row 1: tiles 0..2 empty, all symbols belong to the last tile
+    assert offs[1, 3] == 0 or (offs[1, 3] <= offs[1, 4])
+    words = pack_symbols_np(sym, b)
+    S = symbol_cols(words.shape[-1], b)
+    sel = selector_from_checkpoints(
+        unpack_codes(jnp.asarray(words), b, S).astype(jnp.int32),
+        jnp.asarray(offs), jnp.asarray(dbase), b=b, tile=tile, out_len=d_in)
+    np.testing.assert_array_equal(
+        np.asarray(decode_to_dense_mask(stream)).astype(np.int32),
+        np.asarray(sel))
+    # zero sidecar (padded rows in the prepared layout) -> zero selector
+    z = selector_from_checkpoints(
+        jnp.zeros((2, S), jnp.int32),
+        jnp.zeros((2, offs.shape[1]), jnp.uint16),
+        jnp.zeros((2, dbase.shape[1]), jnp.uint8),
+        b=b, tile=tile, out_len=d_in)
+    assert int(np.asarray(z).sum()) == 0
+
+
+def test_pack_symbols_roundtrip_and_empty():
+    rng = np.random.default_rng(4)
+    for b in (4, 5, 6, 8):
+        syms = rng.integers(0, 1 << b, size=(7, 53), dtype=np.uint16)
+        words = pack_symbols_np(syms, b)
+        assert words.dtype == np.uint32
+        S = symbol_cols(words.shape[-1], b)
+        assert S >= 53
+        out = np.asarray(unpack_codes(jnp.asarray(words), b, 53))
+        np.testing.assert_array_equal(out, syms)
+    # zero-width streams still produce one word so block shapes hold
+    empty = pack_symbols_np(np.zeros((3, 0), np.uint16), 6)
+    assert empty.shape == (3, 1) and not empty.any()
