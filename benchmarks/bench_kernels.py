@@ -104,13 +104,23 @@ def run() -> dict:
     out["pallas_micro"] = {}
     out["autotune"] = {}
     for fmt in ("v1", "v2"):
-        tuned = autotune.autotune_matmul(DECODE_M, r2, c2, 4, iters=1,
-                                         fmt=fmt)
+        # full per-arm table: decode M=1 + prefill-M buckets (fused arm)
+        # + the M-free dequant arm, all consulted by backend.arm_blocks.
+        # Interpret-mode sweeps are slow, so the bench tunes only the
+        # first prefill bucket; on real TPU drop prefill_ms to tune all.
+        arms = autotune.autotune_arms(
+            r2, c2, 4, iters=1, fmt=fmt,
+            prefill_ms=autotune.PREFILL_MS[:1] if default_interpret()
+            else autotune.PREFILL_MS)
+        tuned = arms["decode"]
         out["autotune"][fmt] = dict(
             key=autotune.matmul_key(DECODE_M, r2, c2, 4, "pallas",
                                     default_interpret(), fmt=fmt),
             blocks=list(tuned["blocks"]),
             cached=tuned["cached"],
+            prefill_blocks={m: list(t["blocks"])
+                            for m, t in arms["prefill"].items()},
+            dequant_blocks=list(arms["dequant"]["blocks"]),
             cache_file=autotune.cache_path(),
         )
         prep2 = backend.prepare(pk2, backend="pallas", fmt=fmt,

@@ -2,11 +2,13 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 
-Output contract: ``name,us_per_call,derived`` CSV lines. The kernels
-module additionally dumps its structured result to ``BENCH_kernels.json``
-(tokens/s + bits/weight, reference vs fused dispatch path) so the perf
-trajectory is tracked across PRs; block-autotuner winners land in the
-shared JSON cache (``ICQ_AUTOTUNE_CACHE``) and are reused on re-runs.
+Output contract: ``name,us_per_call,derived`` CSV lines. The kernels and
+serving modules additionally dump structured results to
+``BENCH_kernels.json`` (tokens/s + bits/weight, reference vs fused
+dispatch path) and ``BENCH_serving.json`` (continuous-batching vs legacy
+wave engine throughput) so the perf trajectory is tracked across PRs;
+block-autotuner winners land in the shared JSON cache
+(``ICQ_AUTOTUNE_CACHE``) and are reused on re-runs.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import sys
 import traceback
 
 # modules whose run() result is archived as BENCH_<name>.json
-JSON_MODULES = {"kernels"}
+JSON_MODULES = {"kernels", "serving"}
 
 MODULES = [
     ("outlier_range", "benchmarks.bench_outlier_range"),    # Fig 1/6
@@ -25,6 +27,7 @@ MODULES = [
     ("suppression", "benchmarks.bench_suppression"),        # Fig 5
     ("e2e_quality", "benchmarks.bench_e2e_quality"),        # Tab 2-4 proxy
     ("kernels", "benchmarks.bench_kernels"),                # deployment
+    ("serving", "benchmarks.bench_serving"),                # continuous vs wave
     ("roofline", "benchmarks.bench_roofline"),              # §Roofline
 ]
 

@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/serve_quantized.py [--bits 3]
 
 Trains briefly, quantizes, then pushes a queue of requests through the
-wave-batched GenerationEngine and compares greedy outputs against the
-FP-weight engine.
+continuous-batching GenerationEngine and compares greedy outputs against
+the FP-weight engine. The quantized engine streams tokens as they are
+emitted via the per-request ``on_token`` callback (lanes interleave —
+that's the slot scheduler recycling lanes mid-flight).
 """
 import argparse
 
@@ -21,6 +23,8 @@ def main():
     ap.add_argument("--bits", type=int, default=3)
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["auto", "continuous", "wave"])
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -33,12 +37,22 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
                for _ in range(args.requests)]
 
+    def stream(rid: int, tok: int) -> None:
+        print(f"  [stream] req {rid} -> {tok}")
+
     results = {}
     for tag, p in (("fp", params), ("icq", qparams)):
-        engine = GenerationEngine(p, cfg, batch_size=4, max_len=48)
+        engine = GenerationEngine(p, cfg, batch_size=4, max_len=48,
+                                  mode=args.mode)
         for rid, prompt in enumerate(prompts):
-            engine.submit(Request(rid, prompt, max_new_tokens=8))
+            engine.submit(Request(
+                rid, prompt, max_new_tokens=8,
+                on_token=stream if tag == "icq" else None))
         results[tag] = engine.run()
+        s = engine.metrics.summary()
+        print(f"{tag}: {s['tokens_per_s']:.1f} tok/s over "
+              f"{int(s['steps'])} steps ({engine.mode} mode, mean "
+              f"occupancy {s['mean_occupancy']:.2f})")
 
     agree = 0
     total = 0

@@ -31,11 +31,21 @@ ARCHITECTURES = {
 EXTRA_CONFIGS = {_llama2.name: _llama2}
 
 
+def _canon(name: str) -> str:
+    """Spelling-insensitive arch key: 'llama3_2_1b' == 'llama3.2-1b'."""
+    return "".join(ch for ch in name.lower() if ch.isalnum())
+
+
 def get_config(name: str) -> ModelConfig:
     if name in ARCHITECTURES:
         return ARCHITECTURES[name]
     if name in EXTRA_CONFIGS:
         return EXTRA_CONFIGS[name]
+    aliases = {_canon(k): c for k, c in {**EXTRA_CONFIGS,
+                                         **ARCHITECTURES}.items()}
+    hit = aliases.get(_canon(name))
+    if hit is not None:
+        return hit
     raise KeyError(
         f"unknown arch {name!r}; available: {sorted(ARCHITECTURES)}"
     )

@@ -39,6 +39,11 @@ DEQUANT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
     (512, 256),
 )
 
+# Batched-M buckets tuned in addition to the decode shape (M=1): winners
+# at these keys let backend.arm_blocks re-block the fused arm for
+# prefill-sized calls instead of reusing the decode-tuned table.
+PREFILL_MS: Tuple[int, ...] = (64, 256)
+
 
 def cache_path() -> str:
     return os.environ.get(
@@ -315,3 +320,34 @@ def autotune_dequant(
         best, best_us = (br, bc), None
     record(key, best)
     return dict(blocks=best, us=best_us, cached=False)
+
+
+def autotune_arms(
+    d_out: int, d_in: int, n_bits: int,
+    *,
+    interpret: Optional[bool] = None,
+    fmt: str = "v1",
+    iters: int = 3,
+    prefill_ms: Optional[Sequence[int]] = None,
+) -> Dict[str, object]:
+    """Tune every dispatch arm of one weight geometry in one shot.
+
+    Populates the decode key (fused matmul, M=1), one fused-matmul key
+    per prefill-M bucket (``PREFILL_MS`` by default), and the M-free
+    dequant key — i.e. the full per-arm block table that
+    ``backend.arm_blocks`` consults at call time. Returns
+    {"decode": ..., "prefill": {M: ...}, "dequant": ...} with each
+    leaf the corresponding autotune result dict.
+    """
+    out: Dict[str, object] = dict(
+        decode=autotune_matmul(1, d_out, d_in, n_bits,
+                               interpret=interpret, iters=iters, fmt=fmt),
+        prefill={},
+        dequant=autotune_dequant(d_out, d_in, n_bits,
+                                 interpret=interpret, iters=iters, fmt=fmt),
+    )
+    for m in (PREFILL_MS if prefill_ms is None else prefill_ms):
+        out["prefill"][int(m)] = autotune_matmul(
+            int(m), d_out, d_in, n_bits,
+            interpret=interpret, iters=iters, fmt=fmt)
+    return out

@@ -84,7 +84,11 @@ winner for this (shape, n_bits, backend, fmt) exists, else static
 defaults; either way candidates are clamped so the kernel's VMEM
 working set (one-hot codebook temporary + accumulator + selector-decode
 temporaries) stays under ``ICQ_VMEM_BUDGET_MB`` (default 16) instead of
-failing in the compiler.
+failing in the compiler. The prepare-time table is keyed on the decode
+shape (M=1); at call time ``arm_blocks`` re-consults the cache for the
+arm the call actually lands on — fused-matmul winners at the bucketed
+prefill M (``autotune.PREFILL_MS``) and the M-free dequant winner — so
+decode and prefill block independently when both have been tuned.
 """
 from __future__ import annotations
 
@@ -424,6 +428,61 @@ def choose_path(M: int, prep: ICQPrepared) -> str:
     return "fused" if M <= decode_m_threshold() else "dequant"
 
 
+def bucket_m(M: int) -> int:
+    """Autotune M bucket for a call with M batched tokens: the largest
+    tuned bucket (1, *PREFILL_MS) not exceeding M — small decode batches
+    reuse the M=1 decode table, prefill-sized calls graduate to the
+    prefill entries as M grows past each bucket."""
+    best = 1
+    for b in autotune.PREFILL_MS:
+        if M >= b:
+            best = b
+    return best
+
+
+def arm_blocks(M: int, prep: ICQPrepared) -> Tuple[int, int, int]:
+    """Per-call (block_m, block_n, block_k) for the dispatch arm M lands on.
+
+    ``prepare()`` bakes decode-keyed (M=1) blocks into the layout; this
+    consults the autotune cache again at call time so prefill-M sweeps
+    (``autotune.PREFILL_MS`` entries for the fused arm, the M-free
+    ``dequant_key`` winner for the dequant arm) can re-block each arm
+    independently. A winner is only adopted when it tiles the prepared
+    padding exactly (pn % bn == pk % bk == 0; v2 additionally pins
+    block_k to the prepared checkpoint tile — re-tiling K would need a
+    re-prepare); otherwise the prepare-time blocks stand.
+    """
+    base = (prep.block_m, prep.block_n, prep.block_k)
+    pn = prep.codes.shape[-2]
+    pk = prep.codes.shape[-1] * (32 // prep.n_bits)
+    path = choose_path(M, prep)
+    if path == "fused":
+        hit = autotune.lookup(autotune.matmul_key(
+            bucket_m(M), prep.d_out, prep.d_in, prep.n_bits, "pallas",
+            prep.interpret, fmt=prep.fmt))
+        if hit is None:
+            return base
+        bm, bn, bk = hit
+        if prep.fmt == "v2":
+            bk = prep.block_k
+        if bm < 1 or bn < 1 or bk < 1 or pn % bn or pk % bk:
+            return base
+        return bm, bn, bk
+    if path == "dequant":
+        hit = autotune.lookup(autotune.dequant_key(
+            prep.d_out, prep.d_in, prep.n_bits, "pallas", prep.interpret,
+            fmt=prep.fmt))
+        if hit is None:
+            return base
+        br, bc = hit
+        if prep.fmt == "v2":
+            bc = prep.block_k
+        if br < 1 or bc < 1 or pn % br or pk % bc:
+            return base
+        return prep.block_m, br, bc
+    return base
+
+
 # ---------------------------------------------------------------------------
 # execution arms
 # ---------------------------------------------------------------------------
@@ -521,9 +580,10 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
 
     pk = prep.codes.shape[-1] * (32 // prep.n_bits)
     x2 = x.reshape(M, prep.d_in).astype(jnp.float32)
+    abm, abn, abk = arm_blocks(M, prep)   # per-arm autotuned block table
 
     if path == "fused":
-        bm = min(prep.block_m, _round_up(M, 8))
+        bm = min(abm, _round_up(M, 8))
         pm = _round_up(M, bm)
         x_p = jnp.pad(x2, ((0, pm - M), (0, pk - prep.d_in)))
         if prep.fmt == "v2":
@@ -531,27 +591,27 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
                 x_p, prep.codes, prep.syms, prep.offs, prep.dbase,
                 prep.codebooks,
                 n_bits=prep.n_bits, b=prep.b, block_m=bm,
-                block_n=prep.block_n, interpret=prep.interpret,
+                block_n=abn, interpret=prep.interpret,
             )[:M, : prep.d_out]
         else:
             y = matmul_padded(
                 x_p, prep.codes, prep.bitmap, prep.codebooks,
-                n_bits=prep.n_bits, block_m=bm, block_n=prep.block_n,
-                block_k=prep.block_k, interpret=prep.interpret,
+                n_bits=prep.n_bits, block_m=bm, block_n=abn,
+                block_k=abk, interpret=prep.interpret,
             )[:M, : prep.d_out]
     else:  # 'dequant': reconstruct once, ride the dense MXU matmul
         if prep.fmt == "v2":
             w = dequant_padded_v2(
                 prep.codes, prep.syms, prep.offs, prep.dbase,
                 prep.codebooks,
-                n_bits=prep.n_bits, b=prep.b, block_r=prep.block_n,
+                n_bits=prep.n_bits, b=prep.b, block_r=abn,
                 interpret=prep.interpret,
             )                                        # (pn, pk)
         else:
             w = dequant_padded(
                 prep.codes, prep.bitmap, prep.codebooks,
-                n_bits=prep.n_bits, block_r=prep.block_n,
-                block_c=prep.block_k, interpret=prep.interpret,
+                n_bits=prep.n_bits, block_r=abn,
+                block_c=abk, interpret=prep.interpret,
             )                                        # (pn, pk)
         x_p = jnp.pad(x2, ((0, 0), (0, pk - prep.d_in)))
         y = jax.lax.dot_general(
@@ -566,6 +626,8 @@ __all__ = [
     "ICQPrepared",
     "prepare",
     "prepare_tree",
+    "arm_blocks",
+    "bucket_m",
     "choose_path",
     "dequantize_prepared",
     "linear_apply",

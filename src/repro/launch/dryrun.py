@@ -244,6 +244,8 @@ def _lower_one(cfg, shape_name: str, multi_pod: bool, fsdp: bool = True,
     compile_s = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax < 0.6: list of per-device dicts
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     result = dict(

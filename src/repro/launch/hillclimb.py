@@ -53,10 +53,9 @@ def parse_overrides(pairs):
 
 
 def make_mesh(tp: int, n_chips: int = 256):
-    return jax.make_mesh(
-        (n_chips // tp, tp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_mesh as _compat_mesh
+
+    return _compat_mesh((n_chips // tp, tp), ("data", "model"))
 
 
 def lower_with(cfg, shape, mesh, fsdp=True, quant_bits=0, runtime=False):
@@ -114,6 +113,8 @@ def lower_with(cfg, shape, mesh, fsdp=True, quant_bits=0, runtime=False):
                 make_decode_step(cfg), in_shardings=tuple(shards)
             ).lower(*args).compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax < 0.6: list of per-device dicts
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     return dict(
         compile_seconds=round(time.time() - t0, 1),

@@ -1,19 +1,24 @@
 """Serving driver: train briefly, optionally ICQuant the weights, then
-serve a batch of requests through the GenerationEngine.
+serve a queue of requests through the GenerationEngine.
 
 ``python -m repro.launch.serve --arch <id> [--bits 3] [--requests 8]``
+
+Request length policy: a request needs ``len(prompt) + max_new_tokens``
+cache positions. Requests whose *prompt* cannot fit ``--max-len`` are
+rejected up front; requests whose prompt fits but whose token budget
+overflows the cache are truncated to the remaining budget with a
+warning (``--strict-len`` rejects those too instead of truncating).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.launch.quantize import quantize_tree
 from repro.launch.train import train
-from repro.serving import GenerationEngine, Request
+from repro.serving import GenerationEngine, Request, SamplingParams
 
 
 def main():
@@ -25,6 +30,24 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="KV-cache length: every request must satisfy "
+                         "len(prompt) + max_new_tokens <= max_len "
+                         "(over-budget requests are truncated with a "
+                         "warning, or rejected with --strict-len)")
+    ap.add_argument("--strict-len", action="store_true",
+                    help="reject over-budget requests instead of "
+                         "truncating their token budget")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "continuous", "wave"],
+                    help="'continuous' = slot scheduler with lane "
+                         "recycling (default where supported), 'wave' = "
+                         "legacy wave-synchronous static batching")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples (continuous mode)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--train-steps", type=int, default=10)
     ap.add_argument("--weight-cache", default="prepared",
                     choices=["prepared", "dense", "none"],
@@ -49,19 +72,50 @@ def main():
         params, acct = quantize_tree(params, args.bits, gamma=args.gamma)
         print(f"[serve] quantized to {acct['mean_bits']:.2f} bits/weight")
 
-    engine = GenerationEngine(params, cfg, batch_size=args.batch, max_len=64,
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    engine = GenerationEngine(params, cfg, batch_size=args.batch,
+                              max_len=args.max_len,
                               weight_cache=args.weight_cache,
-                              runtime_fmt=args.runtime_fmt)
-    rng = np.random.default_rng(0)
+                              runtime_fmt=args.runtime_fmt,
+                              mode=args.mode, sampling=sampling,
+                              seed=args.seed)
+    print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len})")
+
+    rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-        engine.submit(Request(rid, prompt.astype(np.int32),
-                              max_new_tokens=args.max_new))
+        prompt = prompt.astype(np.int32)
+        max_new = args.max_new
+        budget = len(prompt) + max_new
+        if len(prompt) >= args.max_len:
+            print(f"[serve] REJECT req {rid}: prompt length {len(prompt)} "
+                  f">= max_len {args.max_len}")
+            continue
+        if budget > args.max_len:
+            if args.strict_len:
+                print(f"[serve] REJECT req {rid}: prompt {len(prompt)} + "
+                      f"max_new {max_new} = {budget} > max_len "
+                      f"{args.max_len} (--strict-len)")
+                continue
+            max_new = args.max_len - len(prompt)
+            print(f"[serve] WARN req {rid}: prompt {len(prompt)} + "
+                  f"max_new {args.max_new} exceeds max_len "
+                  f"{args.max_len}; truncating budget to {max_new} "
+                  f"new tokens")
+        engine.submit(Request(rid, prompt, max_new_tokens=max_new))
+
     done = engine.run()
     for rid in sorted(done):
         r = done[rid]
         print(f"[serve] req {rid}: prompt_len={len(r.prompt)} "
               f"generated={r.generated}")
+    s = engine.metrics.summary()
+    print(f"[serve] {int(s['completed'])}/{int(s['requests'])} requests, "
+          f"{int(s['generated_tokens'])} tokens in {s['wall_s']:.2f}s "
+          f"({s['tokens_per_s']:.1f} tok/s, mean occupancy "
+          f"{s['mean_occupancy']:.2f}/{args.batch}, "
+          f"ttft p50 {s['ttft_p50']:.3f}s)")
 
 
 if __name__ == "__main__":

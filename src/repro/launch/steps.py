@@ -138,11 +138,39 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
+def sync_cache_positions(cache, start_pos):
+    """Overwrite every ``index`` leaf of a (stacked) cache with ``start_pos``.
+
+    With per-lane positions (``start_pos`` of shape (B,)) the serving
+    engine owns the position vector: recycling a slot is a host-side
+    ``pos[slot] = 0`` and the next step's cache writes land at the new
+    lane origin — no device-side per-slot cache surgery. ``index`` leaves
+    carry a leading layer axis ((L,) scalar caches, (L, B) per-lane
+    caches); ``start_pos`` broadcasts across it.
+    """
+    if isinstance(cache, dict):
+        return {
+            k: (jnp.broadcast_to(start_pos, v.shape).astype(v.dtype)
+                if k == "index" else sync_cache_positions(v, start_pos))
+            for k, v in cache.items()
+        }
+    return cache
+
+
 def make_decode_step(cfg):
-    """One new token against an existing cache (the ``decode_*`` shapes)."""
+    """One new token against an existing cache (the ``decode_*`` shapes).
+
+    ``start_pos`` is a scalar (wave decoding) or a (B,) per-lane position
+    vector (continuous batching). In the per-lane case the cache's own
+    ``index`` leaves are overridden from ``start_pos`` before the forward
+    pass, so the caller's position vector is the single source of truth
+    (admitting a request into a recycled slot resets only host state).
+    """
 
     def decode_step(params, cache, tokens, start_pos, enc_out=None,
                     frame_mask=None):
+        if jnp.ndim(start_pos):
+            cache = sync_cache_positions(cache, start_pos)
         if cfg.is_encdec:
             logits, cache, _, _ = encdec_apply(
                 params, cfg, None, frame_mask, tokens, cache=cache,
@@ -157,10 +185,12 @@ def make_decode_step(cfg):
     return decode_step
 
 
-def make_cache(params, cfg, batch: int, max_len: int):
+def make_cache(params, cfg, batch: int, max_len: int,
+               per_lane: bool = False):
     if cfg.is_encdec:
-        return encdec_cache_init(params, cfg, batch, max_len)
-    return lm_cache_init(params, cfg, batch, max_len)
+        return encdec_cache_init(params, cfg, batch, max_len,
+                                 per_lane=per_lane)
+    return lm_cache_init(params, cfg, batch, max_len, per_lane=per_lane)
 
 
 def prepare_serving_params(params, mode: str = "prepared", **prepare_kw):

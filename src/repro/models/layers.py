@@ -220,6 +220,11 @@ def gqa_apply(
         )
         new_cache = None
     elif "pos" in cache:
+        if cache["index"].ndim:
+            raise NotImplementedError(
+                "per-lane cache positions are not supported for the "
+                "sliding-window ring cache (its pos column is batch-global)"
+            )
         # ring-buffer cache of size W (sliding-window attention):
         # attend over [history ring ++ current chunk], then fold the last
         # W tokens back into the ring.
@@ -248,16 +253,27 @@ def gqa_apply(
         cpos = cache["pos"].at[slots].set(write_pos)
         new_cache = dict(k=ck, v=cv, pos=cpos, index=idx + S)
     else:
-        idx = cache["index"]  # scalar int32: #tokens already cached
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
-        )
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
-        )
+        idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
+        if idx.ndim:
+            # continuous batching: each lane writes at its own position.
+            # Out-of-range writes (a recycled lane clamped at max_len) are
+            # dropped, never wrapped.
+            rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+            cols = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+            ck = cache["k"].at[rows, cols].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[rows, cols].set(
+                v.astype(cache["v"].dtype), mode="drop")
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+            )
         T = ck.shape[1]
         pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-        k_valid = pos_k < (idx + S)
+        k_valid = pos_k < (idx[:, None] + S if idx.ndim else idx + S)
         out = chunked_attention(
             q, ck, cv, positions, pos_k, k_valid,
             causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk,
@@ -266,10 +282,18 @@ def gqa_apply(
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 
-def gqa_cache_init(cfg, batch: int, max_len: int) -> Params:
+def gqa_cache_init(cfg, batch: int, max_len: int,
+                   per_lane: bool = False) -> Params:
+    """KV cache. ``per_lane=True`` gives the write index a (B,) batch axis
+    (continuous-batching slot cache: every lane tracks its own position)."""
     hd = cfg.resolved_head_dim
     dt = _dtype(cfg)
     if cfg.sliding_window and cfg.sliding_window < max_len:
+        if per_lane:
+            raise NotImplementedError(
+                "per-lane positions are not supported with a sliding-window "
+                "ring cache; serve with max_len <= sliding_window or use "
+                "the wave engine")
         W = cfg.sliding_window
         return dict(  # ring buffer
             k=jnp.zeros((batch, W, cfg.n_kv_heads, hd), dt),
@@ -280,7 +304,7 @@ def gqa_cache_init(cfg, batch: int, max_len: int) -> Params:
     return dict(
         k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
         v=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
-        index=jnp.zeros((), jnp.int32),
+        index=jnp.zeros((batch,) if per_lane else (), jnp.int32),
     )
 
 
@@ -358,19 +382,27 @@ def mla_apply(
         return linear(out.reshape(B, S, -1), p["wo"]), None
 
     # decode: absorb W_uk into q, attend directly over the latent cache
-    idx = cache["index"]
-    cc = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0)
-    )
-    cr = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
-        (0, idx, 0),
-    )
+    idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
+    if idx.ndim:
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        cols = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        cc = cache["c_kv"].at[rows, cols].set(
+            c_kv.astype(cache["c_kv"].dtype), mode="drop")
+        cr = cache["k_rope"].at[rows, cols].set(
+            k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), mode="drop")
+    else:
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0)
+        )
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            (0, idx, 0),
+        )
     T = cc.shape[1]
     w_uk = as_dense(p["w_uk"]).reshape(r, H, nd)
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)           # absorbed q
     pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-    k_valid = pos_k < (idx + S)
+    k_valid = pos_k < (idx[:, None] + S if idx.ndim else idx + S)
     # treat latent dims + rope dims as one concatenated "head dim"
     q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,S,H,r+rd)
     k_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]    # (B,T,1,r+rd)
@@ -384,12 +416,13 @@ def mla_apply(
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 
-def mla_cache_init(cfg, batch: int, max_len: int) -> Params:
+def mla_cache_init(cfg, batch: int, max_len: int,
+                   per_lane: bool = False) -> Params:
     dt = _dtype(cfg)
     return dict(
         c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
         k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),
-        index=jnp.zeros((), jnp.int32),
+        index=jnp.zeros((batch,) if per_lane else (), jnp.int32),
     )
 
 

@@ -146,13 +146,22 @@ def block_apply(
     return x, new_cache, aux
 
 
-def block_cache_init(cfg, batch: int, max_len: int) -> Params:
+def block_cache_init(cfg, batch: int, max_len: int,
+                     per_lane: bool = False) -> Params:
+    """``per_lane=True`` builds a continuous-batching slot cache: the KV
+    write index carries a (B,) batch axis so every lane advances (and is
+    recycled) independently. Only position-indexed caches support this —
+    recurrent SSM state has no per-position addressing to reset lane-wise."""
     kind = _mixer_kind(cfg)
+    if per_lane and kind in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"per-lane cache positions are not supported for the "
+            f"{kind!r} mixer (recurrent SSM state); use the wave engine")
     c: Params = {}
     if kind in ("gqa", "hybrid"):
-        c["attn"] = gqa_cache_init(cfg, batch, max_len)
+        c["attn"] = gqa_cache_init(cfg, batch, max_len, per_lane=per_lane)
     if kind == "mla":
-        c["attn"] = mla_cache_init(cfg, batch, max_len)
+        c["attn"] = mla_cache_init(cfg, batch, max_len, per_lane=per_lane)
     if kind in ("ssm", "hybrid"):
         c["ssm"] = ssm_mod.mamba2_cache_init(cfg, batch)
     return c
@@ -261,6 +270,11 @@ def lm_apply(
     """Returns (logits (B, S, vocab), new_cache, aux_loss).
 
     S = P + S_text when a frontend prefix is present (VLM/audio stubs).
+    ``start_pos`` may be a scalar (wave decoding: one global position) or
+    a (B,) vector (continuous batching: per-lane positions — RoPE angles
+    and the causal mask are computed lane-wise, and a per-lane cache
+    built with ``lm_cache_init(per_lane=True)`` scatters each lane's KV
+    at its own index).
     """
     x = p["embed"][tokens]
     if prefix_embeds is not None:
@@ -322,12 +336,13 @@ def mtp_logits(p: Params, cfg, hidden: jnp.ndarray, tokens: jnp.ndarray):
     return _lm_head(p, cfg, h)
 
 
-def lm_cache_init(p: Params, cfg, batch: int, max_len: int) -> Params:
+def lm_cache_init(p: Params, cfg, batch: int, max_len: int,
+                  per_lane: bool = False) -> Params:
     n_dense = cfg.first_dense_layers if cfg.family == "moe" else 0
     cache: Params = {}
 
     def stacked(n):
-        layer = block_cache_init(cfg, batch, max_len)
+        layer = block_cache_init(cfg, batch, max_len, per_lane=per_lane)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
             if a.ndim else jnp.zeros((n,), a.dtype), layer
@@ -399,7 +414,12 @@ def encdec_apply(
     return logits, new_cache, enc_out, aux
 
 
-def encdec_cache_init(p: Params, cfg, batch: int, max_len: int) -> Params:
+def encdec_cache_init(p: Params, cfg, batch: int, max_len: int,
+                      per_lane: bool = False) -> Params:
+    if per_lane:
+        raise NotImplementedError(
+            "per-lane cache positions are not supported for enc-dec "
+            "models (encoder output is admitted wave-at-a-time)")
     layer = block_cache_init(cfg, batch, max_len)
     n = cfg.decoder_layers
     stacked = jax.tree.map(

@@ -55,13 +55,23 @@ def compressed_cross_pod_mean(tree: Any, mesh, axis_name: str = "pod") -> Any:
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
     other = frozenset(a for a in mesh.axis_names if a != axis_name)
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-        out_specs=jax.sharding.PartitionSpec(), axis_names={axis_name},
+    P = jax.sharding.PartitionSpec
+    if hasattr(jax, "shard_map"):
         # the gathered+summed result is replicated over `pod` by
         # construction; the static VMA checker can't prove it
-        check_vma=False,
-    )
+        smap = functools.partial(
+            jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+            axis_names={axis_name}, check_vma=False,
+        )
+    else:  # jax < 0.6: experimental spelling (auto axes / check_rep)
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        smap = functools.partial(
+            _shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+            auto=other, check_rep=False,
+        )
+
+    @smap
     def reduce_tree(t):
         return jax.tree.map(
             lambda x: _leaf_mean(x, axis_name, n_pods), t

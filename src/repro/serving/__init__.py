@@ -1,3 +1,17 @@
-from repro.serving.engine import GenerationEngine, Request
+from repro.serving.engine import GenerationEngine, make_serving_step
+from repro.serving.metrics import MetricsCollector, RequestMetrics
+from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.scheduler import Request, Slot, SlotScheduler
 
-__all__ = ["GenerationEngine", "Request"]
+__all__ = [
+    "GenerationEngine",
+    "GREEDY",
+    "MetricsCollector",
+    "Request",
+    "RequestMetrics",
+    "SamplingParams",
+    "Slot",
+    "SlotScheduler",
+    "make_serving_step",
+    "sample_tokens",
+]

@@ -1,21 +1,39 @@
-"""Batched serving engine over the shared-position KV cache.
+"""Serving engine: continuous batching over a slot-based KV cache.
 
-The cache design (one global write index per layer, batch-wide) matches
-TPU serving practice: a decode wave advances all batch lanes by one token
-per step. The engine therefore runs *wave-synchronous static batching*:
+The engine runs a **single persistent jitted step** — decode one token
+for every lane, then sample — over a per-lane-position KV cache
+(``make_cache(..., per_lane=True)``). A slot scheduler
+(serving/scheduler.py) owns admission: requests queue with arrival
+times, a free slot is filled the same step the previous occupant emits
+EOS (lane recycling), and dead slots are masked so their logits are
+never sampled. Per-lane positions mean one lane can be at position 3 of
+its prompt while its neighbor is 40 tokens into generation — there is
+no wave barrier, which is what converts the ICQ kernels' bandwidth win
+into aggregate served tokens/s under mixed-length traffic.
 
-  1. admit up to `batch_size` requests from the queue;
-  2. step the whole batch from position 0: lanes still inside their
-     prompt are teacher-forced with the next prompt token, lanes past
-     their prompt consume their previously generated token (this fuses
-     "prefill" and "decode" into one jitted program — prompts amortize
-     across the batch);
-  3. lanes finish on EOS / max_new_tokens; when every lane is done the
-     wave closes and the next wave is admitted with a fresh cache.
+Prompts are walked one token per step in the same jitted program as
+generation (teacher forcing: lanes inside their prompt feed the next
+prompt token and ignore the sampled one), so "prefill" needs no second
+program. Sampling (serving/sampling.py) is fused into the step: greedy
+by default, per-request temperature / top-k / top-p overrides, PRNG key
+threaded from the engine seed.
 
-Works with dense bf16 weights or ICQuant-packed weights (the `linear`
-dispatch inside the model handles both) — the quantized-serving example
-and benchmarks drive this engine.
+``mode`` selects the runtime:
+
+  * 'continuous' — the slot engine above. Requires a position-indexed
+    cache (dense / moe / vlm families, full attention); SSM and hybrid
+    mixers (recurrent state), enc-dec models, and sliding-window ring
+    caches are wave-only.
+  * 'wave'       — the legacy wave-synchronous static batcher kept as
+    the parity baseline: admit up to ``batch_size`` requests, step every
+    lane from position 0 until the *slowest* lane finishes, then admit
+    the next wave with a fresh cache. Greedy only.
+  * 'auto' (default) — 'continuous' when the config supports it, else
+    'wave'.
+
+With greedy sampling both modes emit token-identical streams for the
+same request set (lanes are batch-independent; the parity test in CI
+pins this), so 'auto' never changes results — only scheduling.
 
 Quantized weights are converted ONCE at engine construction
 (``weight_cache='prepared'``, the default): ICQPacked storage weights
@@ -23,17 +41,15 @@ become pre-padded ICQPrepared layouts, so the per-step jitted program
 routes every matmul through the kernel-backed dispatch layer
 (kernels/backend.py). ``runtime_fmt`` picks the prepared runtime format
 (None = platform default, normally 'v2' — the checkpointed gap-stream
-layout serving at ~0.3-0.45 b/w outlier overhead, with kernels decoding
-selector tiles in VMEM; 'v1' = dense-bitmap fallback at ~1 b/w).
-``weight_cache='dense'`` instead materializes dense weights once
-(dequant-once cache for prefill-heavy waves on HBM-rich hosts);
-``weight_cache='none'`` keeps the reference in-graph decode.
+layout serving at ~0.3-0.45 b/w outlier overhead); ``'dense'``
+materializes dense weights once; ``'none'`` keeps the reference
+in-graph decode. A MetricsCollector (serving/metrics.py) records TTFT,
+queue wait, tokens/s, slot occupancy and queue depth for every run.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,39 +57,237 @@ import numpy as np
 
 from repro.launch.steps import make_cache, make_decode_step, \
     prepare_serving_params
+from repro.serving.metrics import MetricsCollector
+from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.scheduler import Request, SlotScheduler
+
+__all__ = ["GenerationEngine", "Request", "make_serving_step"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (S,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    generated: List[int] = dataclasses.field(default_factory=list)
+def make_serving_step(cfg, sample: bool = True):
+    """decode-one-token + select-next, as a single jit-able program.
+
+    ``sample=True``: (params, cache, tokens (B,1), pos (B,), live (B,),
+    temperature (B,), top_k (B,), top_p (B,), key) -> (next (B,), cache).
+    ``sample=False`` is the greedy fast path — same contract minus the
+    sampling arrays and key (argmax only, measurably cheaper per step on
+    CPU than the full sampler; the engine uses it whenever no live lane
+    has temperature > 0, which keeps greedy serving at wave step cost).
+    """
+    decode = make_decode_step(cfg)
+
+    def step(params, cache, tokens, pos, live, temperature, top_k, top_p,
+             key):
+        logits, cache = decode(params, cache, tokens, pos)
+        toks = sample_tokens(logits, key, temperature, top_k, top_p,
+                             live=live)
+        return toks, cache
+
+    def greedy_step(params, cache, tokens, pos, live):
+        logits, cache = decode(params, cache, tokens, pos)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(live, toks, 0), cache
+
+    return step if sample else greedy_step
+
+
+def _continuous_supported(cfg, max_len: int) -> Optional[str]:
+    """None if the config can run the continuous engine, else the reason."""
+    if cfg.is_encdec:
+        return "enc-dec models admit encoder output wave-at-a-time"
+    if cfg.family in ("ssm", "hybrid"):
+        return f"{cfg.family!r} mixer carries recurrent (positionless) state"
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        return "sliding-window ring cache has a batch-global position column"
+    return None
 
 
 class GenerationEngine:
     def __init__(self, params, cfg, batch_size: int, max_len: int,
                  weight_cache: str = "prepared",
-                 runtime_fmt: Optional[str] = None):
+                 runtime_fmt: Optional[str] = None,
+                 mode: str = "auto",
+                 sampling: Optional[SamplingParams] = None,
+                 seed: int = 0,
+                 clock: Optional[Callable[[], float]] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len
-        self._decode = jax.jit(make_decode_step(cfg))
-        self._queue: Deque[Request] = deque()
-        self.completed: Dict[int, Request] = {}
+        self.sampling = sampling if sampling is not None else GREEDY
 
-    def submit(self, req: Request) -> None:
-        self._queue.append(req)
+        why_not = _continuous_supported(cfg, max_len)
+        if mode == "auto":
+            mode = "wave" if why_not else "continuous"
+        elif mode == "continuous" and why_not:
+            raise NotImplementedError(
+                f"mode='continuous' unsupported for this config: {why_not}; "
+                f"use mode='wave'")
+        elif mode not in ("continuous", "wave"):
+            raise ValueError(f"mode must be 'auto'|'continuous'|'wave', "
+                             f"got {mode!r}")
+        self.mode = mode
+        if self.mode == "wave" and self.sampling != GREEDY:
+            import warnings
+
+            warnings.warn(
+                "the wave engine is greedy-only: the engine-level "
+                "sampling parameters are ignored in mode='wave'",
+                stacklevel=2)
+
+        self._decode = jax.jit(make_decode_step(cfg))       # wave path
+        self._step = jax.jit(make_serving_step(cfg))        # continuous path
+        self._step_greedy = jax.jit(make_serving_step(cfg, sample=False))
+        self._sched = SlotScheduler(batch_size)
+        self._key = jax.random.PRNGKey(seed)
+        self._clock = clock
+        self._real_clock = clock is None
+        self._t0: Optional[float] = None
+        self._skew = 0.0
+        self.completed: Dict[int, Request] = {}
+        self.metrics = MetricsCollector()
 
     # ------------------------------------------------------------------
-    def _run_wave(self, wave: List[Request]) -> None:
+    def submit(self, req: Request) -> None:
+        n = len(req.prompt)
+        if n == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if n >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} does not fit "
+                f"max_len={self.max_len} (needs at most max_len - 1 prompt "
+                f"positions to generate anything); raise max_len or "
+                f"truncate the prompt")
+        if req.rid in self.metrics.requests:
+            raise ValueError(f"duplicate request id {req.rid}")
+        if (self.mode == "wave" and req.sampling is not None
+                and req.sampling != GREEDY):
+            import warnings
+
+            warnings.warn(
+                f"request {req.rid}: per-request sampling parameters are "
+                f"ignored by the greedy-only wave engine", stacklevel=2)
+        self.metrics.on_submit(req.rid, req.arrival_time, n)
+        self._sched.submit(req)
+
+    def _now(self) -> float:
+        raw = time.monotonic() if self._real_clock else self._clock()
+        if self._t0 is None:
+            self._t0 = raw
+        return raw - self._t0 + self._skew
+
+    def _idle_until(self, t: float) -> None:
+        """Nothing admissible: wait out the gap to the next arrival."""
+        now = self._now()
+        if t <= now:
+            return
+        if self._real_clock:
+            time.sleep(t - now)
+        else:
+            self._skew += t - now  # virtual clock: fast-forward
+
+    # ------------------------------------------------------------------
+    # continuous mode
+    # ------------------------------------------------------------------
+
+    def _finish(self, slot: int, t: float, live: np.ndarray,
+                pos: np.ndarray, tokens: np.ndarray) -> None:
+        req = self._sched.release(slot)
+        self.metrics.on_finish(req.rid, t, len(req.generated))
+        self.completed[req.rid] = req
+        live[slot] = False
+        pos[slot] = 0
+        tokens[slot, 0] = 0
+
+    def _run_continuous(self) -> Dict[int, Request]:
+        B = self.batch_size
+        sched = self._sched
+        cache = make_cache(self.params, self.cfg, B, self.max_len,
+                           per_lane=True)
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        temp = np.zeros((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
+        topp = np.ones((B,), np.float32)
+        ctrl = None        # device mirror of (live, temp, topk, topp):
+        ctrl_dirty = True  # refreshed only on admit/finish, not per step
+
+        while sched.has_work():
+            now = self._now()
+            for slot, req in sched.admit(now):
+                live[slot] = True
+                pos[slot] = 0
+                tokens[slot, 0] = int(req.prompt[0])
+                sp = req.sampling if req.sampling is not None else self.sampling
+                temp[slot], topk[slot], topp[slot] = (
+                    sp.temperature, sp.top_k, sp.top_p)
+                ctrl_dirty = True
+                self.metrics.on_admit(req.rid, now)
+            if not live.any():
+                nxt = sched.next_arrival()
+                if nxt is None:       # nothing queued, nothing running
+                    break
+                self._idle_until(nxt)
+                continue
+            if ctrl_dirty:
+                ctrl = tuple(jnp.asarray(a)
+                             for a in (live, temp, topk, topp))
+                ctrl_dirty = False
+
+            d_live, d_temp, d_topk, d_topp = ctrl
+            if not (temp[live] > 0.0).any():   # greedy fast path: no
+                toks, cache = self._step_greedy(   # sampler, no PRNG work
+                    self.params, cache, jnp.asarray(tokens),
+                    jnp.asarray(pos), d_live,
+                )
+            else:
+                self._key, sub = jax.random.split(self._key)
+                toks, cache = self._step(
+                    self.params, cache, jnp.asarray(tokens),
+                    jnp.asarray(pos), d_live, d_temp, d_topk, d_topp, sub,
+                )
+            nxt_tok = np.asarray(toks)
+            t_now = self._now()
+            self.metrics.on_step(int(live.sum()), sched.queue_depth, t_now)
+
+            for i in range(B):
+                if not live[i]:
+                    continue
+                st = sched.slot(i)
+                r = st.request
+                pos[i] += 1
+                st.pos = int(pos[i])
+                if pos[i] < len(r.prompt):      # still teacher-forcing; an
+                    tokens[i, 0] = int(r.prompt[pos[i]])  # eos_id inside the
+                    continue                    # prompt never ends the lane
+                tok = int(nxt_tok[i])
+                if not r.generated:
+                    self.metrics.on_first_token(r.rid, t_now)
+                r.generated.append(tok)
+                if r.on_token is not None:
+                    r.on_token(r.rid, tok)
+                tokens[i, 0] = tok
+                if (
+                    len(r.generated) >= r.max_new_tokens
+                    or (r.eos_id is not None and tok == r.eos_id)
+                    or pos[i] >= self.max_len - 1   # cache cap
+                ):
+                    self._finish(i, t_now, live, pos, tokens)
+                    ctrl_dirty = True
+        return self.completed
+
+    # ------------------------------------------------------------------
+    # legacy wave mode (parity baseline)
+    # ------------------------------------------------------------------
+
+    def _run_wave_batch(self, wave: List[Request]) -> None:
         B = self.batch_size
         cache = make_cache(self.params, self.cfg, B, self.max_len)
         pos = 0
         done = [False] * len(wave)
+        emitted_first = [False] * len(wave)
         # lane i consumes prompt[pos] while pos < len(prompt)-1, then its
         # generated stream. First fed token is prompt[0].
         tokens = np.zeros((B, 1), np.int32)
@@ -87,6 +301,9 @@ class GenerationEngine:
             )
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             pos += 1
+            t_now = self._now()
+            self.metrics.on_step(
+                sum(not d for d in done), self._sched.queue_depth, t_now)
             for i, r in enumerate(wave):
                 if done[i]:
                     continue
@@ -94,23 +311,40 @@ class GenerationEngine:
                     tokens[i, 0] = int(r.prompt[pos])
                 else:                               # generating
                     tok = int(nxt[i])
+                    if not emitted_first[i]:
+                        emitted_first[i] = True
+                        self.metrics.on_first_token(r.rid, t_now)
                     r.generated.append(tok)
+                    if r.on_token is not None:
+                        r.on_token(r.rid, tok)
                     tokens[i, 0] = tok
                     if (
                         len(r.generated) >= r.max_new_tokens
                         or (r.eos_id is not None and tok == r.eos_id)
                     ):
                         done[i] = True
+                        self.metrics.on_finish(r.rid, t_now, len(r.generated))
                         self.completed[r.rid] = r
         for i, r in enumerate(wave):                # max_len cutoff
             if not done[i]:
+                self.metrics.on_finish(r.rid, self._now(), len(r.generated))
                 self.completed[r.rid] = r
 
-    def run(self) -> Dict[int, Request]:
-        while self._queue:
-            wave = [
-                self._queue.popleft()
-                for _ in range(min(self.batch_size, len(self._queue)))
-            ]
-            self._run_wave(wave)
+    def _run_wave(self) -> Dict[int, Request]:
+        while True:
+            admitted = self._sched.admit()   # legacy: ignores arrival times
+            if not admitted:
+                break
+            now = self._now()
+            for _, req in admitted:
+                self.metrics.on_admit(req.rid, now)
+            self._run_wave_batch([req for _, req in admitted])
+            for slot, _ in admitted:
+                self._sched.release(slot)
         return self.completed
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[int, Request]:
+        if self.mode == "continuous":
+            return self._run_continuous()
+        return self._run_wave()

@@ -1,0 +1,121 @@
+"""Serving metrics: per-request latency plus engine-level utilization.
+
+The collector is clock-agnostic — the engine stamps every event with its
+own clock (wall time by default, a virtual clock in simulation) so the
+numbers stay meaningful either way:
+
+  * per request: queue wait (arrival -> admit), TTFT (arrival -> first
+    *generated* token, i.e. prompt walk included), decode tokens/s;
+  * per engine run: aggregate generated tokens/s over the active window,
+    mean slot occupancy and queue depth sampled once per decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    arrival_time: float = 0.0
+    prompt_len: int = 0
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    n_generated: int = 0
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.admit_time is None:
+            return None
+        return self.admit_time - self.arrival_time
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Arrival to first generated token (prompt processing included)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def decode_tokens_per_s(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        span = self.finish_time - self.first_token_time
+        if span <= 0:  # single-token request: no measurable decode span
+            return None
+        return (self.n_generated - 1) / span
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    ys = sorted(xs)
+    if not ys:
+        return float("nan")
+    i = min(len(ys) - 1, max(0, round(q * (len(ys) - 1))))
+    return ys[i]
+
+
+class MetricsCollector:
+    """Event sink for one engine run."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.occupancy_samples: List[int] = []
+        self.queue_depth_samples: List[int] = []
+        self.start_time: Optional[float] = None
+        self.end_time: Optional[float] = None
+
+    # -- events ---------------------------------------------------------
+    def on_submit(self, rid: int, arrival_time: float, prompt_len: int):
+        self.requests[rid] = RequestMetrics(
+            rid=rid, arrival_time=arrival_time, prompt_len=prompt_len)
+
+    def on_admit(self, rid: int, t: float):
+        self.requests[rid].admit_time = t
+
+    def on_first_token(self, rid: int, t: float):
+        self.requests[rid].first_token_time = t
+
+    def on_finish(self, rid: int, t: float, n_generated: int):
+        r = self.requests[rid]
+        r.finish_time = t
+        r.n_generated = n_generated
+
+    def on_step(self, occupancy: int, queue_depth: int, t: float):
+        if self.start_time is None:
+            self.start_time = t
+        self.end_time = t
+        self.occupancy_samples.append(occupancy)
+        self.queue_depth_samples.append(queue_depth)
+
+    # -- report ---------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values() if r.finish_time is not None]
+        total_tokens = sum(r.n_generated for r in done)
+        wall = (
+            (self.end_time - self.start_time)
+            if self.start_time is not None and self.end_time is not None
+            else 0.0
+        )
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        waits = [r.queue_wait for r in done if r.queue_wait is not None]
+        occ = self.occupancy_samples
+        qd = self.queue_depth_samples
+        return dict(
+            requests=float(len(self.requests)),
+            completed=float(len(done)),
+            generated_tokens=float(total_tokens),
+            wall_s=wall,
+            tokens_per_s=(total_tokens / wall) if wall > 0 else float("nan"),
+            steps=float(len(occ)),
+            mean_occupancy=(sum(occ) / len(occ)) if occ else 0.0,
+            mean_queue_depth=(sum(qd) / len(qd)) if qd else 0.0,
+            ttft_mean=(sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
+            ttft_p50=_percentile(ttfts, 0.50),
+            ttft_p95=_percentile(ttfts, 0.95),
+            queue_wait_mean=(sum(waits) / len(waits)) if waits else 0.0,
+        )
+
+
+__all__ = ["RequestMetrics", "MetricsCollector"]

@@ -1,0 +1,107 @@
+"""Token sampling for the serving engine: greedy + temperature/top-k/top-p.
+
+Everything here is jit-safe and vectorized over the batch so the engine
+can fuse sampling into its single persistent decode step. Per-lane
+sampling parameters arrive as (B,) arrays — each request may override
+the engine default (``Request.sampling``), and lanes holding different
+requests sample with different temperatures in the same step.
+
+The PRNG key is threaded: the engine splits its key once per step and
+passes the subkey in, so a run is reproducible from (seed, admission
+schedule). ``temperature <= 0`` selects greedy decoding for that lane —
+no randomness is consumed by the lane's decision (the vectorized draw
+still happens, but the argmax result is emitted), which is what makes a
+fully-greedy continuous run token-identical to the legacy wave engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.
+
+    temperature: 0 (default) = greedy argmax; > 0 = softmax sampling at
+        that temperature.
+    top_k: keep only the k highest-logit tokens (0 = off).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+        distribution with cumulative probability >= top_p (1.0 = off).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+def lane_arrays(params_list) -> dict:
+    """Stack per-lane SamplingParams into the (B,) arrays the jitted
+    sampler consumes. ``None`` entries fall back to GREEDY."""
+    ps = [p if p is not None else GREEDY for p in params_list]
+    return dict(
+        temperature=np.asarray([p.temperature for p in ps], np.float32),
+        top_k=np.asarray([p.top_k for p in ps], np.int32),
+        top_p=np.asarray([p.top_p for p in ps], np.float32),
+    )
+
+
+def sample_tokens(
+    logits: jnp.ndarray,            # (B, V) last-position logits
+    key: jax.Array,                 # threaded PRNG key (one split per step)
+    temperature: jnp.ndarray,       # (B,) f32; <= 0 means greedy
+    top_k: jnp.ndarray,             # (B,) int32; 0 means off
+    top_p: jnp.ndarray,             # (B,) f32; 1.0 means off
+    live: Optional[jnp.ndarray] = None,  # (B,) bool slot-occupancy mask
+) -> jnp.ndarray:
+    """Sample one token per lane; returns (B,) int32.
+
+    Dead slots (``live == False``) are masked to token 0 — their logits
+    are never sampled into an output stream, and because lanes draw
+    independent noise they cannot perturb live lanes' draws either.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # work in sorted-descending space: top-k is a rank cut, top-p a
+    # cumulative-probability cut; both map back through the sort order.
+    order = jnp.argsort(-logits, axis=-1)                     # (B, V)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = sorted_logits / t
+
+    ranks = jnp.arange(V, dtype=jnp.int32)[None]
+    k_eff = jnp.where(top_k > 0, top_k, V)[:, None]
+    keep = ranks < k_eff
+    probs = jax.nn.softmax(scaled, axis=-1)
+    cum_excl = jnp.cumsum(probs, axis=-1) - probs             # exclusive
+    keep &= cum_excl < top_p[:, None]
+    keep = keep.at[:, 0].set(True)                            # never empty
+
+    masked = jnp.where(keep, scaled, -jnp.inf)
+    choice = jax.random.categorical(key, masked, axis=-1)     # (B,)
+    sampled = jnp.take_along_axis(order, choice[:, None], axis=-1)[:, 0]
+
+    out = jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+    if live is not None:
+        out = jnp.where(live, out, 0)
+    return out
+
+
+__all__ = ["SamplingParams", "GREEDY", "lane_arrays", "sample_tokens"]

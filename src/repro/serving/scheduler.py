@@ -1,0 +1,133 @@
+"""Slot scheduler for continuous batching.
+
+The scheduler owns two structures:
+
+  * a FIFO **request queue** (submit order; each request carries an
+    ``arrival_time`` so benchmarks can replay Poisson traces — a request
+    is only admittable once the engine clock passes its arrival), and
+  * a **slot table** of ``batch_size`` lanes. ``admit()`` moves queued
+    requests into free slots; ``release()`` recycles a slot the moment
+    its lane finishes (EOS / token budget), so the very next decode step
+    can run a new request in that lane instead of idling it until the
+    slowest lane of a wave drains.
+
+The scheduler is pure host-side bookkeeping: it never touches device
+state. Lane recycling works because the decode step derives every
+lane's cache write index from the engine's position vector
+(``launch/steps.sync_cache_positions``) — resetting a slot is just
+``pos[slot] = 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``sampling=None`` uses the engine default (greedy unless the engine
+    was built with another default). ``arrival_time`` is seconds on the
+    engine clock (0.0 = already arrived); the wave engine ignores it.
+    ``on_token(rid, token)`` streams tokens as they are emitted.
+    """
+
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
+    arrival_time: float = 0.0
+    on_token: Optional[Callable[[int, int], None]] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Slot:
+    """Host-side lane state for one occupied slot."""
+
+    request: Request
+    pos: int = 0            # tokens already fed to the model for this lane
+    admitted_at: float = 0.0
+
+
+class SlotScheduler:
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._queue: Deque[Request] = deque()
+        self._slots: List[Optional[Slot]] = [None] * n_slots
+        self._free: List[int] = list(range(n_slots))  # min-heap: low slot first
+        heapq.heapify(self._free)
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def occupancy(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.occupancy > 0
+
+    def next_arrival(self) -> Optional[float]:
+        """Arrival time of the queue head (None if queue empty). Admission
+        is FIFO and therefore head-blocked: this is the earliest instant
+        at which ``admit`` can make progress, even if later requests in
+        the queue have already arrived."""
+        if not self._queue:
+            return None
+        return self._queue[0].arrival_time
+
+    # -- slot table -----------------------------------------------------
+    def admit(self, now: Optional[float] = None) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queue head; returns [(slot, request)].
+
+        FIFO order is preserved: admission stops at the first queued
+        request that has not arrived yet (``arrival_time > now``), even
+        if later requests already arrived — no reordering.
+        """
+        out: List[Tuple[int, Request]] = []
+        while self._free and self._queue:
+            req = self._queue[0]
+            if now is not None and req.arrival_time > now:
+                break
+            self._queue.popleft()
+            slot = heapq.heappop(self._free)
+            self._slots[slot] = Slot(
+                request=req, pos=0,
+                admitted_at=0.0 if now is None else now,
+            )
+            out.append((slot, req))
+        return out
+
+    def release(self, slot: int) -> Request:
+        """Recycle a finished lane; its slot is admittable immediately."""
+        st = self._slots[slot]
+        if st is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._slots[slot] = None
+        heapq.heappush(self._free, slot)
+        return st.request
+
+    def slot(self, i: int) -> Optional[Slot]:
+        return self._slots[i]
+
+    def occupied(self) -> Dict[int, Slot]:
+        return {i: s for i, s in enumerate(self._slots) if s is not None}
+
+
+__all__ = ["Request", "Slot", "SlotScheduler"]

@@ -421,3 +421,83 @@ def test_kernel_engine_prepared_token_parity():
         assert all(w.fmt == fmt for w in leaves)
         e_prep.submit(Request(0, prompt, max_new_tokens=4))
         assert e_prep.run()[0].generated == ref_tokens, fmt
+
+
+# ---------------------------------------------------------------------------
+# batched-M autotune entries + per-arm block tables (ISSUE-3 satellite)
+# ---------------------------------------------------------------------------
+
+def test_kernel_bucket_m_largest_not_exceeding():
+    assert backend.bucket_m(1) == 1
+    assert backend.bucket_m(8) == 1       # decode batches reuse the M=1 key
+    assert backend.bucket_m(63) == 1
+    assert backend.bucket_m(64) == 64
+    assert backend.bucket_m(255) == 64
+    assert backend.bucket_m(256) == 256
+    assert backend.bucket_m(4096) == 256  # saturates at the largest bucket
+
+
+def test_kernel_arm_blocks_consults_per_arm_winners(tmp_path, monkeypatch):
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    autotune.reset()
+    pk = _pack()
+    prep = backend.prepare(pk, backend="pallas", interpret=True)
+    pn = prep.codes.shape[-2]
+    pk_cols = prep.codes.shape[-1] * (32 // prep.n_bits)
+
+    # no cache entries: every arm falls back to the prepare-time table
+    base = (prep.block_m, prep.block_n, prep.block_k)
+    assert backend.arm_blocks(1, prep) == base
+    assert backend.arm_blocks(200, prep) == base
+
+    # fused arm: decode (M=1) and prefill (M=64 bucket) key independently
+    autotune.record(autotune.matmul_key(
+        1, prep.d_out, prep.d_in, prep.n_bits, "pallas", True,
+        fmt=prep.fmt), (8, pn, prep.block_k))
+    assert backend.arm_blocks(1, prep) == (8, pn, prep.block_k)
+
+    # dequant arm (M past the decode threshold) uses the M-free dequant key
+    autotune.record(autotune.dequant_key(
+        prep.d_out, prep.d_in, prep.n_bits, "pallas", True,
+        fmt=prep.fmt), (pn, prep.block_k))
+    bm, bn, bk = backend.arm_blocks(200, prep)
+    assert (bn, bk) == (pn, prep.block_k)
+
+    # a winner that does not tile the prepared padding is rejected
+    autotune.record(autotune.matmul_key(
+        1, prep.d_out, prep.d_in, prep.n_bits, "pallas", True,
+        fmt=prep.fmt), (8, pn + 8, pk_cols + 64))
+    assert backend.arm_blocks(1, prep) == base
+    autotune.reset()
+
+
+def test_kernel_arm_blocks_v2_pins_checkpoint_tile(tmp_path, monkeypatch):
+    """v2 block_k is baked into the checkpoint sidecar: an arm winner may
+    re-block M/N but its K tile must be overridden to the prepared one."""
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    autotune.reset()
+    pk = _pack()
+    prep = backend.prepare(pk, backend="pallas", interpret=True, fmt="v2")
+    assert prep.fmt == "v2"
+    pn = prep.codes.shape[-2]
+    autotune.record(autotune.matmul_key(
+        1, prep.d_out, prep.d_in, prep.n_bits, "pallas", True,
+        fmt="v2"), (16, pn, 99999))
+    assert backend.arm_blocks(1, prep) == (16, pn, prep.block_k)
+    autotune.reset()
+
+
+def test_kernel_autotune_arms_populates_all_keys(tmp_path, monkeypatch):
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    autotune.reset()
+    table = autotune.autotune_arms(16, 96, 4, interpret=True, iters=1,
+                                   prefill_ms=(64,))
+    assert autotune.lookup(
+        autotune.matmul_key(1, 16, 96, 4, "pallas", True)) is not None
+    assert autotune.lookup(
+        autotune.matmul_key(64, 16, 96, 4, "pallas", True)) is not None
+    assert autotune.lookup(
+        autotune.dequant_key(16, 96, 4, "pallas", True)) is not None
+    assert set(table) == {"decode", "prefill", "dequant"}
+    assert list(table["prefill"]) == [64]
+    autotune.reset()

@@ -59,8 +59,8 @@ def test_elastic_restore_with_sharding_fn(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     t = _tree(9)
     mgr.save(9, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = NamedSharding(mesh, P())
     out = mgr.restore(jax.tree.map(jnp.zeros_like, t),
                       sharding_fn=lambda i: sh)

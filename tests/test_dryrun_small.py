@@ -21,8 +21,8 @@ from repro.launch.steps import make_train_step
 from repro.optim import AdamWConfig
 from repro.runtime.sharding import param_specs, batch_specs
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(smoke_variant(get_config("internlm2-1.8b")),
                           param_dtype="bfloat16", remat=True,
                           d_model=128, d_ff=256, n_heads=8, n_kv_heads=4)
@@ -42,6 +42,8 @@ with mesh:
                       in_shardings=(p_sh, o_sh, b_sh)).lower(params, opt, batch)
     compiled = lowered.compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):   # jax < 0.6: list of per-device dicts
+    cost = cost[0] if cost else {}
 coll = collective_bytes(compiled.as_text())
 print(json.dumps(dict(
     n_devices=len(jax.devices()),

@@ -11,8 +11,8 @@ from repro.runtime.sharding import batch_specs, param_specs
 
 
 def _mesh_1x1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class _FakeMesh:
@@ -125,8 +125,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.runtime.collectives import compressed_cross_pod_mean
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 32)), jnp.float32)
 tree = dict(g=x)
 with mesh:

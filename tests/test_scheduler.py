@@ -1,0 +1,173 @@
+"""Slot scheduler: admission/recycling invariants + continuous-vs-wave
+engine parity (the ISSUE-3 acceptance tests)."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import init_model
+from repro.serving import GenerationEngine, Request, SlotScheduler
+
+
+# ---------------------------------------------------------------------------
+# host-side scheduler unit tests (no model)
+# ---------------------------------------------------------------------------
+
+def _req(rid, arrival=0.0, n=4):
+    return Request(rid, np.zeros(n, np.int32), arrival_time=arrival)
+
+
+def test_fifo_admission_and_lane_recycling():
+    s = SlotScheduler(2)
+    for rid in range(5):
+        s.submit(_req(rid))
+    got = s.admit(now=0.0)
+    assert [(slot, r.rid) for slot, r in got] == [(0, 0), (1, 1)]
+    assert s.occupancy == 2 and s.queue_depth == 3
+    assert s.admit(now=0.0) == []          # full: nothing admitted
+    assert s.release(0).rid == 0
+    got = s.admit(now=0.0)                 # freed slot refills immediately
+    assert [(slot, r.rid) for slot, r in got] == [(0, 2)]
+    assert s.occupancy == 2
+
+
+def test_arrival_time_gating_preserves_fifo():
+    s = SlotScheduler(4)
+    s.submit(_req(0, arrival=5.0))
+    s.submit(_req(1, arrival=0.0))         # arrived, but behind the head
+    assert s.admit(now=1.0) == []          # head not arrived: no reorder
+    assert s.next_arrival() == 5.0
+    got = s.admit(now=6.0)
+    assert [r.rid for _, r in got] == [0, 1]
+
+
+def test_release_free_slot_raises():
+    s = SlotScheduler(1)
+    with pytest.raises(ValueError):
+        s.release(0)
+
+
+def test_occupancy_never_exceeds_slots_under_random_schedule():
+    rng = np.random.default_rng(0)
+    s = SlotScheduler(3)
+    submitted, admitted, released = 0, [], 0
+    for step in range(200):
+        if rng.random() < 0.4:
+            s.submit(_req(submitted, arrival=float(rng.uniform(0, 5))))
+            submitted += 1
+        got = s.admit(now=float(step) * 0.1)
+        admitted.extend(r.rid for _, r in got)
+        assert 0 <= s.occupancy <= 3
+        occ = s.occupied()
+        if occ and rng.random() < 0.5:
+            slot = int(rng.choice(list(occ)))
+            s.release(slot)
+            released += 1
+    # drain: everything submitted is admitted exactly once
+    while s.has_work():
+        for slot in list(s.occupied()):
+            s.release(slot)
+        admitted.extend(r.rid for _, r in s.admit(now=1e9))
+    assert sorted(admitted) == list(range(submitted))
+    assert len(set(admitted)) == len(admitted)
+
+
+# ---------------------------------------------------------------------------
+# engine-level acceptance: parity + completion/occupancy invariants
+# ---------------------------------------------------------------------------
+
+def _setup(arch="llama3.2-1b"):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mixed_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        dict(rid=rid,
+             prompt=rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(2, 9))).astype(np.int32),
+             max_new_tokens=int(rng.integers(2, 8)))
+        for rid in range(n)
+    ]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_continuous_greedy_token_identical_to_wave(arch):
+    """More requests than slots, mixed prompt/generation lengths: the
+    continuous engine (per-lane positions, lane recycling, gqa + mla
+    cache paths) must emit exactly the wave engine's greedy streams."""
+    cfg, params = _setup(arch)
+    specs = _mixed_requests(cfg, 5)
+    out = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                               mode=mode)
+        for s in specs:
+            eng.submit(Request(**s))
+        out[mode] = {rid: r.generated for rid, r in eng.run().items()}
+    assert out["continuous"] == out["wave"]
+
+
+def test_every_request_completes_exactly_once_and_occupancy_bounded():
+    cfg, params = _setup()
+    specs = _mixed_requests(cfg, 9, seed=3)
+    eng = GenerationEngine(params, cfg, batch_size=3, max_len=32,
+                           mode="continuous")
+    for s in specs:
+        eng.submit(Request(**s))
+    done = eng.run()
+    assert sorted(done) == [s["rid"] for s in specs]
+    for s in specs:
+        r = done[s["rid"]]
+        assert 1 <= len(r.generated) <= s["max_new_tokens"]
+    occ = eng.metrics.occupancy_samples
+    assert occ and max(occ) <= 3 and min(occ) >= 1
+    summ = eng.metrics.summary()
+    assert summ["completed"] == len(specs)
+    assert summ["generated_tokens"] == sum(
+        len(r.generated) for r in done.values())
+
+
+def test_continuous_recycles_lanes_fewer_steps_than_wave():
+    """The whole point: mixed lengths make the wave engine idle finished
+    lanes; the continuous engine must finish the same work in fewer
+    decode steps."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    specs = [
+        dict(rid=rid,
+             prompt=rng.integers(0, cfg.vocab_size, 3 + 5 * (rid % 2))
+             .astype(np.int32),
+             max_new_tokens=2 + 10 * (rid % 2))   # short/long alternating
+        for rid in range(6)
+    ]
+    steps = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                               mode=mode)
+        for s in specs:
+            eng.submit(Request(**s))
+        eng.run()
+        steps[mode] = eng.metrics.summary()["steps"]
+    assert steps["continuous"] < steps["wave"], steps
+
+
+def test_poisson_arrivals_admit_in_order_and_complete():
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    arrivals = np.cumsum(rng.exponential(0.002, 6))
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous")
+    for rid in range(6):
+        eng.submit(Request(
+            rid, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+            max_new_tokens=3, arrival_time=float(arrivals[rid])))
+    done = eng.run()
+    assert sorted(done) == list(range(6))
+    m = eng.metrics.requests
+    for rid in range(6):
+        assert m[rid].admit_time >= m[rid].arrival_time
+    admits = [m[rid].admit_time for rid in range(6)]
+    assert admits == sorted(admits)        # FIFO admission

@@ -1,13 +1,16 @@
-"""Serving engine: greedy parity with direct decoding + quantized path."""
+"""Serving engine: greedy parity with direct decoding, quantized path,
+and the queue/length edge cases (eos-in-prompt, oversized prompts,
+empty/single-request/batch-of-one paths)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config, smoke_variant
 from repro.launch.quantize import quantize_tree
 from repro.launch.steps import make_cache, make_decode_step
 from repro.models import init_model
-from repro.serving import GenerationEngine, Request
+from repro.serving import GenerationEngine, Request, SamplingParams
 
 
 def _setup(arch="llama3.2-1b"):
@@ -78,3 +81,140 @@ def test_quantized_engine_runs_and_degrades_gracefully():
     # 8-bit ICQuant is near-lossless: greedy tokens should mostly agree
     agree = sum(a == b for a, b in zip(g1, g2))
     assert agree >= 3, (g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# edge cases (both engine modes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["wave", "continuous"])
+def test_eos_inside_prompt_does_not_terminate_lane(mode):
+    """An eos_id occurring in the teacher-forced prompt region must not
+    end the request — only a *generated* eos token may."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+    ref = GenerationEngine(params, cfg, batch_size=1, max_len=32, mode=mode)
+    ref.submit(Request(0, prompt, max_new_tokens=4))
+    want = ref.run()[0].generated
+
+    # eos = a prompt token that never appears in the greedy continuation
+    eos_candidates = [int(t) for t in prompt if int(t) not in want]
+    assert eos_candidates, "degenerate fixture: reroll the seed"
+    eos = eos_candidates[0]
+
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=32, mode=mode)
+    eng.submit(Request(0, prompt, max_new_tokens=4, eos_id=eos))
+    got = eng.run()[0].generated
+    assert got == want
+
+
+@pytest.mark.parametrize("mode", ["wave", "continuous"])
+def test_generated_eos_terminates_lane(mode):
+    cfg, params = _setup()
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    ref = GenerationEngine(params, cfg, batch_size=1, max_len=32, mode=mode)
+    ref.submit(Request(0, prompt, max_new_tokens=6))
+    want = ref.run()[0].generated
+    eos = want[2]                       # third generated token
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=32, mode=mode)
+    eng.submit(Request(0, prompt, max_new_tokens=6, eos_id=eos))
+    got = eng.run()[0].generated
+    assert got == want[: want.index(eos) + 1]
+
+
+def test_prompt_longer_than_max_len_errors_clearly():
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, np.zeros(8, np.int32)))   # == max_len: no room
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(1, np.zeros(20, np.int32)))
+
+
+def test_empty_prompt_and_duplicate_rid_error():
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=8)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(0, np.zeros(0, np.int32)))
+    eng.submit(Request(1, np.ones(2, np.int32)))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(Request(1, np.ones(2, np.int32)))
+
+
+@pytest.mark.parametrize("mode", ["wave", "continuous"])
+def test_empty_queue_run_returns_nothing(mode):
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16, mode=mode)
+    assert eng.run() == {}
+    assert eng.metrics.summary()["completed"] == 0
+
+
+def test_single_request_and_batch_of_one_match_wave():
+    cfg, params = _setup()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    out = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=1, max_len=24,
+                               mode=mode)
+        eng.submit(Request(0, prompt, max_new_tokens=5))
+        out[mode] = eng.run()[0].generated
+    assert out["continuous"] == out["wave"]
+    assert len(out["wave"]) == 5
+
+
+def test_generation_truncated_at_cache_cap():
+    """Budget overflowing max_len is cut at the cap, identically in both
+    modes (the engine rejects oversized *prompts*, not budgets)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    out = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=1, max_len=12,
+                               mode=mode)
+        eng.submit(Request(0, prompt, max_new_tokens=50))
+        out[mode] = eng.run()[0].generated
+    assert out["continuous"] == out["wave"]
+    assert len(out["wave"]) == 12 - 6   # max_len - prompt_len
+
+
+def test_streaming_callback_sees_tokens_in_order():
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    seen = []
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=24,
+                           mode="continuous")
+    for rid in range(3):
+        eng.submit(Request(
+            rid, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+            max_new_tokens=3,
+            on_token=lambda r, t: seen.append((r, t))))
+    done = eng.run()
+    for rid, r in done.items():
+        assert [t for rr, t in seen if rr == rid] == r.generated
+
+
+def test_temperature_sampling_reproducible_and_diverges_from_greedy():
+    cfg, params = _setup()
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(2)]
+
+    def run_once(seed, sampling):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                               mode="continuous", sampling=sampling,
+                               seed=seed)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=8))
+        return {rid: r.generated for rid, r in eng.run().items()}
+
+    hot = SamplingParams(temperature=1.5)
+    a = run_once(0, hot)
+    b = run_once(0, hot)
+    assert a == b                       # threaded PRNG key: reproducible
+    g = run_once(0, SamplingParams())
+    assert a != g                       # temperature actually samples

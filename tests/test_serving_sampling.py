@@ -1,0 +1,146 @@
+"""serving/sampling.py (vectorized per-lane sampler) + serving/metrics.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serving.metrics import MetricsCollector
+from repro.serving.sampling import (
+    GREEDY,
+    SamplingParams,
+    lane_arrays,
+    sample_tokens,
+)
+
+
+def _call(logits, key=0, **lanes):
+    B = logits.shape[0]
+    defaults = dict(
+        temperature=np.zeros(B, np.float32),
+        top_k=np.zeros(B, np.int32),
+        top_p=np.ones(B, np.float32),
+    )
+    defaults.update({k: np.asarray(v) for k, v in lanes.items()})
+    return np.asarray(sample_tokens(
+        jnp.asarray(logits), jax.random.PRNGKey(key),
+        jnp.asarray(defaults["temperature"]),
+        jnp.asarray(defaults["top_k"]),
+        jnp.asarray(defaults["top_p"]),
+        live=defaults.get("live"),
+    ))
+
+
+def test_zero_temperature_is_argmax():
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((4, 37)).astype(np.float32)
+    assert (_call(logits) == logits.argmax(-1)).all()
+
+
+def test_top_k_one_is_argmax_at_any_temperature():
+    rng = np.random.default_rng(1)
+    logits = rng.standard_normal((3, 50)).astype(np.float32)
+    out = _call(logits, temperature=np.full(3, 2.0, np.float32),
+                top_k=np.full(3, 1, np.int32))
+    assert (out == logits.argmax(-1)).all()
+
+
+def test_top_k_restricts_support():
+    rng = np.random.default_rng(2)
+    logits = rng.standard_normal((1, 64)).astype(np.float32)
+    top4 = set(np.argsort(-logits[0])[:4].tolist())
+    draws = {
+        int(_call(logits, key=k, temperature=np.full(1, 1.5, np.float32),
+                  top_k=np.full(1, 4, np.int32))[0])
+        for k in range(50)
+    }
+    assert draws <= top4
+    assert len(draws) > 1           # actually samples, not just argmax
+
+
+def test_top_p_tiny_collapses_to_argmax():
+    rng = np.random.default_rng(3)
+    logits = rng.standard_normal((2, 40)).astype(np.float32)
+    out = _call(logits, temperature=np.full(2, 1.0, np.float32),
+                top_p=np.full(2, 1e-6, np.float32))
+    assert (out == logits.argmax(-1)).all()
+
+
+def test_per_lane_overrides_mix_greedy_and_sampled():
+    rng = np.random.default_rng(4)
+    logits = np.tile(rng.standard_normal((1, 100)), (2, 1)).astype(np.float32)
+    for k in range(30):
+        out = _call(logits, key=k,
+                    temperature=np.asarray([0.0, 5.0], np.float32))
+        assert out[0] == logits[0].argmax()     # greedy lane pinned
+    # hot lane must eventually disagree with argmax at temperature 5
+    hot = {int(_call(logits, key=k,
+                     temperature=np.asarray([0.0, 5.0], np.float32))[1])
+           for k in range(30)}
+    assert len(hot) > 1
+
+
+def test_dead_lanes_masked_to_zero():
+    rng = np.random.default_rng(5)
+    logits = rng.standard_normal((3, 16)).astype(np.float32) + 3.0
+    out = _call(logits, live=np.asarray([True, False, True]))
+    assert out[1] == 0
+    assert (out[[0, 2]] == logits[[0, 2]].argmax(-1)).all()
+
+
+def test_same_key_same_tokens():
+    rng = np.random.default_rng(6)
+    logits = rng.standard_normal((4, 60)).astype(np.float32)
+    t = np.full(4, 1.0, np.float32)
+    a = _call(logits, key=9, temperature=t)
+    b = _call(logits, key=9, temperature=t)
+    assert (a == b).all()
+
+
+def test_sampling_params_validation_and_lane_arrays():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-2)
+    arrs = lane_arrays([None, SamplingParams(temperature=0.7, top_k=5)])
+    assert arrs["temperature"].tolist() == pytest.approx(
+        [GREEDY.temperature, 0.7])      # float32 storage
+    assert arrs["top_k"].tolist() == [0, 5]
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_collector_summary():
+    m = MetricsCollector()
+    m.on_submit(0, arrival_time=0.0, prompt_len=4)
+    m.on_submit(1, arrival_time=1.0, prompt_len=2)
+    m.on_admit(0, 0.5)
+    m.on_admit(1, 1.5)
+    m.on_step(2, 0, 1.0)
+    m.on_first_token(0, 2.0)
+    m.on_first_token(1, 3.0)
+    m.on_step(2, 0, 3.0)
+    m.on_finish(0, 5.0, 7)
+    m.on_step(1, 0, 5.0)
+    m.on_finish(1, 5.0, 3)
+    s = m.summary()
+    assert s["requests"] == 2 and s["completed"] == 2
+    assert s["generated_tokens"] == 10
+    assert s["wall_s"] == 4.0
+    assert s["tokens_per_s"] == pytest.approx(10 / 4.0)
+    assert s["ttft_mean"] == pytest.approx(2.0)     # (2.0-0.0, 3.0-1.0)
+    assert s["queue_wait_mean"] == pytest.approx(0.5)
+    assert s["mean_occupancy"] == pytest.approx(5 / 3)
+    r0 = m.requests[0]
+    assert r0.decode_tokens_per_s == pytest.approx(6 / 3.0)
+
+
+def test_metrics_unfinished_requests_not_counted():
+    m = MetricsCollector()
+    m.on_submit(0, 0.0, 3)
+    m.on_step(1, 0, 0.0)
+    s = m.summary()
+    assert s["completed"] == 0 and s["generated_tokens"] == 0
