@@ -10,6 +10,14 @@ recycles a lane the step it finishes, so under mixed lengths it takes
 fewer steps for the same tokens and aggregate tokens/s rises. Greedy
 parity (continuous == wave token streams) is asserted per config.
 
+A second **long-prompt trace** (prompts 64-256 tokens) replays the same
+requests through the continuous engine at ``prefill_chunk=1`` (walk
+every prompt token through the decode program, the pre-chunking
+behavior) and ``prefill_chunk=PREFILL_CHUNK`` (drain prompt bulk
+S-at-a-time through the chunk program / large-M kernel arm), asserting
+greedy parity between both and against the wave engine, and reporting
+the TTFT p50/p95 and aggregate tokens/s deltas chunking buys.
+
 Structured result lands in BENCH_serving.json via ``benchmarks/run.py``.
 """
 from __future__ import annotations
@@ -32,6 +40,19 @@ N_REQUESTS = 16
 # puts every arrival inside the first few decode steps on this host.
 POISSON_RATE_HZ = 200.0
 BITS = 3
+
+# long-prompt trace: prompts of 64-256 tokens, where prefill dominates
+# and the 1-token-per-step walk is the bottleneck chunking removes
+PREFILL_CHUNK = 32
+LONG_N_REQUESTS = 6
+LONG_MAX_LEN = 288
+LONG_MAX_NEW = (2, 9)
+LONG_PROMPT = (64, 257)
+# long-prompt chunking is benched on the configs where it matters most:
+# prepared_v2 redecodes the gap stream per call on the XLA arm, so
+# amortizing S tokens per launch is the headline win; dense is the
+# weight-bandwidth-free control.
+LONG_CONFIGS = ("prepared_v2", "dense")
 
 
 def _workload(cfg, seed: int = 0):
@@ -56,10 +77,28 @@ def _workload(cfg, seed: int = 0):
     return specs
 
 
-def _run_engine(params, cfg, mode, weight_cache, fmt, specs):
+def _long_workload(cfg, seed: int = 1):
+    """Poisson arrivals, long prompts (64-256), small budgets: TTFT is
+    dominated by the prompt walk, the regime chunked prefill targets."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(
+        rng.exponential(1.0 / POISSON_RATE_HZ, LONG_N_REQUESTS))
+    return [dict(
+        rid=rid,
+        prompt=rng.integers(
+            0, cfg.vocab_size, int(rng.integers(*LONG_PROMPT))
+        ).astype(np.int32),
+        max_new_tokens=int(rng.integers(*LONG_MAX_NEW)),
+        arrival_time=float(arrivals[rid]),
+    ) for rid in range(LONG_N_REQUESTS)]
+
+
+def _run_engine(params, cfg, mode, weight_cache, fmt, specs,
+                max_len=MAX_LEN, prefill_chunk=1):
     engine = GenerationEngine(
-        params, cfg, batch_size=BATCH, max_len=MAX_LEN,
+        params, cfg, batch_size=BATCH, max_len=max_len,
         weight_cache=weight_cache, runtime_fmt=fmt, mode=mode,
+        prefill_chunk=prefill_chunk,
     )
     for s in specs:   # fresh Request objects: generated streams are mutable
         engine.submit(Request(**s))
@@ -111,6 +150,61 @@ def run() -> dict:
             f"parity={row['greedy_parity']};"
             f"occupancy={row['continuous']['mean_occupancy']}"
             f"vs{row['wave']['mean_occupancy']}",
+        )
+
+    # ---- long-prompt trace: chunked vs unchunked prefill --------------
+    long_specs = _long_workload(cfg)
+    out["long_prompt"] = dict(
+        requests=LONG_N_REQUESTS, max_len=LONG_MAX_LEN,
+        prompt_range=list(LONG_PROMPT), prefill_chunk=PREFILL_CHUNK,
+        by_config={},
+    )
+    for tag, p, wc, fmt in configs:
+        if tag not in LONG_CONFIGS:
+            continue
+        tokens = {}
+        row = {}
+        runs = (
+            ("wave", dict(mode="wave")),
+            ("chunk1", dict(mode="continuous", prefill_chunk=1)),
+            ("chunked", dict(mode="continuous",
+                             prefill_chunk=PREFILL_CHUNK)),
+        )
+        for label, kw in runs:
+            tokens[label], summary = _run_engine(
+                p, cfg, weight_cache=wc, fmt=fmt, specs=long_specs,
+                max_len=LONG_MAX_LEN, **kw)
+            row[label] = {
+                k: (round(v, 4) if v == v else None)  # NaN -> null
+                for k, v in summary.items()
+            }
+        # greedy continuous output must stay token-identical to wave per
+        # request with chunking enabled — a TTFT win over diverging
+        # streams is not a win.
+        row["greedy_parity"] = (
+            tokens["chunked"] == tokens["chunk1"] == tokens["wave"])
+        if not row["greedy_parity"]:
+            raise AssertionError(
+                f"{tag}: chunked prefill token streams diverge "
+                f"(chunked vs chunk1 vs wave)")
+        row["speedup_tokens_per_s"] = round(
+            row["chunked"]["tokens_per_s"] / row["chunk1"]["tokens_per_s"],
+            3)
+        row["ttft_p50_delta_s"] = round(
+            row["chunk1"]["ttft_p50"] - row["chunked"]["ttft_p50"], 4)
+        row["ttft_p95_delta_s"] = round(
+            row["chunk1"]["ttft_p95"] - row["chunked"]["ttft_p95"], 4)
+        out["long_prompt"]["by_config"][tag] = row
+        emit(
+            f"serving/long_prompt_{tag}_chunk{PREFILL_CHUNK}",
+            row["chunked"]["wall_s"] * 1e6,
+            f"tok_s={row['chunked']['tokens_per_s']};"
+            f"chunk1_tok_s={row['chunk1']['tokens_per_s']};"
+            f"speedup={row['speedup_tokens_per_s']}x;"
+            f"ttft_p95={row['chunked']['ttft_p95']}"
+            f"vs{row['chunk1']['ttft_p95']};"
+            f"parity={row['greedy_parity']};"
+            f"prefill_tokens={row['chunked']['prefill_tokens']}",
         )
     return out
 

@@ -42,7 +42,20 @@ DEQUANT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
 # Batched-M buckets tuned in addition to the decode shape (M=1): winners
 # at these keys let backend.arm_blocks re-block the fused arm for
 # prefill-sized calls instead of reusing the decode-tuned table.
+# ``register_prefill_m`` extends the table at runtime — the serving
+# engine registers batch * prefill_chunk so chunked-prefill matmuls get
+# their own bucket instead of rounding down to a coarser one.
 PREFILL_MS: Tuple[int, ...] = (64, 256)
+
+
+def register_prefill_m(m: int) -> None:
+    """Add a batched-M bucket (idempotent; M <= 1 is the decode key and
+    is ignored). Affects ``backend.bucket_m`` immediately and adds the
+    bucket to subsequent ``autotune_arms`` sweeps."""
+    global PREFILL_MS
+    m = int(m)
+    if m > 1 and m not in PREFILL_MS:
+        PREFILL_MS = tuple(sorted((*PREFILL_MS, m)))
 
 
 def cache_path() -> str:
@@ -52,20 +65,38 @@ def cache_path() -> str:
     )
 
 
-def matmul_key(M: int, d_out: int, d_in: int, n_bits: int,
-               backend: str, interpret: bool, fmt: str = "v1") -> str:
-    """Cache key; runtime formats tune independently (v1 keys keep the
-    legacy un-suffixed spelling so existing cache files stay valid)."""
-    mode = f"{backend}{'-int' if interpret else ''}"
+def _key_suffix(fmt: str, onehot: Optional[str]) -> str:
+    """Key qualifiers: runtime formats and one-hot dtypes tune
+    independently (v1/f32 keep the legacy un-suffixed spellings so
+    existing cache files stay valid). The one-hot dtype must be part of
+    the key because VMEM admission depends on it — a block winner
+    admitted under the half-width bf16 one-hot may bust the budget when
+    replayed at f32."""
+    if onehot is None:
+        from repro.kernels.platform import default_onehot_dtype
+
+        onehot = default_onehot_dtype()
     sfx = "" if fmt == "v1" else f"_{fmt}"
-    return f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}{sfx}"
+    if onehot != "f32":
+        sfx += f"_oh-{onehot}"
+    return sfx
+
+
+def matmul_key(M: int, d_out: int, d_in: int, n_bits: int,
+               backend: str, interpret: bool, fmt: str = "v1",
+               onehot: Optional[str] = None) -> str:
+    """Cache key (see _key_suffix for the fmt/onehot qualifiers)."""
+    mode = f"{backend}{'-int' if interpret else ''}"
+    return (f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}"
+            f"{_key_suffix(fmt, onehot)}")
 
 
 def dequant_key(d_out: int, d_in: int, n_bits: int,
-                backend: str, interpret: bool, fmt: str = "v1") -> str:
+                backend: str, interpret: bool, fmt: str = "v1",
+                onehot: Optional[str] = None) -> str:
     mode = f"{backend}{'-int' if interpret else ''}"
-    sfx = "" if fmt == "v1" else f"_{fmt}"
-    return f"dequant/o{d_out}_i{d_in}_n{n_bits}_{mode}{sfx}"
+    return (f"dequant/o{d_out}_i{d_in}_n{n_bits}_{mode}"
+            f"{_key_suffix(fmt, onehot)}")
 
 
 def _load_disk() -> None:

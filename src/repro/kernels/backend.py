@@ -114,6 +114,7 @@ from repro.kernels.icq_dequant import (
     column_granularity,
     dequant_padded,
     dequant_padded_v2,
+    onehot_itemsize,
     snap_block_k,
 )
 from repro.kernels.icq_matmul import (
@@ -125,6 +126,7 @@ from repro.kernels.platform import (
     decode_m_threshold,
     default_backend,
     default_interpret,
+    default_onehot_dtype,
     default_runtime_fmt,
 )
 
@@ -228,18 +230,22 @@ def vmem_budget_bytes() -> int:
 
 def vmem_bytes_estimate(block_m: int, block_n: int, block_k: int, *,
                         n_bits: int, C: int, fmt: str = "v1",
-                        s_cols: int = 0) -> int:
+                        s_cols: int = 0,
+                        onehot: Optional[str] = None) -> int:
     """Rough VMEM bytes for one fused-matmul block (dequant is a subset).
 
-    Dominated by the (BN, BK, C) one-hot codebook-select temporary; v2
-    adds the unpacked symbol stream and the (BN, SEL_CHUNK, BK) selector
-    compare chunk. Deliberately coarse — used to reject/clamp block
-    candidates before the compiler OOMs, not to bill exact bytes."""
+    Dominated by the (BN, BK, C) one-hot codebook-select temporary —
+    charged at the ``ICQ_ONEHOT_DTYPE`` width (``onehot`` overrides), so
+    a bf16 one-hot halves the dominant term and lets the autotuner admit
+    larger prefill blocks under the same budget; v2 adds the unpacked
+    symbol stream and the (BN, SEL_CHUNK, BK) selector compare chunk.
+    Deliberately coarse — used to reject/clamp block candidates before
+    the compiler OOMs, not to bill exact bytes."""
     f32 = 4
     est = block_m * block_k * f32                      # x tile
     est += 2 * block_m * block_n * f32                 # acc scratch + out
     est += block_n * block_k * f32                     # dequantized W tile
-    est += block_n * block_k * C * f32                 # one-hot select temp
+    est += block_n * block_k * C * onehot_itemsize(onehot)  # one-hot temp
     est += block_n * (block_k // (32 // n_bits)) * 4   # packed codes
     if fmt == "v2":
         est += 3 * block_n * s_cols * 4                # syms + pos/rel temps
@@ -540,6 +546,7 @@ def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
     lead = prep.codes.shape[:-2]
     pn = prep.codes.shape[-2]
     pk = prep.codes.shape[-1] * k
+    onehot = default_onehot_dtype()
     if prep.fmt == "v2":
         out = dequant_padded_v2(
             _rows2(prep.codes),
@@ -548,7 +555,7 @@ def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
             _rows2(prep.dbase),
             _rows2(prep.codebooks),
             n_bits=prep.n_bits, b=prep.b, block_r=prep.block_n,
-            interpret=prep.interpret,
+            interpret=prep.interpret, onehot=onehot,
         )
     else:
         out = dequant_padded(
@@ -556,7 +563,7 @@ def dequantize_prepared(prep: ICQPrepared) -> jnp.ndarray:
             _rows2(prep.bitmap),
             _rows2(prep.codebooks),
             n_bits=prep.n_bits, block_r=prep.block_n, block_c=prep.block_k,
-            interpret=prep.interpret,
+            interpret=prep.interpret, onehot=onehot,
         )
     out = out.reshape(*lead, pn, pk)
     return out[..., : prep.d_out, : prep.d_in]
@@ -581,6 +588,7 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
     pk = prep.codes.shape[-1] * (32 // prep.n_bits)
     x2 = x.reshape(M, prep.d_in).astype(jnp.float32)
     abm, abn, abk = arm_blocks(M, prep)   # per-arm autotuned block table
+    onehot = default_onehot_dtype()
 
     if path == "fused":
         bm = min(abm, _round_up(M, 8))
@@ -591,13 +599,13 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
                 x_p, prep.codes, prep.syms, prep.offs, prep.dbase,
                 prep.codebooks,
                 n_bits=prep.n_bits, b=prep.b, block_m=bm,
-                block_n=abn, interpret=prep.interpret,
+                block_n=abn, interpret=prep.interpret, onehot=onehot,
             )[:M, : prep.d_out]
         else:
             y = matmul_padded(
                 x_p, prep.codes, prep.bitmap, prep.codebooks,
                 n_bits=prep.n_bits, block_m=bm, block_n=abn,
-                block_k=abk, interpret=prep.interpret,
+                block_k=abk, interpret=prep.interpret, onehot=onehot,
             )[:M, : prep.d_out]
     else:  # 'dequant': reconstruct once, ride the dense MXU matmul
         if prep.fmt == "v2":
@@ -605,13 +613,13 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
                 prep.codes, prep.syms, prep.offs, prep.dbase,
                 prep.codebooks,
                 n_bits=prep.n_bits, b=prep.b, block_r=abn,
-                interpret=prep.interpret,
+                interpret=prep.interpret, onehot=onehot,
             )                                        # (pn, pk)
         else:
             w = dequant_padded(
                 prep.codes, prep.bitmap, prep.codebooks,
                 n_bits=prep.n_bits, block_r=abn,
-                block_c=abk, interpret=prep.interpret,
+                block_c=abk, interpret=prep.interpret, onehot=onehot,
             )                                        # (pn, pk)
         x_p = jnp.pad(x2, ((0, 0), (0, pk - prep.d_in)))
         y = jax.lax.dot_general(

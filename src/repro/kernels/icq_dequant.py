@@ -38,11 +38,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.platform import default_interpret
+from repro.kernels.platform import default_interpret, default_onehot_dtype
 
 # v2 selector decode: symbols compared against the column iota in chunks
 # of this many symbols, bounding the (BR, chunk, BC) one-hot temporary.
 SEL_CHUNK = 16
+
+# dtype of the (BR, BC, C) codebook-select one-hot temporary (the
+# dominant VMEM term): 'f32' is exact, 'bf16' halves it — see
+# platform.default_onehot_dtype / ICQ_ONEHOT_DTYPE.
+ONEHOT_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def check_onehot(onehot: str) -> str:
+    """Validate an explicit ``onehot`` kwarg (the env route validates in
+    platform.default_onehot_dtype; this keeps kwarg misuse a ValueError
+    instead of a KeyError mid-trace)."""
+    if onehot not in ONEHOT_DTYPES:
+        raise ValueError(
+            f"onehot must be one of {sorted(ONEHOT_DTYPES)}, got {onehot!r}")
+    return onehot
+
+
+def onehot_itemsize(onehot: Optional[str] = None) -> int:
+    """Bytes per element of the one-hot select temporary (VMEM budgeting)."""
+    if onehot is None:
+        onehot = default_onehot_dtype()
+    return jnp.dtype(ONEHOT_DTYPES[check_onehot(onehot)]).itemsize
 
 
 def _unpack_block(words: jnp.ndarray, n_bits: int, out_cols: int) -> jnp.ndarray:
@@ -54,19 +76,26 @@ def _unpack_block(words: jnp.ndarray, n_bits: int, out_cols: int) -> jnp.ndarray
     return fields.reshape(words.shape[0], -1)[:, :out_cols].astype(jnp.int32)
 
 
-def _codebook_select(idx: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+def _codebook_select(idx: jnp.ndarray, codebooks: jnp.ndarray,
+                     onehot: str = "f32") -> jnp.ndarray:
     """idx: (BR, BC) int32 in [0, C); codebooks: (BR, C) -> (BR, BC) f32.
 
     One-hot gather as a single batched dot_general (batch dim = row):
     the (BR, BC, C) one-hot contracts against the row codebook on the
     MXU in one shot, instead of the C-step unrolled where-select chain
     the VPU had to chew through serially.
+
+    ``onehot='bf16'`` halves the (BR, BC, C) temporary (one-hot entries
+    are exact 0/1 in bf16; the f32-accumulated dot then returns each
+    codebook level rounded to bf16 — ~3 decimal digits of level
+    precision, the same loss as a bf16 codebook cache).
     """
     C = codebooks.shape[-1]
+    dt = ONEHOT_DTYPES[onehot]
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, C), 2)
-    onehot = (idx[:, :, None] == iota).astype(jnp.float32)
+    oh = (idx[:, :, None] == iota).astype(dt)
     return jax.lax.dot_general(
-        onehot, codebooks.astype(jnp.float32),
+        oh, codebooks.astype(dt),
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )
@@ -115,16 +144,18 @@ def _decode_block_selector(syms: jnp.ndarray, offs: jnp.ndarray,
     return sel
 
 
-def _dequant_kernel(codes_ref, bitmap_ref, cb_ref, out_ref, *, n_bits: int):
+def _dequant_kernel(codes_ref, bitmap_ref, cb_ref, out_ref, *, n_bits: int,
+                    onehot: str):
     BC = out_ref.shape[-1]
     codes = _unpack_block(codes_ref[...], n_bits, BC)
     sel = _unpack_block(bitmap_ref[...], 1, BC)
     idx = sel * (1 << n_bits) + codes
-    out_ref[...] = _codebook_select(idx, cb_ref[...])
+    out_ref[...] = _codebook_select(idx, cb_ref[...], onehot)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_bits", "block_r", "block_c", "interpret")
+    jax.jit,
+    static_argnames=("n_bits", "block_r", "block_c", "interpret", "onehot"),
 )
 def dequant_padded(
     codes: jnp.ndarray,      # (pr, pc // k) uint32, pr % block_r == 0
@@ -135,14 +166,16 @@ def dequant_padded(
     block_r: int,
     block_c: int,
     interpret: bool,
+    onehot: str = "f32",
 ) -> jnp.ndarray:
     """Core kernel over pre-blocked inputs -> (pr, pc) f32 (still padded)."""
+    check_onehot(onehot)
     k = 32 // n_bits
     pr, pc = codes.shape[0], codes.shape[1] * k
     grid = (pr // block_r, pc // block_c)
     C = codebooks.shape[1]
     return pl.pallas_call(
-        functools.partial(_dequant_kernel, n_bits=n_bits),
+        functools.partial(_dequant_kernel, n_bits=n_bits, onehot=onehot),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_r, block_c // k), lambda i, j: (i, j)),
@@ -156,7 +189,7 @@ def dequant_padded(
 
 
 def _dequant_kernel_v2(codes_ref, syms_ref, offs_ref, dbase_ref, cb_ref,
-                       out_ref, *, n_bits: int, b: int):
+                       out_ref, *, n_bits: int, b: int, onehot: str):
     BC = out_ref.shape[-1]
     codes = _unpack_block(codes_ref[...], n_bits, BC)
     sel = _decode_block_selector(
@@ -164,11 +197,12 @@ def _dequant_kernel_v2(codes_ref, syms_ref, offs_ref, dbase_ref, cb_ref,
         b=b, block_k=BC,
     )
     idx = sel * (1 << n_bits) + codes
-    out_ref[...] = _codebook_select(idx, cb_ref[...])
+    out_ref[...] = _codebook_select(idx, cb_ref[...], onehot)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_bits", "b", "block_r", "interpret")
+    jax.jit,
+    static_argnames=("n_bits", "b", "block_r", "interpret", "onehot"),
 )
 def dequant_padded_v2(
     codes: jnp.ndarray,      # (pr, pc // k) uint32, pr % block_r == 0
@@ -181,12 +215,14 @@ def dequant_padded_v2(
     b: int,
     block_r: int,
     interpret: bool,
+    onehot: str = "f32",
 ) -> jnp.ndarray:
     """v2 core over pre-blocked inputs -> (pr, pc) f32 (still padded).
 
     The column block is the checkpoint tile: block_c = pc / T, where T
     comes from the sidecar shape (``prepare`` guarantees pc == T * tile).
     """
+    check_onehot(onehot)
     k = 32 // n_bits
     pr, pc = codes.shape[0], codes.shape[1] * k
     T = offs.shape[1] - 1
@@ -195,7 +231,8 @@ def dequant_padded_v2(
     C = codebooks.shape[1]
     SW = syms.shape[1]
     return pl.pallas_call(
-        functools.partial(_dequant_kernel_v2, n_bits=n_bits, b=b),
+        functools.partial(_dequant_kernel_v2, n_bits=n_bits, b=b,
+                          onehot=onehot),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_r, block_c // k), lambda i, j: (i, j)),
@@ -223,10 +260,13 @@ def icq_dequant_v2(
     tile: int,
     block_r: int = 256,
     interpret: Optional[bool] = None,
+    onehot: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly v2 wrapper -> (d_out, d_in) f32 reconstruction."""
     if interpret is None:
         interpret = default_interpret()
+    if onehot is None:
+        onehot = default_onehot_dtype()
     d_out = codes.shape[0]
     k = 32 // n_bits
     T = offs.shape[1] - 1
@@ -239,7 +279,7 @@ def icq_dequant_v2(
         _pad2(offs, pr, offs.shape[1]),
         _pad2(dbase, pr, dbase.shape[1]),
         _pad2(codebooks, pr, codebooks.shape[1]),
-        n_bits=n_bits, b=b, block_r=br, interpret=interpret,
+        n_bits=n_bits, b=b, block_r=br, interpret=interpret, onehot=onehot,
     )
     return out[:d_out, :d_in]
 
@@ -284,10 +324,13 @@ def icq_dequant(
     block_r: int = 256,
     block_c: int = 512,
     interpret: Optional[bool] = None,
+    onehot: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly wrapper -> (d_out, d_in) f32 reconstruction."""
     if interpret is None:
         interpret = default_interpret()
+    if onehot is None:
+        onehot = default_onehot_dtype()
     d_out = codes.shape[0]
     k = 32 // n_bits
     br, bc = dequant_blocks(d_out, d_in, n_bits, block_r, block_c)
@@ -299,6 +342,7 @@ def icq_dequant(
     out = dequant_padded(
         codes_p, bitmap_p, cb_p,
         n_bits=n_bits, block_r=br, block_c=bc, interpret=interpret,
+        onehot=onehot,
     )
     return out[:d_out, :d_in]
 

@@ -31,14 +31,15 @@ from repro.kernels.icq_dequant import (
     _pad2,
     _round_up,
     _unpack_block,
+    check_onehot,
     column_granularity,
     snap_block_k,
 )
-from repro.kernels.platform import default_interpret
+from repro.kernels.platform import default_interpret, default_onehot_dtype
 
 
 def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
-                   *, n_bits: int, n_k: int):
+                   *, n_bits: int, n_k: int, onehot: str):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -46,7 +47,7 @@ def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
     BK = x_ref.shape[-1]
     codes = _unpack_block(codes_ref[...], n_bits, BK)     # (BN, BK)
     sel = _unpack_block(bitmap_ref[...], 1, BK)
-    w = _codebook_select(sel * (1 << n_bits) + codes, cb_ref[...])
+    w = _codebook_select(sel * (1 << n_bits) + codes, cb_ref[...], onehot)
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...].astype(jnp.float32), w,
         (((1,), (1,)), ((), ())),                          # x @ w.T
@@ -60,7 +61,8 @@ def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret"),
+    static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret",
+                     "onehot"),
 )
 def matmul_padded(
     x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == pk % block_k == 0
@@ -73,15 +75,18 @@ def matmul_padded(
     block_n: int,
     block_k: int,
     interpret: bool,
+    onehot: str = "f32",
 ) -> jnp.ndarray:
     """Core fused kernel over pre-blocked inputs -> (pm, pn) f32 (padded)."""
+    check_onehot(onehot)
     k = 32 // n_bits
     pm, pk = x.shape
     pn = codes.shape[0]
     C = codebooks.shape[1]
     grid = (pm // block_m, pn // block_n, pk // block_k)
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, n_bits=n_bits, n_k=grid[2]),
+        functools.partial(_matmul_kernel, n_bits=n_bits, n_k=grid[2],
+                          onehot=onehot),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
@@ -98,7 +103,7 @@ def matmul_padded(
 
 def _matmul_kernel_v2(x_ref, codes_ref, syms_ref, offs_ref, dbase_ref,
                       cb_ref, out_ref, acc_ref, *, n_bits: int, b: int,
-                      n_k: int):
+                      n_k: int, onehot: str):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -109,7 +114,7 @@ def _matmul_kernel_v2(x_ref, codes_ref, syms_ref, offs_ref, dbase_ref,
         syms_ref[...], offs_ref[...], dbase_ref[...], pl.program_id(2),
         b=b, block_k=BK,
     )
-    w = _codebook_select(sel * (1 << n_bits) + codes, cb_ref[...])
+    w = _codebook_select(sel * (1 << n_bits) + codes, cb_ref[...], onehot)
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...].astype(jnp.float32), w,
         (((1,), (1,)), ((), ())),                              # x @ w.T
@@ -123,7 +128,8 @@ def _matmul_kernel_v2(x_ref, codes_ref, syms_ref, offs_ref, dbase_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "b", "block_m", "block_n", "interpret"),
+    static_argnames=("n_bits", "b", "block_m", "block_n", "interpret",
+                     "onehot"),
 )
 def matmul_padded_v2(
     x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == 0
@@ -138,6 +144,7 @@ def matmul_padded_v2(
     block_m: int,
     block_n: int,
     interpret: bool,
+    onehot: str = "f32",
 ) -> jnp.ndarray:
     """v2 fused core over pre-blocked inputs -> (pm, pn) f32 (padded).
 
@@ -145,6 +152,7 @@ def matmul_padded_v2(
     selector never exists as a bitmap in HBM — each K block decodes its
     own tile of the gap stream in VMEM.
     """
+    check_onehot(onehot)
     k = 32 // n_bits
     pm, pk = x.shape
     pn = codes.shape[0]
@@ -154,7 +162,8 @@ def matmul_padded_v2(
     SW = syms.shape[1]
     grid = (pm // block_m, pn // block_n, T)
     return pl.pallas_call(
-        functools.partial(_matmul_kernel_v2, n_bits=n_bits, b=b, n_k=T),
+        functools.partial(_matmul_kernel_v2, n_bits=n_bits, b=b, n_k=T,
+                          onehot=onehot),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
@@ -186,10 +195,13 @@ def icq_matmul_v2(
     block_m: int = 128,
     block_n: int = 128,
     interpret: Optional[bool] = None,
+    onehot: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly v2 wrapper -> (M, d_out) f32."""
     if interpret is None:
         interpret = default_interpret()
+    if onehot is None:
+        onehot = default_onehot_dtype()
     M = x.shape[0]
     d_out = codes.shape[0]
     k = 32 // n_bits
@@ -206,6 +218,7 @@ def icq_matmul_v2(
         _pad2(dbase, pn, dbase.shape[1]),
         _pad2(codebooks, pn, codebooks.shape[1]),
         n_bits=n_bits, b=b, block_m=bm, block_n=bn, interpret=interpret,
+        onehot=onehot,
     )
     return out[:M, :d_out]
 
@@ -232,10 +245,13 @@ def icq_matmul(
     block_n: int = 128,
     block_k: int = 512,
     interpret: Optional[bool] = None,
+    onehot: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly wrapper -> (M, d_out) f32."""
     if interpret is None:
         interpret = default_interpret()
+    if onehot is None:
+        onehot = default_onehot_dtype()
     M = x.shape[0]
     d_out = codes.shape[0]
     k = 32 // n_bits
@@ -249,6 +265,6 @@ def icq_matmul(
     out = matmul_padded(
         x_p, codes_p, bitmap_p, cb_p,
         n_bits=n_bits, block_m=bm, block_n=bn, block_k=bk,
-        interpret=interpret,
+        interpret=interpret, onehot=onehot,
     )
     return out[:M, :d_out]

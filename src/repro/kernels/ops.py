@@ -136,7 +136,7 @@ def _check_blocks(blocks: Dict, allowed: tuple, fmt: str) -> None:
 
 def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
     if rt.get("fmt", "v1") == "v2":
-        _check_blocks(blocks, ("block_r",), "v2")
+        _check_blocks(blocks, ("block_r", "onehot"), "v2")
         return icq_dequant_v2(
             rt["codes"], rt["syms"], rt["offs"], rt["dbase"], rt["codebooks"],
             n_bits=rt["n_bits"], b=rt["b"], d_in=rt["d_in"], tile=rt["tile"],
@@ -150,7 +150,7 @@ def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray
 
 def matmul(x, rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
     if rt.get("fmt", "v1") == "v2":
-        _check_blocks(blocks, ("block_m", "block_n"), "v2")
+        _check_blocks(blocks, ("block_m", "block_n", "onehot"), "v2")
         return icq_matmul_v2(
             x, rt["codes"], rt["syms"], rt["offs"], rt["dbase"],
             rt["codebooks"],

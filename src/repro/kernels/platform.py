@@ -20,6 +20,12 @@ Central policy knob for every Pallas entry point in this package:
     'v2' (checkpointed gap stream, ~0.3-0.45 b/w outlier overhead) by
     default, 'v1' (dense 1-bit selector bitmap, ~1 b/w) as the
     bitwise-parity fallback. ``ICQ_RUNTIME_FMT=v1|v2`` overrides.
+  * ``default_onehot_dtype()`` — dtype of the (BR, BC, C) one-hot
+    codebook-select temporary inside both Pallas kernels: 'f32'
+    (default, exact) or 'bf16' (halves the dominant VMEM term, so the
+    autotuner can admit larger prefill blocks under ICQ_VMEM_BUDGET_MB;
+    codebook levels round to bf16 — ~3 decimal digits).
+    ``ICQ_ONEHOT_DTYPE=f32|bf16`` overrides.
 """
 from __future__ import annotations
 
@@ -75,6 +81,18 @@ def default_runtime_fmt() -> str:
                 f"ICQ_RUNTIME_FMT must be 'v1' or 'v2', got {env!r}")
         return env
     return "v2"
+
+
+def default_onehot_dtype() -> str:
+    """'f32' (exact) or 'bf16' (half-size one-hot select temporary)."""
+    env = os.environ.get("ICQ_ONEHOT_DTYPE")
+    if not env:  # unset or set-but-empty
+        return "f32"
+    env = env.lower()
+    if env not in ("f32", "bf16"):
+        raise ValueError(
+            f"ICQ_ONEHOT_DTYPE must be 'f32' or 'bf16', got {env!r}")
+    return env
 
 
 def decode_m_threshold() -> int:

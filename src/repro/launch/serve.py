@@ -43,6 +43,16 @@ def main():
                     help="'continuous' = slot scheduler with lane "
                          "recycling (default where supported), 'wave' = "
                          "legacy wave-synchronous static batching")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous-mode chunked prefill: drain admitted "
+                         "prompts S tokens per launch through a second "
+                         "jitted chunk program (routes prompt matmuls "
+                         "through the large-M dequant+MXU kernel arm, "
+                         "cutting TTFT for long prompts). 1 = walk prompts "
+                         "token-by-token inside the decode program (the "
+                         "legacy behavior, bit-for-bit); default follows "
+                         "ICQ_PREFILL_CHUNK (1). Greedy output is "
+                         "token-identical either way")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -79,8 +89,10 @@ def main():
                               weight_cache=args.weight_cache,
                               runtime_fmt=args.runtime_fmt,
                               mode=args.mode, sampling=sampling,
-                              seed=args.seed)
-    print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len})")
+                              seed=args.seed,
+                              prefill_chunk=args.prefill_chunk)
+    print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
+          f"prefill_chunk={engine.prefill_chunk})")
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -115,7 +127,9 @@ def main():
           f"{int(s['generated_tokens'])} tokens in {s['wall_s']:.2f}s "
           f"({s['tokens_per_s']:.1f} tok/s, mean occupancy "
           f"{s['mean_occupancy']:.2f}/{args.batch}, "
-          f"ttft p50 {s['ttft_p50']:.3f}s)")
+          f"ttft p50 {s['ttft_p50']:.3f}s, prompt split "
+          f"{int(s['prefill_tokens'])} chunked / "
+          f"{int(s['prompt_decode_tokens'])} walked)")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,33 @@ def sync_cache_positions(cache, start_pos):
     return cache
 
 
+def make_prefill_chunk_step(cfg):
+    """S-token prompt-chunk admission step for the continuous engine.
+
+    ``(params, cache, tokens (B, S), start_pos (B,), seq_lens (B,)) ->
+    cache``: writes each lane's first ``seq_lens[i]`` chunk tokens into
+    the per-lane cache at positions ``start_pos[i] + j`` and returns the
+    updated cache. Lanes with ragged tails (fewer than S prompt tokens
+    left) or lanes currently decoding pass ``seq_lens[i] < S`` and are
+    write-masked — one traced program serves every chunk shape. No
+    logits come back: chunk matmuls carry M = B*S tokens, which routes
+    them through the large-M dequant+MXU dispatch arm, and the final
+    norm + lm_head are skipped entirely (the first *generated* token's
+    logits always come from the decode step consuming the last prompt
+    token, so chunking never changes what that token sees).
+    """
+
+    def prefill_chunk_step(params, cache, tokens, start_pos, seq_lens):
+        cache = sync_cache_positions(cache, start_pos)
+        _, cache, _ = lm_apply(
+            params, cfg, tokens, cache=cache, start_pos=start_pos,
+            seq_lens=seq_lens, compute_logits=False,
+        )
+        return cache
+
+    return prefill_chunk_step
+
+
 def make_decode_step(cfg):
     """One new token against an existing cache (the ``decode_*`` shapes).
 

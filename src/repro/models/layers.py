@@ -178,6 +178,31 @@ def gqa_init(key, cfg) -> Params:
     )
 
 
+def _chunk_write_cols(idx: jnp.ndarray, S: int, T: int,
+                      seq_lens: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Per-lane cache write columns for an S-token chunk.
+
+    ``seq_lens`` (B,) masks ragged chunk tails (lanes with fewer than S
+    valid tokens this step — mid-decode lanes contribute 0): invalid
+    columns are pushed past the cache edge ``T`` so the ``mode='drop'``
+    scatter discards them instead of clobbering live rows.
+    """
+    cols = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    if seq_lens is None:
+        return cols
+    valid = jnp.arange(S, dtype=jnp.int32)[None] < seq_lens[:, None]
+    return jnp.where(valid, cols, T)
+
+
+def _check_seq_lens(seq_lens, cache) -> None:
+    if seq_lens is None:
+        return
+    if cache is None or "pos" in cache or not cache["index"].ndim:
+        raise NotImplementedError(
+            "seq_lens (chunked prefill validity masks) requires a per-lane "
+            "slot cache (make_cache(..., per_lane=True))")
+
+
 def gqa_apply(
     p: Params,
     x: jnp.ndarray,               # (B, S, d_model)
@@ -186,8 +211,10 @@ def gqa_apply(
     cache: Optional[Params] = None,
     causal: bool = True,
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    seq_lens: Optional[jnp.ndarray] = None,   # (B,) valid tokens this chunk
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     B, S, _ = x.shape
+    _check_seq_lens(seq_lens, cache)
     hd = cfg.resolved_head_dim
     q = linear(x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
 
@@ -256,10 +283,11 @@ def gqa_apply(
         idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
         if idx.ndim:
             # continuous batching: each lane writes at its own position.
-            # Out-of-range writes (a recycled lane clamped at max_len) are
-            # dropped, never wrapped.
+            # Out-of-range writes (a recycled lane clamped at max_len, or
+            # a ragged chunk tail masked by seq_lens) are dropped, never
+            # wrapped.
             rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-            cols = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+            cols = _chunk_write_cols(idx, S, cache["k"].shape[1], seq_lens)
             ck = cache["k"].at[rows, cols].set(
                 k.astype(cache["k"].dtype), mode="drop")
             cv = cache["v"].at[rows, cols].set(
@@ -272,13 +300,15 @@ def gqa_apply(
                 cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
             )
         T = ck.shape[1]
+        adv = S if seq_lens is None else seq_lens   # per-lane tokens added
         pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-        k_valid = pos_k < (idx[:, None] + S if idx.ndim else idx + S)
+        k_valid = pos_k < (
+            (idx + adv)[:, None] if idx.ndim else idx + adv)
         out = chunked_attention(
             q, ck, cv, positions, pos_k, k_valid,
             causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk,
         )
-        new_cache = dict(k=ck, v=cv, index=idx + S)
+        new_cache = dict(k=ck, v=cv, index=idx + adv)
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 
@@ -352,12 +382,14 @@ def mla_apply(
     cfg,
     positions: jnp.ndarray,
     cache: Optional[Params] = None,
+    seq_lens: Optional[jnp.ndarray] = None,   # (B,) valid tokens this chunk
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Standard form for train/prefill; latent-absorbed form for decode.
 
     Cache holds the *compressed* latent (c_kv, k_rope): the MLA memory win.
     """
     B, S, _ = x.shape
+    _check_seq_lens(seq_lens, cache)
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
@@ -385,7 +417,7 @@ def mla_apply(
     idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
     if idx.ndim:
         rows = jnp.arange(B, dtype=jnp.int32)[:, None]
-        cols = idx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        cols = _chunk_write_cols(idx, S, cache["c_kv"].shape[1], seq_lens)
         cc = cache["c_kv"].at[rows, cols].set(
             c_kv.astype(cache["c_kv"].dtype), mode="drop")
         cr = cache["k_rope"].at[rows, cols].set(
@@ -399,10 +431,11 @@ def mla_apply(
             (0, idx, 0),
         )
     T = cc.shape[1]
+    adv = S if seq_lens is None else seq_lens       # per-lane tokens added
     w_uk = as_dense(p["w_uk"]).reshape(r, H, nd)
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)           # absorbed q
     pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-    k_valid = pos_k < (idx[:, None] + S if idx.ndim else idx + S)
+    k_valid = pos_k < ((idx + adv)[:, None] if idx.ndim else idx + adv)
     # treat latent dims + rope dims as one concatenated "head dim"
     q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,S,H,r+rd)
     k_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]    # (B,T,1,r+rd)
@@ -412,7 +445,7 @@ def mla_apply(
     )                                                            # (B,S,H,r)
     w_uv = as_dense(p["w_uv"]).reshape(r, H, vd)
     out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
-    new_cache = dict(c_kv=cc, k_rope=cr, index=idx + S)
+    new_cache = dict(c_kv=cc, k_rope=cr, index=idx + adv)
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 

@@ -87,17 +87,27 @@ def block_apply(
     causal: bool = True,
     enc_out: Optional[jnp.ndarray] = None,
     enc_mask: Optional[jnp.ndarray] = None,
+    seq_lens: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``seq_lens`` (B,) is the chunked-prefill validity mask: number of
+    valid tokens this S-chunk per lane (per-lane caches only; GQA/MLA).
+    """
     aux = jnp.zeros((), jnp.float32)
     kind = _mixer_kind(cfg)
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
 
+    if seq_lens is not None and kind not in ("gqa", "mla"):
+        raise NotImplementedError(
+            f"seq_lens (chunked prefill) is not supported for the "
+            f"{kind!r} mixer")
     new_cache: Optional[Params] = None
     if kind == "gqa":
         out, new_cache = gqa_apply(
             p["attn"], h, cfg, positions,
             cache=None if cache is None else cache["attn"], causal=causal,
+            seq_lens=seq_lens,
         )
         if cache is not None:
             new_cache = dict(attn=new_cache)
@@ -105,6 +115,7 @@ def block_apply(
         out, mc = mla_apply(
             p["attn"], h, cfg, positions,
             cache=None if cache is None else cache["attn"],
+            seq_lens=seq_lens,
         )
         if cache is not None:
             new_cache = dict(attn=mc)
@@ -185,6 +196,7 @@ def stack_apply(
     causal: bool = True,
     enc_out: Optional[jnp.ndarray] = None,
     enc_mask: Optional[jnp.ndarray] = None,
+    seq_lens: Optional[jnp.ndarray] = None,
 ):
     """Scan over the leading layer axis of `stack` (and `cache`)."""
 
@@ -196,7 +208,7 @@ def stack_apply(
             pl, cl = layer
         xo, co, aux = block_apply(
             pl, xx, cfg, positions, cache=cl, causal=causal,
-            enc_out=enc_out, enc_mask=enc_mask,
+            enc_out=enc_out, enc_mask=enc_mask, seq_lens=seq_lens,
         )
         return (xo, aux_sum + aux), co
 
@@ -266,7 +278,9 @@ def lm_apply(
     cache: Optional[Params] = None,
     start_pos: Optional[jnp.ndarray] = None,
     prefix_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) stub frontend
-) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    seq_lens: Optional[jnp.ndarray] = None,       # (B,) chunk validity
+    compute_logits: bool = True,
+) -> Tuple[Optional[jnp.ndarray], Optional[Params], jnp.ndarray]:
     """Returns (logits (B, S, vocab), new_cache, aux_loss).
 
     S = P + S_text when a frontend prefix is present (VLM/audio stubs).
@@ -275,6 +289,14 @@ def lm_apply(
     and the causal mask are computed lane-wise, and a per-lane cache
     built with ``lm_cache_init(per_lane=True)`` scatters each lane's KV
     at its own index).
+
+    ``seq_lens`` (B,) enables chunked prefill against a per-lane cache:
+    only each lane's first ``seq_lens[i]`` chunk tokens are written (and
+    attended as new keys); ragged tails and mid-decode lanes pass
+    ``seq_lens[i] < S`` and are write-masked, never re-padded.
+    ``compute_logits=False`` skips the final norm + lm_head — a prefill
+    chunk step only needs the cache side effect, not (B, S, vocab)
+    logits (returns None in the logits slot).
     """
     x = p["embed"][tokens]
     if prefix_embeds is not None:
@@ -290,17 +312,19 @@ def lm_apply(
     new_cache: Params = {}
     if "dense_stack" in p:
         dc = None if cache is None else cache["dense_stack"]
-        x, c, aux = stack_apply(p["dense_stack"], x, cfg, positions, cache=dc)
+        x, c, aux = stack_apply(p["dense_stack"], x, cfg, positions, cache=dc,
+                                seq_lens=seq_lens)
         aux_total += aux
         if cache is not None:
             new_cache["dense_stack"] = c
     mc = None if cache is None else cache["stack"]
-    x, c, aux = stack_apply(p["stack"], x, cfg, positions, cache=mc)
+    x, c, aux = stack_apply(p["stack"], x, cfg, positions, cache=mc,
+                            seq_lens=seq_lens)
     aux_total += aux
     if cache is not None:
         new_cache["stack"] = c
 
-    logits = _lm_head(p, cfg, x)
+    logits = _lm_head(p, cfg, x) if compute_logits else None
     return logits, (new_cache if cache is not None else None), aux_total
 
 

@@ -11,11 +11,32 @@ its prompt while its neighbor is 40 tokens into generation — there is
 no wave barrier, which is what converts the ICQ kernels' bandwidth win
 into aggregate served tokens/s under mixed-length traffic.
 
-Prompts are walked one token per step in the same jitted program as
+Prompt handling has two gears. With ``prefill_chunk=1`` (the default)
+prompts are walked one token per step in the same jitted program as
 generation (teacher forcing: lanes inside their prompt feed the next
-prompt token and ignore the sampled one), so "prefill" needs no second
-program. Sampling (serving/sampling.py) is fused into the step: greedy
-by default, per-request temperature / top-k / top-p overrides, PRNG key
+prompt token and ignore the sampled one) — no second program runs.
+With ``prefill_chunk=S > 1`` a second persistent jitted program
+(``launch/steps.make_prefill_chunk_step``) drains newly admitted
+prompts S tokens at a time: every lane with bulk prompt left consumes
+``min(S, remaining)`` tokens per launch (ragged tails and mid-decode
+lanes are write-masked via per-lane ``seq_lens``, never re-padded or
+re-traced), which routes the prompt matmuls through the large-M
+dequant+MXU dispatch arm instead of paying one full decode step per
+prompt token. The chunk program never samples: the first generated
+token's logits always come from the decode step consuming the last
+prompt token, so chunking changes *when* cache rows are written but
+never what any sampled token sees — greedy continuous output stays
+token-identical to the wave engine (and to ``prefill_chunk=1``).
+Exactness caveat: that identity is bitwise when chunk and decode
+matmuls execute the same math (the pure-XLA arm, or any same-arm
+configuration — what CI pins); on the Pallas backend the chunk step's
+M = B*S lands on the dequant+MXU arm while the 1-token walk's M = B
+rides the fused kernel, whose different K-reduction order can differ in
+the last ulp — the compiled-TPU validation pass (ROADMAP) owns
+re-checking greedy stability there. ``ICQ_PREFILL_CHUNK`` sets the
+default chunk. Sampling
+(serving/sampling.py) is fused into the decode step: greedy by
+default, per-request temperature / top-k / top-p overrides, PRNG key
 threaded from the engine seed.
 
 ``mode`` selects the runtime:
@@ -48,6 +69,7 @@ queue wait, tokens/s, slot occupancy and queue depth for every run.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -56,7 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import make_cache, make_decode_step, \
-    prepare_serving_params
+    make_prefill_chunk_step, prepare_serving_params
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import Request, SlotScheduler
@@ -91,6 +113,24 @@ def make_serving_step(cfg, sample: bool = True):
     return step if sample else greedy_step
 
 
+def default_prefill_chunk() -> int:
+    """Engine default for ``prefill_chunk`` (ICQ_PREFILL_CHUNK, default 1 =
+    walk prompts token-by-token inside the decode program, the pre-chunking
+    behavior)."""
+    env = os.environ.get("ICQ_PREFILL_CHUNK")
+    if not env:  # unset or set-but-empty
+        return 1
+    try:
+        chunk = int(env)
+    except ValueError:
+        raise ValueError(
+            f"ICQ_PREFILL_CHUNK must be an integer, got {env!r}")
+    if chunk < 1:
+        raise ValueError(
+            f"ICQ_PREFILL_CHUNK must be >= 1, got {chunk}")
+    return chunk
+
+
 def _continuous_supported(cfg, max_len: int) -> Optional[str]:
     """None if the config can run the continuous engine, else the reason."""
     if cfg.is_encdec:
@@ -109,6 +149,7 @@ class GenerationEngine:
                  mode: str = "auto",
                  sampling: Optional[SamplingParams] = None,
                  seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
@@ -116,6 +157,12 @@ class GenerationEngine:
         self.batch_size = batch_size
         self.max_len = max_len
         self.sampling = sampling if sampling is not None else GREEDY
+        if prefill_chunk is None:
+            prefill_chunk = default_prefill_chunk()
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = int(prefill_chunk)
 
         why_not = _continuous_supported(cfg, max_len)
         if mode == "auto":
@@ -139,6 +186,19 @@ class GenerationEngine:
         self._decode = jax.jit(make_decode_step(cfg))       # wave path
         self._step = jax.jit(make_serving_step(cfg))        # continuous path
         self._step_greedy = jax.jit(make_serving_step(cfg, sample=False))
+        # second persistent jitted program: S-token prompt-chunk admission
+        # (chunk=1 keeps the PR-3 single-program engine bit-for-bit — the
+        # chunk program is never built, let alone launched)
+        self._chunk_step = (
+            jax.jit(make_prefill_chunk_step(cfg))
+            if self.prefill_chunk > 1 and self.mode == "continuous" else None)
+        if self._chunk_step is not None:
+            from repro.kernels import autotune
+
+            # chunk matmuls carry M = batch * chunk tokens: give the
+            # autotuner (and backend.arm_blocks at call time) a bucket at
+            # that M so the large-M arm can block for the chunk shape.
+            autotune.register_prefill_m(batch_size * self.prefill_chunk)
         self._sched = SlotScheduler(batch_size)
         self._key = jax.random.PRNGKey(seed)
         self._clock = clock
@@ -200,6 +260,52 @@ class GenerationEngine:
         pos[slot] = 0
         tokens[slot, 0] = 0
 
+    def _prefill_chunk_pass(self, cache, pos: np.ndarray, live: np.ndarray,
+                            tokens: np.ndarray):
+        """Drain bulk prompt through the chunk program, one launch.
+
+        A lane's *bulk* is every prompt token except the last (the decode
+        step must consume the last one so the first generated token's
+        logits are unchanged). Returns (cache, True) after a launch, or
+        (cache, False) when no live lane has bulk left — the caller then
+        runs a decode step as usual. Lanes mid-decode (or ragged tails
+        shorter than the chunk) ride along write-masked via seq_lens.
+        """
+        B = self.batch_size
+        sched = self._sched
+        S = self.prefill_chunk
+        lens = np.zeros((B,), np.int32)
+        for i in range(B):
+            if live[i]:
+                r = sched.slot(i).request
+                lens[i] = min(S, max(0, len(r.prompt) - 1 - pos[i]))
+        if not lens.any():
+            return cache, False
+        ctoks = np.zeros((B, S), np.int32)
+        for i in range(B):
+            if lens[i]:
+                r = sched.slot(i).request
+                ctoks[i, : lens[i]] = r.prompt[pos[i]: pos[i] + lens[i]]
+        # .copy(): argument transfers are async and pos mutates below —
+        # the chunk step has no host-side output read to fence on.
+        cache = self._chunk_step(
+            self.params, cache, jnp.asarray(ctoks),
+            jnp.asarray(pos.copy()), jnp.asarray(lens),
+        )
+        t_now = self._now()
+        self.metrics.on_step(int(live.sum()), sched.queue_depth, t_now,
+                             kind="prefill")
+        self.metrics.on_prompt_tokens(int(lens.sum()), kind="prefill")
+        for i in range(B):
+            if lens[i]:
+                pos[i] += int(lens[i])
+                st = sched.slot(i)
+                st.pos = int(pos[i])
+                # next token to feed (the decode step consumes it when
+                # every lane's bulk is drained)
+                tokens[i, 0] = int(st.request.prompt[pos[i]])
+        return cache, True
+
     def _run_continuous(self) -> Dict[int, Request]:
         B = self.batch_size
         sched = self._sched
@@ -213,6 +319,7 @@ class GenerationEngine:
         topp = np.ones((B,), np.float32)
         ctrl = None        # device mirror of (live, temp, topk, topp):
         ctrl_dirty = True  # refreshed only on admit/finish, not per step
+        greedy_only = True  # no live lane samples; refreshed with ctrl
 
         while sched.has_work():
             now = self._now()
@@ -231,13 +338,30 @@ class GenerationEngine:
                     break
                 self._idle_until(nxt)
                 continue
+            if self._chunk_step is not None:
+                cache, launched = self._prefill_chunk_pass(
+                    cache, pos, live, tokens)
+                if launched and not any(
+                    live[i] and pos[i] >= len(sched.slot(i).request.prompt) - 1
+                    for i in range(B)
+                ):           # pure prefill phase: every live lane still has
+                    continue  # bulk, so there is nothing to decode yet.
+                # Otherwise fall through and decode in the same iteration:
+                # drained lanes generate while their neighbors keep
+                # chunking (the decode step teacher-forces mid-bulk lanes
+                # one extra prompt token — order-free per lane, so token
+                # streams are unchanged; only TTFT timing improves).
             if ctrl_dirty:
                 ctrl = tuple(jnp.asarray(a)
                              for a in (live, temp, topk, topp))
+                # greedy fast path predicate: folded into the ctrl refresh
+                # (live/temp only change on admit/finish), so steady-state
+                # steps skip the host-array scan.
+                greedy_only = not (temp[live] > 0.0).any()
                 ctrl_dirty = False
 
             d_live, d_temp, d_topk, d_topp = ctrl
-            if not (temp[live] > 0.0).any():   # greedy fast path: no
+            if greedy_only:                        # greedy fast path: no
                 toks, cache = self._step_greedy(   # sampler, no PRNG work
                     self.params, cache, jnp.asarray(tokens),
                     jnp.asarray(pos), d_live,
@@ -252,6 +376,7 @@ class GenerationEngine:
             t_now = self._now()
             self.metrics.on_step(int(live.sum()), sched.queue_depth, t_now)
 
+            n_prompt = 0
             for i in range(B):
                 if not live[i]:
                     continue
@@ -261,7 +386,8 @@ class GenerationEngine:
                 st.pos = int(pos[i])
                 if pos[i] < len(r.prompt):      # still teacher-forcing; an
                     tokens[i, 0] = int(r.prompt[pos[i]])  # eos_id inside the
-                    continue                    # prompt never ends the lane
+                    n_prompt += 1               # prompt never ends the lane
+                    continue
                 tok = int(nxt_tok[i])
                 if not r.generated:
                     self.metrics.on_first_token(r.rid, t_now)
@@ -276,6 +402,8 @@ class GenerationEngine:
                 ):
                     self._finish(i, t_now, live, pos, tokens)
                     ctrl_dirty = True
+            if n_prompt:
+                self.metrics.on_prompt_tokens(n_prompt)
         return self.completed
 
     # ------------------------------------------------------------------
@@ -304,11 +432,13 @@ class GenerationEngine:
             t_now = self._now()
             self.metrics.on_step(
                 sum(not d for d in done), self._sched.queue_depth, t_now)
+            n_prompt = 0
             for i, r in enumerate(wave):
                 if done[i]:
                     continue
                 if pos < len(r.prompt):            # still teacher-forcing
                     tokens[i, 0] = int(r.prompt[pos])
+                    n_prompt += 1
                 else:                               # generating
                     tok = int(nxt[i])
                     if not emitted_first[i]:
@@ -325,6 +455,8 @@ class GenerationEngine:
                         done[i] = True
                         self.metrics.on_finish(r.rid, t_now, len(r.generated))
                         self.completed[r.rid] = r
+            if n_prompt:
+                self.metrics.on_prompt_tokens(n_prompt)
         for i, r in enumerate(wave):                # max_len cutoff
             if not done[i]:
                 self.metrics.on_finish(r.rid, self._now(), len(r.generated))

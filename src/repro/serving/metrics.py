@@ -7,7 +7,10 @@ numbers stay meaningful either way:
   * per request: queue wait (arrival -> admit), TTFT (arrival -> first
     *generated* token, i.e. prompt walk included), decode tokens/s;
   * per engine run: aggregate generated tokens/s over the active window,
-    mean slot occupancy and queue depth sampled once per decode step.
+    mean slot occupancy and queue depth sampled once per step, and the
+    prefill-vs-decode token split — prompt tokens consumed by the
+    S-token prefill chunk program vs tokens that went through the
+    1-token decode program (teacher-forced prompt walk + generation).
 """
 from __future__ import annotations
 
@@ -65,6 +68,11 @@ class MetricsCollector:
         self.queue_depth_samples: List[int] = []
         self.start_time: Optional[float] = None
         self.end_time: Optional[float] = None
+        # prefill-vs-decode split (chunked prefill observability)
+        self.prefill_steps: int = 0          # chunk-program launches
+        self.decode_steps: int = 0           # decode-program launches
+        self.prefill_tokens: int = 0         # prompt tokens via chunk program
+        self.prompt_decode_tokens: int = 0   # prompt tokens walked 1/step
 
     # -- events ---------------------------------------------------------
     def on_submit(self, rid: int, arrival_time: float, prompt_len: int):
@@ -82,12 +90,25 @@ class MetricsCollector:
         r.finish_time = t
         r.n_generated = n_generated
 
-    def on_step(self, occupancy: int, queue_depth: int, t: float):
+    def on_step(self, occupancy: int, queue_depth: int, t: float,
+                kind: str = "decode"):
         if self.start_time is None:
             self.start_time = t
         self.end_time = t
         self.occupancy_samples.append(occupancy)
         self.queue_depth_samples.append(queue_depth)
+        if kind == "prefill":
+            self.prefill_steps += 1
+        else:
+            self.decode_steps += 1
+
+    def on_prompt_tokens(self, n: int, kind: str = "decode"):
+        """Prompt tokens consumed this step: ``kind='prefill'`` via the
+        S-token chunk program, ``'decode'`` teacher-forced 1/step."""
+        if kind == "prefill":
+            self.prefill_tokens += n
+        else:
+            self.prompt_decode_tokens += n
 
     # -- report ---------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -115,6 +136,10 @@ class MetricsCollector:
             ttft_p50=_percentile(ttfts, 0.50),
             ttft_p95=_percentile(ttfts, 0.95),
             queue_wait_mean=(sum(waits) / len(waits)) if waits else 0.0,
+            prefill_steps=float(self.prefill_steps),
+            decode_steps=float(self.decode_steps),
+            prefill_tokens=float(self.prefill_tokens),
+            prompt_decode_tokens=float(self.prompt_decode_tokens),
         )
 
 

@@ -237,3 +237,87 @@ def test_v2_kernels_lower_for_tpu():
             dict(rt, codes=cc, syms=ss, offs=oo, dbase=dd, codebooks=kk)),
         rt["codes"], rt["syms"], rt["offs"], rt["dbase"], rt["codebooks"],
     )
+
+
+# ---------------------------------------------------------------------------
+# bf16 one-hot codebook-select option (ICQ_ONEHOT_DTYPE)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["v1", "v2"])
+@pytest.mark.parametrize("n_bits", [2, 3])
+def test_onehot_bf16_parity_tolerance_both_kernels(fmt, n_bits):
+    """onehot='bf16' halves the (BR, BC, C) select temporary; the result
+    is each codebook level rounded to bf16 — matmul and dequant must
+    agree with the f32 one-hot to bf16 mantissa tolerance, and the f32
+    path must stay bitwise-exact against the reference."""
+    R, C = 64, 512
+    W = heavy_tailed_weights(R, C, seed=n_bits * 11)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    rt = ops.to_runtime(pk, fmt=fmt, **(dict(tile=256) if fmt == "v2" else {}))
+
+    kw = dict(block_r=32) if fmt == "v2" else dict(block_r=32, block_c=256)
+    w32 = np.asarray(ops.dequant(rt, onehot="f32", **kw))
+    wbf = np.asarray(ops.dequant(rt, onehot="bf16", **kw))
+    np.testing.assert_array_equal(w32, np.asarray(core.dequantize(pk)))
+    np.testing.assert_allclose(wbf, w32, rtol=8e-3, atol=8e-3)
+    assert not np.array_equal(wbf, w32)   # bf16 rounding is real
+
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((8, C)), jnp.float32)
+    mkw = dict(block_m=8, block_n=32)
+    if fmt == "v1":
+        mkw["block_k"] = 256
+    y32 = np.asarray(ops.matmul(x, rt, onehot="f32", **mkw))
+    ybf = np.asarray(ops.matmul(x, rt, onehot="bf16", **mkw))
+    np.testing.assert_allclose(ybf, y32, rtol=2e-2, atol=2e-2)
+
+
+def test_onehot_env_default_and_vmem_estimate(monkeypatch):
+    from repro.kernels.icq_dequant import onehot_itemsize
+    from repro.kernels.platform import default_onehot_dtype
+
+    monkeypatch.delenv("ICQ_ONEHOT_DTYPE", raising=False)
+    assert default_onehot_dtype() == "f32" and onehot_itemsize() == 4
+    monkeypatch.setenv("ICQ_ONEHOT_DTYPE", "bf16")
+    assert default_onehot_dtype() == "bf16" and onehot_itemsize() == 2
+    monkeypatch.setenv("ICQ_ONEHOT_DTYPE", "fp8")
+    with pytest.raises(ValueError):
+        default_onehot_dtype()
+
+    # the bf16 one-hot halves the dominant VMEM term, so the same block
+    # candidate bills roughly half the budget for large C
+    e32 = backend.vmem_bytes_estimate(128, 128, 512, n_bits=3, C=16,
+                                      onehot="f32")
+    ebf = backend.vmem_bytes_estimate(128, 128, 512, n_bits=3, C=16,
+                                      onehot="bf16")
+    assert ebf < e32
+
+
+def test_onehot_qualifies_autotune_keys_and_rejects_bad_values(monkeypatch):
+    """VMEM admission depends on the one-hot width, so block winners
+    tuned under bf16 must never be replayed by an f32 run (and vice
+    versa): the dtype is part of the cache key. Bad explicit kwargs are
+    a ValueError at the kernel entry, not a KeyError mid-trace."""
+    from repro.kernels import autotune
+
+    monkeypatch.delenv("ICQ_ONEHOT_DTYPE", raising=False)
+    k_f32 = autotune.matmul_key(1, 16, 96, 4, "pallas", True)
+    k_bf16 = autotune.matmul_key(1, 16, 96, 4, "pallas", True,
+                                 onehot="bf16")
+    assert k_f32 != k_bf16 and k_bf16.endswith("_oh-bf16")
+    # the un-suffixed f32 spelling keeps existing cache files valid
+    assert "oh-" not in k_f32
+    # env default flows into un-pinned keys
+    monkeypatch.setenv("ICQ_ONEHOT_DTYPE", "bf16")
+    assert autotune.matmul_key(1, 16, 96, 4, "pallas", True) == k_bf16
+    assert autotune.dequant_key(16, 96, 4, "pallas", True,
+                                fmt="v2").endswith("_v2_oh-bf16")
+    monkeypatch.delenv("ICQ_ONEHOT_DTYPE", raising=False)
+
+    W = heavy_tailed_weights(16, 96, seed=0)
+    pk = core.quantize(jnp.asarray(W), 4, gamma=0.05)
+    rt = ops.to_runtime(pk)
+    with pytest.raises(ValueError, match="onehot"):
+        ops.dequant(rt, onehot="fp8")
+    with pytest.raises(ValueError, match="onehot"):
+        ops.matmul(jnp.zeros((2, 96), jnp.float32), rt, onehot="f16")

@@ -1,0 +1,238 @@
+"""Chunked prefill (ISSUE-4): S>1 per-lane scatter parity + engine
+token-identity + autotune bucket registration.
+
+The contract under test: chunking only changes *when* cache rows are
+written, never what any sampled token sees — so a chunked prompt walk
+must produce a bitwise-identical KV cache and identical next-token
+logits to the token-by-token walk (including ragged chunk tails and a
+recycled slot admitted mid-chunk), and greedy engine output must be
+token-identical across wave / chunk=1 / chunk>1.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.steps import (
+    make_cache,
+    make_prefill_chunk_step,
+    sync_cache_positions,
+)
+from repro.models import init_model
+from repro.models.model import lm_apply
+from repro.serving import GenerationEngine, Request
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _attn_leaves(cache):
+    return {k: np.asarray(v) for k, v in cache["stack"]["attn"].items()
+            if k != "index"}
+
+
+# ---------------------------------------------------------------------------
+# layer-level: chunked walk == token-by-token walk, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_chunked_prompt_walk_bitwise_cache_and_logits(arch):
+    """gqa_apply (llama) and mla_apply (minicpm3) S>1 per-lane scatter:
+    ragged tails (prompt lengths not multiples of the chunk), one lane
+    admitted a chunk late into a recycled position, write-masked
+    mid-chunk — cache and next-token logits must match the 1-token walk
+    bitwise."""
+    cfg, params = _setup(arch)
+    B, L, S = 3, 16, 4
+    rng = np.random.default_rng(0)
+    plens = [8, 5, 6]              # 8 = 2 full chunks, 5/6 = ragged tails
+    starts = [0, 0, 4]             # lane 2 admitted mid-run (recycled slot)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+
+    # oracle: token-by-token walk (the PR-3 admission path)
+    cache1 = make_cache(params, cfg, B, L, per_lane=True)
+    for t in range(max(s + n for s, n in zip(starts, plens))):
+        lens = np.zeros(B, np.int32)
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros(B, np.int32)
+        for i in range(B):
+            j = t - starts[i]
+            if 0 <= j < plens[i]:
+                lens[i], toks[i, 0], pos[i] = 1, prompts[i][j], j
+        if not lens.any():
+            continue
+        c = sync_cache_positions(cache1, jnp.asarray(pos.copy()))
+        _, cache1, _ = lm_apply(params, cfg, jnp.asarray(toks), cache=c,
+                                start_pos=jnp.asarray(pos.copy()),
+                                seq_lens=jnp.asarray(lens))
+        jax.block_until_ready(cache1)
+
+    # chunked walk through the jitted second program
+    chunk_step = jax.jit(make_prefill_chunk_step(cfg))
+    cache2 = make_cache(params, cfg, B, L, per_lane=True)
+    consumed = np.zeros(B, np.int32)
+    for c in range(3):
+        lens = np.zeros(B, np.int32)
+        toks = np.zeros((B, S), np.int32)
+        for i in range(B):
+            if i == 2 and c == 0:        # not yet admitted
+                continue
+            n = min(S, plens[i] - consumed[i])
+            if n > 0:
+                toks[i, :n] = prompts[i][consumed[i]: consumed[i] + n]
+                lens[i] = n
+        cache2 = chunk_step(params, cache2, jnp.asarray(toks),
+                            jnp.asarray(consumed.copy()), jnp.asarray(lens))
+        consumed += lens
+    assert list(consumed) == plens
+
+    for name, a in _attn_leaves(cache1).items():
+        b = _attn_leaves(cache2)[name]
+        assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), (
+            f"{name} cache diverges between chunked and 1-token walks")
+
+    # next-token logits (what the first generated token would see)
+    nxt = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
+    pos = np.asarray(plens, np.int32)
+
+    def decode_logits(cache):
+        c = sync_cache_positions(cache, jnp.asarray(pos))
+        return np.asarray(lm_apply(params, cfg, jnp.asarray(nxt), cache=c,
+                                   start_pos=jnp.asarray(pos))[0])
+
+    l1, l2 = decode_logits(cache1), decode_logits(cache2)
+    assert np.array_equal(l1.view(np.uint8), l2.view(np.uint8))
+
+
+def test_seq_lens_requires_per_lane_cache():
+    cfg, params = _setup("llama3.2-1b")
+    cache = make_cache(params, cfg, 2, 8, per_lane=False)
+    with pytest.raises(NotImplementedError):
+        lm_apply(params, cfg, jnp.zeros((2, 2), jnp.int32), cache=cache,
+                 start_pos=jnp.zeros((), jnp.int32),
+                 seq_lens=jnp.ones((2,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: greedy token identity + metrics split
+# ---------------------------------------------------------------------------
+
+def _mixed_specs(cfg, n, seed=2, prompt_hi=25):
+    rng = np.random.default_rng(seed)
+    return [dict(rid=rid,
+                 prompt=rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(2, prompt_hi))
+                                     ).astype(np.int32),
+                 max_new_tokens=int(rng.integers(2, 8)))
+            for rid in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_engine_chunked_greedy_token_identical(arch):
+    """wave == continuous chunk=1 == continuous chunk=4, per request,
+    with more requests than slots so lanes recycle while neighbors are
+    still mid-chunk."""
+    cfg, params = _setup(arch)
+    specs = _mixed_specs(cfg, 5)
+    out, engines = {}, {}
+    for label, kw in (("wave", dict(mode="wave")),
+                      ("chunk1", dict(mode="continuous", prefill_chunk=1)),
+                      ("chunk4", dict(mode="continuous", prefill_chunk=4))):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=40, **kw)
+        for s in specs:
+            eng.submit(Request(**s))
+        out[label] = {rid: r.generated for rid, r in eng.run().items()}
+        engines[label] = eng
+    assert out["chunk4"] == out["chunk1"] == out["wave"]
+
+    m1 = engines["chunk1"].metrics.summary()
+    m4 = engines["chunk4"].metrics.summary()
+    assert m1["prefill_tokens"] == 0 and m1["prefill_steps"] == 0
+    assert m4["prefill_tokens"] > 0 and m4["prefill_steps"] > 0
+    # every bulk prompt token is accounted to exactly one program (the
+    # interleaved decode step may teacher-force a few bulk tokens while
+    # a neighbor lane is still chunking — the chunk program carries the
+    # rest)
+    total_bulk = sum(len(s["prompt"]) - 1 for s in specs)
+    assert (m4["prefill_tokens"] + m4["prompt_decode_tokens"]
+            == total_bulk)
+    assert m1["prompt_decode_tokens"] == total_bulk
+    # draining bulk S-at-a-time must launch fewer programs overall
+    assert m4["prefill_steps"] + m4["decode_steps"] < m1["decode_steps"]
+
+
+def test_chunk1_never_builds_the_chunk_program():
+    """prefill_chunk=1 must be the PR-3 engine bit-for-bit: the second
+    program is never traced, let alone launched."""
+    cfg, params = _setup("llama3.2-1b")
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                           mode="continuous", prefill_chunk=1)
+    assert eng._chunk_step is None
+    eng2 = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                            mode="continuous", prefill_chunk=4)
+    assert eng2._chunk_step is not None
+
+
+def test_prefill_chunk_env_default(monkeypatch):
+    from repro.serving.engine import default_prefill_chunk
+
+    monkeypatch.delenv("ICQ_PREFILL_CHUNK", raising=False)
+    assert default_prefill_chunk() == 1
+    monkeypatch.setenv("ICQ_PREFILL_CHUNK", "8")
+    assert default_prefill_chunk() == 8
+    monkeypatch.setenv("ICQ_PREFILL_CHUNK", "0")
+    with pytest.raises(ValueError):
+        default_prefill_chunk()
+    monkeypatch.setenv("ICQ_PREFILL_CHUNK", "banana")
+    with pytest.raises(ValueError):
+        default_prefill_chunk()
+
+
+def test_engine_rejects_bad_prefill_chunk():
+    cfg, params = _setup("llama3.2-1b")
+    with pytest.raises(ValueError):
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="continuous", prefill_chunk=0)
+
+
+# ---------------------------------------------------------------------------
+# autotune: the chunk-M bucket reaches the per-arm block table
+# ---------------------------------------------------------------------------
+
+def test_register_prefill_m_extends_bucket_table():
+    from repro.kernels import autotune, backend
+
+    orig = autotune.PREFILL_MS
+    try:
+        autotune.register_prefill_m(48)
+        assert 48 in autotune.PREFILL_MS
+        assert autotune.PREFILL_MS == tuple(sorted(autotune.PREFILL_MS))
+        # idempotent; decode M never becomes a bucket
+        autotune.register_prefill_m(48)
+        assert autotune.PREFILL_MS.count(48) == 1
+        autotune.register_prefill_m(1)
+        assert 1 not in autotune.PREFILL_MS
+        # bucket_m now resolves chunk-sized calls to the new bucket
+        assert backend.bucket_m(48) == 48
+        below = [m for m in autotune.PREFILL_MS if m <= 47]
+        assert backend.bucket_m(47) == (max(below) if below else 1)
+    finally:
+        autotune.PREFILL_MS = orig
+
+
+def test_engine_registers_chunk_bucket():
+    from repro.kernels import autotune
+
+    cfg, params = _setup("llama3.2-1b")
+    orig = autotune.PREFILL_MS
+    try:
+        GenerationEngine(params, cfg, batch_size=3, max_len=16,
+                         mode="continuous", prefill_chunk=16)
+        assert 48 in autotune.PREFILL_MS   # batch * chunk
+    finally:
+        autotune.PREFILL_MS = orig
