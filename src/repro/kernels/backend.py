@@ -143,6 +143,18 @@ class ICQPrepared:
 
     v1 carries ``bitmap`` (``syms``/``offs``/``dbase`` are None);
     v2 carries the checkpointed stream (``bitmap`` is None).
+
+    ``sel_memo`` is the pure-XLA arm's decoded-selector memo: a packed
+    1-bit bitmap (v1 layout, unpadded) materialized once at prepare time
+    when the weight will execute on the XLA arm, so per-call graphs
+    unpack it with a shift/mask instead of re-decoding the v2 gap stream
+    in-graph (cumsum + scatter per launch — the chunked-prefill TTFT
+    regression PR 4 measured). The memo is bit-derived from the exact
+    decode it replaces, so XLA-arm outputs are unchanged bitwise. It is
+    *excluded* from the bits/weight accounting: it exists only on the
+    off-TPU fallback arm (where HBM residency is not the constraint the
+    runtime-format numbers are about) and never ships to the Pallas
+    kernels. ``ICQ_XLA_SEL_MEMO=0`` disables it.
     """
 
     codes: jnp.ndarray        # (*lead, pn, pk // k) uint32
@@ -161,19 +173,23 @@ class ICQPrepared:
     interpret: bool = dataclasses.field(metadata=dict(static=True))
     fmt: str = dataclasses.field(default="v1", metadata=dict(static=True))
     b: int = dataclasses.field(default=0, metadata=dict(static=True))
+    sel_memo: Optional[jnp.ndarray] = None  # (*lead, d_out, ceil(d_in/32))
 
     def tree_flatten(self):
         return ((self.codes, self.bitmap, self.codebooks,
-                 self.syms, self.offs, self.dbase),
+                 self.syms, self.offs, self.dbase, self.sel_memo),
                 (self.n_bits, self.d_out, self.d_in, self.block_m,
                  self.block_n, self.block_k, self.backend, self.interpret,
                  self.fmt, self.b))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        *tensors, sel_memo = children
+        return cls(*tensors, *aux, sel_memo=sel_memo)
 
     def _tensors(self):
+        # sel_memo deliberately absent: XLA-fallback compute cache, not
+        # part of the runtime format (see class doc)
         return [t for t in (self.codes, self.bitmap, self.codebooks,
                             self.syms, self.offs, self.dbase)
                 if t is not None]
@@ -397,7 +413,7 @@ def prepare(
     def pad_rows(x):
         return None if x is None else _pad_last2(x, pn, x.shape[-1])
 
-    return ICQPrepared(
+    prep = ICQPrepared(
         codes=_pad_last2(codes, pn, pk // k),
         bitmap=None if fmt == "v2" else _pad_last2(bitmap, pn, pk // 32),
         codebooks=_pad_last2(codebooks.astype(cb_dtype), pn, C),
@@ -415,6 +431,26 @@ def prepare(
         fmt=fmt,
         b=b,
     )
+    if fmt == "v2" and backend != "pallas" and xla_sel_memo_enabled():
+        # memoize the decoded selector for the pure-XLA arm: the stream
+        # decode below is exactly the per-call computation the memo
+        # replaces, so the selector (and every downstream weight gather)
+        # is bit-identical with or without it — it runs once here, at
+        # load time, instead of inside every jitted launch. Keyed on the
+        # *backend*, not on choose_path's per-call arm: a stacked
+        # pallas-backend weight does fall to the XLA arm if applied
+        # outside its layer scan, but building the memo for that case
+        # would charge ~1 b/w of real TPU HBM to speed up a path the
+        # scan-sliced serving hot loop never takes.
+        sel = _xla_selector(prep).astype(jnp.uint32)
+        prep = dataclasses.replace(prep, sel_memo=packing.pack_codes(sel, 1))
+    return prep
+
+
+def xla_sel_memo_enabled() -> bool:
+    """ICQ_XLA_SEL_MEMO (default on): memoize the decoded v2 selector as a
+    packed bitmap for weights prepared onto the pure-XLA arm."""
+    return os.environ.get("ICQ_XLA_SEL_MEMO", "1") not in ("0", "false", "")
 
 
 def prepare_tree(params: Any, **kw) -> Any:
@@ -495,6 +531,11 @@ def arm_blocks(M: int, prep: ICQPrepared) -> Tuple[int, int, int]:
 
 def _xla_selector(prep: ICQPrepared) -> jnp.ndarray:
     """(*lead, d_out, d_in) int32 selector via the prepared tensors."""
+    if prep.sel_memo is not None:
+        # prepare-time memo of the v2 stream decode below (bit-identical
+        # by construction): per-call cost drops to one shift/mask unpack.
+        return packing.unpack_codes(
+            prep.sel_memo, 1, prep.d_in).astype(jnp.int32)
     if prep.fmt == "v1":
         return packing.unpack_codes(
             prep.bitmap[..., : prep.d_out, :], 1, prep.d_in

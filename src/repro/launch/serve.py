@@ -53,6 +53,24 @@ def main():
                          "legacy behavior, bit-for-bit); default follows "
                          "ICQ_PREFILL_CHUNK (1). Greedy output is "
                          "token-identical either way")
+    ap.add_argument("--kv-layout", default=None,
+                    choices=["contiguous", "paged"],
+                    help="KV-cache layout (continuous mode): 'contiguous' "
+                         "charges batch*max_len rows up front; 'paged' "
+                         "serves from a block pool with per-lane page "
+                         "tables, decoupling cache HBM from max_len "
+                         "(allocator-aware admission + preempt-and-requeue "
+                         "under pressure; greedy output is token-identical "
+                         "either way). Default follows ICQ_KV_LAYOUT "
+                         "(contiguous)")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="paged KV: cache rows per block (default "
+                         "ICQ_KV_BLOCK_SIZE / 16)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged KV: physical blocks in the pool (default "
+                         "batch * ceil(max_len / block_size) = contiguous "
+                         "capacity; shrink to oversubscribe and trade "
+                         "preemptions for HBM)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -90,9 +108,16 @@ def main():
                               runtime_fmt=args.runtime_fmt,
                               mode=args.mode, sampling=sampling,
                               seed=args.seed,
-                              prefill_chunk=args.prefill_chunk)
+                              prefill_chunk=args.prefill_chunk,
+                              kv_layout=args.kv_layout,
+                              kv_block_size=args.kv_block_size,
+                              kv_blocks=args.kv_blocks)
+    kv_desc = engine.kv_layout
+    if engine.kv_layout == "paged":
+        kv_desc += (f": {engine.kv_blocks} blocks x "
+                    f"{engine.kv_block_size} rows")
     print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
-          f"prefill_chunk={engine.prefill_chunk})")
+          f"prefill_chunk={engine.prefill_chunk}, kv={kv_desc})")
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -115,7 +140,12 @@ def main():
                   f"max_new {args.max_new} exceeds max_len "
                   f"{args.max_len}; truncating budget to {max_new} "
                   f"new tokens")
-        engine.submit(Request(rid, prompt, max_new_tokens=max_new))
+        try:
+            engine.submit(Request(rid, prompt, max_new_tokens=max_new))
+        except ValueError as e:
+            # e.g. a paged pool too small to ever serve this request:
+            # mirror the max_len policy above — reject, don't crash
+            print(f"[serve] REJECT req {rid}: {e}")
 
     done = engine.run()
     for rid in sorted(done):
@@ -130,6 +160,12 @@ def main():
           f"ttft p50 {s['ttft_p50']:.3f}s, prompt split "
           f"{int(s['prefill_tokens'])} chunked / "
           f"{int(s['prompt_decode_tokens'])} walked)")
+    if engine.kv_layout == "paged":
+        print(f"[serve] paged KV: cache {int(s['cache_bytes'])} bytes "
+              f"({int(s['kv_blocks'])} x {int(s['kv_block_size'])} rows), "
+              f"{int(s['preemptions'])} preemptions, block utilization "
+              f"{s['mean_block_utilization']:.2f} mean / "
+              f"{int(s['peak_blocks_in_use'])} peak blocks")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,26 @@ def sync_cache_positions(cache, start_pos):
     return cache
 
 
+def sync_cache_pages(cache, pages):
+    """Overwrite every ``pages`` leaf of a (stacked) paged cache.
+
+    The serving engine's host-side block allocator
+    (serving/kv_pool.py) owns the page tables; like the position
+    vector, the device copy is just a mirror shipped in with each
+    launch. ``pages`` is (B, max_blocks); stacked leaves carry a
+    leading layer axis it broadcasts across (every layer maps logical
+    positions through the same table — blocks are allocated per
+    logical position, and each layer has its own physical pool).
+    """
+    if isinstance(cache, dict):
+        return {
+            k: (jnp.broadcast_to(pages, v.shape).astype(v.dtype)
+                if k == "pages" else sync_cache_pages(v, pages))
+            for k, v in cache.items()
+        }
+    return cache
+
+
 def make_prefill_chunk_step(cfg):
     """S-token prompt-chunk admission step for the continuous engine.
 
@@ -171,9 +191,16 @@ def make_prefill_chunk_step(cfg):
     norm + lm_head are skipped entirely (the first *generated* token's
     logits always come from the decode step consuming the last prompt
     token, so chunking never changes what that token sees).
+
+    ``pages`` (B, max_blocks) is the paged-KV page table (None for the
+    contiguous layout): chunk rows then land at physical block offsets
+    via the same table the decode step reads through.
     """
 
-    def prefill_chunk_step(params, cache, tokens, start_pos, seq_lens):
+    def prefill_chunk_step(params, cache, tokens, start_pos, seq_lens,
+                           pages=None):
+        if pages is not None:
+            cache = sync_cache_pages(cache, pages)
         cache = sync_cache_positions(cache, start_pos)
         _, cache, _ = lm_apply(
             params, cfg, tokens, cache=cache, start_pos=start_pos,
@@ -192,10 +219,18 @@ def make_decode_step(cfg):
     ``index`` leaves are overridden from ``start_pos`` before the forward
     pass, so the caller's position vector is the single source of truth
     (admitting a request into a recycled slot resets only host state).
+
+    ``pages`` (B, max_blocks) mirrors the host block allocator's page
+    tables into a paged cache's ``pages`` leaves (kv_layout='paged');
+    ``reset`` (B,) zeroes recycled lanes' recurrent SSM state before the
+    token is consumed (continuous serving of ssm/hybrid mixers). Both
+    default to None and change nothing for contiguous attention caches.
     """
 
     def decode_step(params, cache, tokens, start_pos, enc_out=None,
-                    frame_mask=None):
+                    frame_mask=None, pages=None, reset=None):
+        if pages is not None:
+            cache = sync_cache_pages(cache, pages)
         if jnp.ndim(start_pos):
             cache = sync_cache_positions(cache, start_pos)
         if cfg.is_encdec:
@@ -205,7 +240,8 @@ def make_decode_step(cfg):
             )
             return logits[:, -1], cache
         logits, cache, _ = lm_apply(
-            params, cfg, tokens, cache=cache, start_pos=start_pos
+            params, cfg, tokens, cache=cache, start_pos=start_pos,
+            reset=reset,
         )
         return logits[:, -1], cache
 
@@ -213,11 +249,17 @@ def make_decode_step(cfg):
 
 
 def make_cache(params, cfg, batch: int, max_len: int,
-               per_lane: bool = False):
+               per_lane: bool = False, paged=None):
+    """``paged=(num_blocks, block_size)`` builds the block-pool KV layout
+    (requires ``per_lane=True``; see serving/kv_pool.py)."""
     if cfg.is_encdec:
+        if paged is not None:
+            raise NotImplementedError(
+                "paged KV caches are not supported for enc-dec models")
         return encdec_cache_init(params, cfg, batch, max_len,
                                  per_lane=per_lane)
-    return lm_cache_init(params, cfg, batch, max_len, per_lane=per_lane)
+    return lm_cache_init(params, cfg, batch, max_len, per_lane=per_lane,
+                         paged=paged)
 
 
 def prepare_serving_params(params, mode: str = "prepared", **prepare_kw):

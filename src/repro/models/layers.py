@@ -203,6 +203,41 @@ def _check_seq_lens(seq_lens, cache) -> None:
             "slot cache (make_cache(..., per_lane=True))")
 
 
+def _paged_scatter(pool: jnp.ndarray, pages: jnp.ndarray, cols: jnp.ndarray,
+                   values: jnp.ndarray) -> jnp.ndarray:
+    """Write ``values`` (B, S, ...) into a block pool through a page table.
+
+    ``pool`` is (num_blocks, block_size, ...); ``pages`` (B, n_pt) maps
+    each lane's logical block j to a physical block (-1 = unmapped);
+    ``cols`` (B, S) holds logical positions with invalid entries already
+    pushed to ``n_pt * block_size`` by ``_chunk_write_cols``. Invalid
+    columns and unmapped pages resolve to physical block ``num_blocks``,
+    which the ``mode='drop'`` scatter discards — mirroring the
+    contiguous path's out-of-range-write semantics exactly.
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    n_pt = pages.shape[1]
+    blk = jnp.take_along_axis(
+        pages, jnp.clip(cols // bs, 0, n_pt - 1), axis=1)       # (B, S)
+    ok = (cols < n_pt * bs) & (blk >= 0)
+    blk = jnp.where(ok, blk, nb)                                # -> dropped
+    off = jnp.where(ok, cols % bs, 0)
+    return pool.at[blk, off].set(values.astype(pool.dtype), mode="drop")
+
+
+def _paged_gather(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
+    """Read each lane's logical KV view (B, n_pt * block_size, ...) out of
+    the block pool. Unmapped (-1) page entries clamp to block 0 — the
+    gathered garbage sits at logical positions beyond the lane's write
+    index, which the per-lane validity mask already excludes (a lane
+    maps a block before the first write into it, and position ``p`` is
+    written in the same step it first becomes valid)."""
+    nb, bs = pool.shape[0], pool.shape[1]
+    B, n_pt = pages.shape
+    out = pool[jnp.clip(pages, 0, nb - 1)]          # (B, n_pt, bs, ...)
+    return out.reshape((B, n_pt * bs) + pool.shape[2:])
+
+
 def gqa_apply(
     p: Params,
     x: jnp.ndarray,               # (B, S, d_model)
@@ -279,6 +314,28 @@ def gqa_apply(
         cv = cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype))
         cpos = cache["pos"].at[slots].set(write_pos)
         new_cache = dict(k=ck, v=cv, pos=cpos, index=idx + S)
+    elif "pages" in cache:
+        # paged per-lane cache: a global block pool + per-lane page
+        # tables (serving/kv_pool.py). Logical positions are unchanged —
+        # only the physical placement of cache rows differs — so the
+        # attention math below is the contiguous per-lane branch verbatim
+        # over the gathered logical view (bitwise-parity-pinned in
+        # tests/test_kv_pool.py).
+        idx = cache["index"]                        # (B,) per-lane
+        pages = cache["pages"]                      # (B, n_pt), -1 unmapped
+        T = pages.shape[1] * cache["k"].shape[1]    # logical capacity
+        cols = _chunk_write_cols(idx, S, T, seq_lens)
+        ck = _paged_scatter(cache["k"], pages, cols, k)
+        cv = _paged_scatter(cache["v"], pages, cols, v)
+        adv = S if seq_lens is None else seq_lens
+        pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        k_valid = pos_k < (idx + adv)[:, None]
+        out = chunked_attention(
+            q, _paged_gather(ck, pages), _paged_gather(cv, pages),
+            positions, pos_k, k_valid,
+            causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk,
+        )
+        new_cache = dict(k=ck, v=cv, index=idx + adv, pages=pages)
     else:
         idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
         if idx.ndim:
@@ -312,12 +369,33 @@ def gqa_apply(
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 
+def _check_paged(paged, per_lane: bool):
+    """Validate a ``paged=(num_blocks, block_size)`` cache request; returns
+    (num_blocks, block_size) or None."""
+    if paged is None:
+        return None
+    if not per_lane:
+        raise NotImplementedError(
+            "a paged KV cache requires per-lane positions "
+            "(make_cache(..., per_lane=True))")
+    num_blocks, block_size = paged
+    if num_blocks < 1 or block_size < 1:
+        raise ValueError(f"paged cache needs num_blocks >= 1 and "
+                         f"block_size >= 1, got {paged}")
+    return int(num_blocks), int(block_size)
+
+
 def gqa_cache_init(cfg, batch: int, max_len: int,
-                   per_lane: bool = False) -> Params:
+                   per_lane: bool = False, paged=None) -> Params:
     """KV cache. ``per_lane=True`` gives the write index a (B,) batch axis
-    (continuous-batching slot cache: every lane tracks its own position)."""
+    (continuous-batching slot cache: every lane tracks its own position).
+    ``paged=(num_blocks, block_size)`` replaces the contiguous (B, max_len)
+    rows with a global block pool plus per-lane page tables (-1 =
+    unmapped); cache HBM becomes num_blocks * block_size rows, decoupled
+    from batch * max_len."""
     hd = cfg.resolved_head_dim
     dt = _dtype(cfg)
+    paged = _check_paged(paged, per_lane)
     if cfg.sliding_window and cfg.sliding_window < max_len:
         if per_lane:
             raise NotImplementedError(
@@ -330,6 +408,15 @@ def gqa_cache_init(cfg, batch: int, max_len: int,
             v=jnp.zeros((batch, W, cfg.n_kv_heads, hd), dt),
             pos=jnp.full((W,), -1, jnp.int32),
             index=jnp.zeros((), jnp.int32),
+        )
+    if paged is not None:
+        nb, bs = paged
+        n_pt = -(-max_len // bs)
+        return dict(
+            k=jnp.zeros((nb, bs, cfg.n_kv_heads, hd), dt),
+            v=jnp.zeros((nb, bs, cfg.n_kv_heads, hd), dt),
+            index=jnp.zeros((batch,), jnp.int32),
+            pages=jnp.full((batch, n_pt), -1, jnp.int32),
         )
     return dict(
         k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
@@ -415,13 +502,22 @@ def mla_apply(
 
     # decode: absorb W_uk into q, attend directly over the latent cache
     idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
-    if idx.ndim:
+    pages = cache.get("pages")      # paged latent cache (see gqa_apply)
+    if pages is not None:
+        T = pages.shape[1] * cache["c_kv"].shape[1]
+        cols = _chunk_write_cols(idx, S, T, seq_lens)
+        cc = _paged_scatter(cache["c_kv"], pages, cols, c_kv)
+        cr = _paged_scatter(cache["k_rope"], pages, cols, k_rope[:, :, 0, :])
+        cc_log = _paged_gather(cc, pages)
+        cr_log = _paged_gather(cr, pages)
+    elif idx.ndim:
         rows = jnp.arange(B, dtype=jnp.int32)[:, None]
         cols = _chunk_write_cols(idx, S, cache["c_kv"].shape[1], seq_lens)
         cc = cache["c_kv"].at[rows, cols].set(
             c_kv.astype(cache["c_kv"].dtype), mode="drop")
         cr = cache["k_rope"].at[rows, cols].set(
             k_rope[:, :, 0, :].astype(cache["k_rope"].dtype), mode="drop")
+        cc_log, cr_log = cc, cr
     else:
         cc = jax.lax.dynamic_update_slice(
             cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0)
@@ -430,7 +526,8 @@ def mla_apply(
             cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
             (0, idx, 0),
         )
-    T = cc.shape[1]
+        cc_log, cr_log = cc, cr
+    T = cc_log.shape[1]
     adv = S if seq_lens is None else seq_lens       # per-lane tokens added
     w_uk = as_dense(p["w_uk"]).reshape(r, H, nd)
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)           # absorbed q
@@ -438,20 +535,33 @@ def mla_apply(
     k_valid = pos_k < ((idx + adv)[:, None] if idx.ndim else idx + adv)
     # treat latent dims + rope dims as one concatenated "head dim"
     q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,S,H,r+rd)
-    k_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]    # (B,T,1,r+rd)
+    k_cat = jnp.concatenate(
+        [cc_log, cr_log], axis=-1)[:, :, None, :]                # (B,T,1,r+rd)
     ctx = chunked_attention(
-        q_cat, k_cat, cc[:, :, None, :], positions, pos_k, k_valid,
+        q_cat, k_cat, cc_log[:, :, None, :], positions, pos_k, k_valid,
         causal=True, chunk=cfg.attn_chunk, scale=scale,
     )                                                            # (B,S,H,r)
     w_uv = as_dense(p["w_uv"]).reshape(r, H, vd)
     out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
     new_cache = dict(c_kv=cc, k_rope=cr, index=idx + adv)
+    if pages is not None:
+        new_cache["pages"] = pages
     return linear(out.reshape(B, S, -1), p["wo"]), new_cache
 
 
 def mla_cache_init(cfg, batch: int, max_len: int,
-                   per_lane: bool = False) -> Params:
+                   per_lane: bool = False, paged=None) -> Params:
     dt = _dtype(cfg)
+    paged = _check_paged(paged, per_lane)
+    if paged is not None:
+        nb, bs = paged
+        n_pt = -(-max_len // bs)
+        return dict(
+            c_kv=jnp.zeros((nb, bs, cfg.kv_lora_rank), dt),
+            k_rope=jnp.zeros((nb, bs, cfg.qk_rope_head_dim), dt),
+            index=jnp.zeros((batch,), jnp.int32),
+            pages=jnp.full((batch, n_pt), -1, jnp.int32),
+        )
     return dict(
         c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
         k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),

@@ -88,11 +88,17 @@ def block_apply(
     enc_out: Optional[jnp.ndarray] = None,
     enc_mask: Optional[jnp.ndarray] = None,
     seq_lens: Optional[jnp.ndarray] = None,
+    reset: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     """Returns (x, new_cache, aux_loss).
 
     ``seq_lens`` (B,) is the chunked-prefill validity mask: number of
     valid tokens this S-chunk per lane (per-lane caches only; GQA/MLA).
+    ``reset`` (B,) is the continuous-serving lane-reset mask for
+    recurrent mixers: lanes admitted into a recycled slot this step get
+    their conv/SSM state zeroed before consuming the new token
+    (attention caches need no reset — their per-lane write index is the
+    single source of truth).
     """
     aux = jnp.zeros((), jnp.float32)
     kind = _mixer_kind(cfg)
@@ -121,7 +127,8 @@ def block_apply(
             new_cache = dict(attn=mc)
     elif kind == "ssm":
         out, sc = ssm_mod.mamba2_apply(
-            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"]
+            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"],
+            reset=reset,
         )
         if cache is not None:
             new_cache = dict(ssm=sc)
@@ -131,7 +138,8 @@ def block_apply(
             cache=None if cache is None else cache["attn"], causal=causal,
         )
         s_out, sc = ssm_mod.mamba2_apply(
-            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"]
+            p["ssm"], h, cfg, cache=None if cache is None else cache["ssm"],
+            reset=reset,
         )
         out = 0.5 * (a_out + s_out)
         if cache is not None:
@@ -158,23 +166,30 @@ def block_apply(
 
 
 def block_cache_init(cfg, batch: int, max_len: int,
-                     per_lane: bool = False) -> Params:
+                     per_lane: bool = False, paged=None) -> Params:
     """``per_lane=True`` builds a continuous-batching slot cache: the KV
     write index carries a (B,) batch axis so every lane advances (and is
-    recycled) independently. Only position-indexed caches support this —
-    recurrent SSM state has no per-position addressing to reset lane-wise."""
+    recycled) independently. Recurrent SSM state is per-lane by
+    construction (its state already carries a batch axis); recycling it
+    is a lane-reset mask (``mamba2_apply(reset=...)``), not a position
+    rewind. ``paged=(num_blocks, block_size)`` swaps the attention
+    cache's contiguous (B, max_len) rows for a block pool + per-lane
+    page tables (serving/kv_pool.py); SSM state has no positions to
+    page."""
     kind = _mixer_kind(cfg)
-    if per_lane and kind in ("ssm", "hybrid"):
+    if paged is not None and kind == "ssm":
         raise NotImplementedError(
-            f"per-lane cache positions are not supported for the "
-            f"{kind!r} mixer (recurrent SSM state); use the wave engine")
+            "a paged KV cache needs an attention cache; the 'ssm' mixer "
+            "carries recurrent state only")
     c: Params = {}
     if kind in ("gqa", "hybrid"):
-        c["attn"] = gqa_cache_init(cfg, batch, max_len, per_lane=per_lane)
+        c["attn"] = gqa_cache_init(cfg, batch, max_len, per_lane=per_lane,
+                                   paged=paged)
     if kind == "mla":
-        c["attn"] = mla_cache_init(cfg, batch, max_len, per_lane=per_lane)
+        c["attn"] = mla_cache_init(cfg, batch, max_len, per_lane=per_lane,
+                                   paged=paged)
     if kind in ("ssm", "hybrid"):
-        c["ssm"] = ssm_mod.mamba2_cache_init(cfg, batch)
+        c["ssm"] = ssm_mod.mamba2_cache_init(cfg, batch, per_lane=per_lane)
     return c
 
 
@@ -197,6 +212,7 @@ def stack_apply(
     enc_out: Optional[jnp.ndarray] = None,
     enc_mask: Optional[jnp.ndarray] = None,
     seq_lens: Optional[jnp.ndarray] = None,
+    reset: Optional[jnp.ndarray] = None,
 ):
     """Scan over the leading layer axis of `stack` (and `cache`)."""
 
@@ -209,6 +225,7 @@ def stack_apply(
         xo, co, aux = block_apply(
             pl, xx, cfg, positions, cache=cl, causal=causal,
             enc_out=enc_out, enc_mask=enc_mask, seq_lens=seq_lens,
+            reset=reset,
         )
         return (xo, aux_sum + aux), co
 
@@ -280,6 +297,7 @@ def lm_apply(
     prefix_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) stub frontend
     seq_lens: Optional[jnp.ndarray] = None,       # (B,) chunk validity
     compute_logits: bool = True,
+    reset: Optional[jnp.ndarray] = None,          # (B,) SSM lane-reset mask
 ) -> Tuple[Optional[jnp.ndarray], Optional[Params], jnp.ndarray]:
     """Returns (logits (B, S, vocab), new_cache, aux_loss).
 
@@ -313,13 +331,13 @@ def lm_apply(
     if "dense_stack" in p:
         dc = None if cache is None else cache["dense_stack"]
         x, c, aux = stack_apply(p["dense_stack"], x, cfg, positions, cache=dc,
-                                seq_lens=seq_lens)
+                                seq_lens=seq_lens, reset=reset)
         aux_total += aux
         if cache is not None:
             new_cache["dense_stack"] = c
     mc = None if cache is None else cache["stack"]
     x, c, aux = stack_apply(p["stack"], x, cfg, positions, cache=mc,
-                            seq_lens=seq_lens)
+                            seq_lens=seq_lens, reset=reset)
     aux_total += aux
     if cache is not None:
         new_cache["stack"] = c
@@ -361,12 +379,13 @@ def mtp_logits(p: Params, cfg, hidden: jnp.ndarray, tokens: jnp.ndarray):
 
 
 def lm_cache_init(p: Params, cfg, batch: int, max_len: int,
-                  per_lane: bool = False) -> Params:
+                  per_lane: bool = False, paged=None) -> Params:
     n_dense = cfg.first_dense_layers if cfg.family == "moe" else 0
     cache: Params = {}
 
     def stacked(n):
-        layer = block_cache_init(cfg, batch, max_len, per_lane=per_lane)
+        layer = block_cache_init(cfg, batch, max_len, per_lane=per_lane,
+                                 paged=paged)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
             if a.ndim else jnp.zeros((n,), a.dtype), layer

@@ -182,8 +182,24 @@ def mamba2_apply(
     x: jnp.ndarray,                 # (B, S, d_model)
     cfg,
     cache: Optional[Params] = None,
+    reset: Optional[jnp.ndarray] = None,   # (B,) bool lane-reset mask
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """``reset`` marks lanes admitted into a recycled slot this step:
+    their conv history and SSM state slices are zeroed *before* the new
+    token is consumed, so a recycled lane starts from exactly the state a
+    fresh wave cache would give it — this is what lets the continuous
+    engine serve recurrent (positionless) mixers, where there is no
+    per-position write index to rewind."""
     B_, S, _ = x.shape
+    if reset is not None and cache is not None:
+        r = jnp.asarray(reset, bool)
+        cache = dict(
+            cache,
+            conv=jnp.where(r[:, None, None],
+                           jnp.zeros_like(cache["conv"]), cache["conv"]),
+            ssm=jnp.where(r[:, None, None, None],
+                          jnp.zeros_like(cache["ssm"]), cache["ssm"]),
+        )
     di = d_inner(cfg)
     h = n_ssm_heads(cfg)
     g, n = cfg.ssm_groups, cfg.ssm_state
@@ -227,7 +243,11 @@ def mamba2_apply(
     return linear(y, p["out_proj"]), new_cache
 
 
-def mamba2_cache_init(cfg, batch: int) -> Params:
+def mamba2_cache_init(cfg, batch: int, per_lane: bool = False) -> Params:
+    """``per_lane=True`` gives the (bookkeeping-only) index a (B,) batch
+    axis so the cache composes with the continuous engine's per-lane
+    position sync; conv/ssm state already carries a batch axis — lane
+    independence is structural, only the *reset* needs a mask."""
     dt_ = jnp.dtype(cfg.param_dtype)
     di = d_inner(cfg)
     h = n_ssm_heads(cfg)
@@ -235,5 +255,5 @@ def mamba2_cache_init(cfg, batch: int) -> Params:
     return dict(
         conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * g * n), dt_),
         ssm=jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
-        index=jnp.zeros((), jnp.int32),
+        index=jnp.zeros((batch,) if per_lane else (), jnp.int32),
     )

@@ -1,4 +1,5 @@
 from repro.serving.engine import GenerationEngine, make_serving_step
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector, RequestMetrics
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import Request, Slot, SlotScheduler
@@ -6,6 +7,7 @@ from repro.serving.scheduler import Request, Slot, SlotScheduler
 __all__ = [
     "GenerationEngine",
     "GREEDY",
+    "KVBlockPool",
     "MetricsCollector",
     "Request",
     "RequestMetrics",

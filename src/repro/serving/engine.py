@@ -39,12 +39,35 @@ default chunk. Sampling
 default, per-request temperature / top-k / top-p overrides, PRNG key
 threaded from the engine seed.
 
+``kv_layout`` selects how the continuous engine's KV cache charges HBM:
+
+  * 'contiguous' (default; ``ICQ_KV_LAYOUT`` overrides) — every lane
+    owns ``max_len`` cache rows up front: bit-for-bit the pre-paging
+    engine. Cache HBM = ``batch * max_len`` rows regardless of traffic.
+  * 'paged' — vLLM-style block pool (serving/kv_pool.py): cache rows
+    live in ``kv_blocks`` physical blocks of ``kv_block_size`` rows;
+    lanes map logical positions through per-lane page tables, appending
+    a block only when their position crosses a block boundary and
+    giving every block back the step they finish. Admission becomes
+    allocator-aware (a request is only admitted when free blocks cover
+    its prompt plus a minimum decode budget) and pool exhaustion
+    preempts the youngest lane — its request requeues at the queue
+    head with generated tokens folded into the prompt, so a greedy
+    stream is *recomputed identically* after preemption. Greedy output
+    is token-identical to 'contiguous' (CI-pinned); only HBM footprint
+    and scheduling change. Cache HBM = ``kv_blocks * kv_block_size``
+    rows — decoupled from ``batch * max_len``, which is what converts
+    ICQuant's weight savings into concurrent-lane headroom.
+
 ``mode`` selects the runtime:
 
-  * 'continuous' — the slot engine above. Requires a position-indexed
-    cache (dense / moe / vlm families, full attention); SSM and hybrid
-    mixers (recurrent state), enc-dec models, and sliding-window ring
-    caches are wave-only.
+  * 'continuous' — the slot engine above. Dense / moe / vlm families
+    run it natively; SSM and hybrid mixers run it via per-lane *state
+    reset* (a (B,) reset mask threads into ``mamba2_apply`` and zeroes
+    a recycled lane's conv/ssm state slices the step it is admitted —
+    recurrent state has no positions to rewind, but zeroing on admit is
+    exactly the fresh-cache semantics the wave engine provides).
+    Enc-dec models and sliding-window ring caches stay wave-only.
   * 'wave'       — the legacy wave-synchronous static batcher kept as
     the parity baseline: admit up to ``batch_size`` requests, step every
     lane from position 0 until the *slowest* lane finishes, then admit
@@ -79,6 +102,7 @@ import numpy as np
 
 from repro.launch.steps import make_cache, make_decode_step, \
     make_prefill_chunk_step, prepare_serving_params
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import Request, SlotScheduler
@@ -95,18 +119,27 @@ def make_serving_step(cfg, sample: bool = True):
     sampling arrays and key (argmax only, measurably cheaper per step on
     CPU than the full sampler; the engine uses it whenever no live lane
     has temperature > 0, which keeps greedy serving at wave step cost).
+
+    Both variants take two trailing optional arrays: ``pages`` (B,
+    max_blocks) mirrors the paged-KV page tables into the cache
+    (kv_layout='paged'), ``reset`` (B,) zeroes recycled lanes' recurrent
+    state (continuous ssm/hybrid serving). None (the default) keeps the
+    contiguous-attention contract bit-for-bit.
     """
     decode = make_decode_step(cfg)
 
     def step(params, cache, tokens, pos, live, temperature, top_k, top_p,
-             key):
-        logits, cache = decode(params, cache, tokens, pos)
+             key, pages=None, reset=None):
+        logits, cache = decode(params, cache, tokens, pos, pages=pages,
+                               reset=reset)
         toks = sample_tokens(logits, key, temperature, top_k, top_p,
                              live=live)
         return toks, cache
 
-    def greedy_step(params, cache, tokens, pos, live):
-        logits, cache = decode(params, cache, tokens, pos)
+    def greedy_step(params, cache, tokens, pos, live, pages=None,
+                    reset=None):
+        logits, cache = decode(params, cache, tokens, pos, pages=pages,
+                               reset=reset)
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jnp.where(live, toks, 0), cache
 
@@ -131,12 +164,37 @@ def default_prefill_chunk() -> int:
     return chunk
 
 
+def default_kv_layout() -> str:
+    """Engine default for ``kv_layout`` (ICQ_KV_LAYOUT, default
+    'contiguous' — the pre-paging slot cache, bit-for-bit)."""
+    env = os.environ.get("ICQ_KV_LAYOUT")
+    if not env:
+        return "contiguous"
+    if env not in ("contiguous", "paged"):
+        raise ValueError(
+            f"ICQ_KV_LAYOUT must be 'contiguous' or 'paged', got {env!r}")
+    return env
+
+
+def default_kv_block_size() -> int:
+    """Paged-KV block size default (ICQ_KV_BLOCK_SIZE, default 16 rows)."""
+    env = os.environ.get("ICQ_KV_BLOCK_SIZE")
+    if not env:
+        return 16
+    try:
+        bs = int(env)
+    except ValueError:
+        raise ValueError(
+            f"ICQ_KV_BLOCK_SIZE must be an integer, got {env!r}")
+    if bs < 1:
+        raise ValueError(f"ICQ_KV_BLOCK_SIZE must be >= 1, got {bs}")
+    return bs
+
+
 def _continuous_supported(cfg, max_len: int) -> Optional[str]:
     """None if the config can run the continuous engine, else the reason."""
     if cfg.is_encdec:
         return "enc-dec models admit encoder output wave-at-a-time"
-    if cfg.family in ("ssm", "hybrid"):
-        return f"{cfg.family!r} mixer carries recurrent (positionless) state"
     if cfg.sliding_window and cfg.sliding_window < max_len:
         return "sliding-window ring cache has a batch-global position column"
     return None
@@ -150,6 +208,9 @@ class GenerationEngine:
                  sampling: Optional[SamplingParams] = None,
                  seed: int = 0,
                  prefill_chunk: Optional[int] = None,
+                 kv_layout: Optional[str] = None,
+                 kv_block_size: Optional[int] = None,
+                 kv_blocks: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
@@ -163,6 +224,14 @@ class GenerationEngine:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk > 1 and cfg.family in ("ssm", "hybrid"):
+            import warnings
+
+            warnings.warn(
+                f"chunked prefill is not supported for the {cfg.family!r} "
+                f"mixer (no per-position validity masking for recurrent "
+                f"state); falling back to prefill_chunk=1", stacklevel=2)
+            self.prefill_chunk = 1
 
         why_not = _continuous_supported(cfg, max_len)
         if mode == "auto":
@@ -183,9 +252,43 @@ class GenerationEngine:
                 "sampling parameters are ignored in mode='wave'",
                 stacklevel=2)
 
+        # ---- KV-cache layout (contiguous slot rows vs paged block pool)
+        if kv_layout is None:
+            kv_layout = default_kv_layout()
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
+        if kv_layout == "paged":
+            if self.mode != "continuous":
+                raise NotImplementedError(
+                    "kv_layout='paged' requires the continuous engine "
+                    "(the wave engine rebuilds a contiguous cache per wave)")
+            if cfg.family == "ssm":
+                raise NotImplementedError(
+                    "kv_layout='paged' needs an attention KV cache; the "
+                    "'ssm' mixer carries recurrent state only")
+        self.kv_layout = kv_layout
+        self.kv_block_size = (default_kv_block_size()
+                              if kv_block_size is None else int(kv_block_size))
+        if self.kv_block_size < 1:
+            raise ValueError(
+                f"kv_block_size must be >= 1, got {self.kv_block_size}")
+        # page-table width: a lane never maps more than the cache cap
+        self._n_pt = -(-max_len // self.kv_block_size)
+        if kv_blocks is None:
+            # default pool = contiguous capacity (batch * max_len rows):
+            # same worst-case footprint, but blocks only charge HBM-rows
+            # that are actually mapped to a lane. Shrink to oversubscribe.
+            kv_blocks = batch_size * self._n_pt
+        self.kv_blocks = int(kv_blocks)
+        if self.kv_layout == "paged" and self.kv_blocks < 1:
+            raise ValueError(f"kv_blocks must be >= 1, got {self.kv_blocks}")
+
         self._decode = jax.jit(make_decode_step(cfg))       # wave path
         self._step = jax.jit(make_serving_step(cfg))        # continuous path
         self._step_greedy = jax.jit(make_serving_step(cfg, sample=False))
+        # recurrent mixers need the lane-reset mask on every decode launch
+        self._needs_reset = cfg.family in ("ssm", "hybrid")
         # second persistent jitted program: S-token prompt-chunk admission
         # (chunk=1 keeps the PR-3 single-program engine bit-for-bit — the
         # chunk program is never built, let alone launched)
@@ -200,6 +303,11 @@ class GenerationEngine:
             # that M so the large-M arm can block for the chunk shape.
             autotune.register_prefill_m(batch_size * self.prefill_chunk)
         self._sched = SlotScheduler(batch_size)
+        self._pool: Optional[KVBlockPool] = None    # built per run (paged)
+        self._pages_dev = None    # device mirror of the pool's page table
+        self._pages_ver = -1
+        self._folded: Dict[int, int] = {}   # rid -> generated tokens already
+        #                                     folded into the prompt (preempt)
         self._key = jax.random.PRNGKey(seed)
         self._clock = clock
         self._real_clock = clock is None
@@ -221,6 +329,19 @@ class GenerationEngine:
                 f"truncate the prompt")
         if req.rid in self.metrics.requests:
             raise ValueError(f"duplicate request id {req.rid}")
+        if self.kv_layout == "paged":
+            # a request must be servable by the pool *alone* (this is
+            # also what guarantees preemption always makes progress: a
+            # lane with the whole pool to itself can always finish)
+            need = -(-min(n + req.max_new_tokens, self.max_len)
+                     // self.kv_block_size)
+            if need > self.kv_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks "
+                    f"(prompt {n} + budget {req.max_new_tokens} tokens at "
+                    f"block_size={self.kv_block_size}) but the pool only "
+                    f"has {self.kv_blocks}; raise kv_blocks or shrink the "
+                    f"request")
         if (self.mode == "wave" and req.sampling is not None
                 and req.sampling != GREEDY):
             import warnings
@@ -254,11 +375,83 @@ class GenerationEngine:
     def _finish(self, slot: int, t: float, live: np.ndarray,
                 pos: np.ndarray, tokens: np.ndarray) -> None:
         req = self._sched.release(slot)
+        if self._pool is not None:
+            self._pool.release(slot)   # blocks reclaimed the same step
+        self._folded.pop(req.rid, None)
         self.metrics.on_finish(req.rid, t, len(req.generated))
         self.completed[req.rid] = req
         live[slot] = False
         pos[slot] = 0
         tokens[slot, 0] = 0
+
+    # -- paged-KV admission / preemption -------------------------------
+
+    def _admit_tokens(self, req: Request) -> int:
+        """Positions an admission must be able to back: the whole prompt
+        plus a minimum decode budget (one block's worth of generated
+        tokens, or the remaining budget if smaller — a preempted request
+        already folded its generated tokens into the prompt, so only the
+        *unspent* budget counts), capped at the cache cap."""
+        remaining = max(0, req.max_new_tokens - len(req.generated))
+        return min(len(req.prompt) + min(remaining, self.kv_block_size),
+                   self.max_len)
+
+    def _admit_gate(self, req: Request) -> bool:
+        pool = self._pool
+        return pool.free_blocks >= pool.blocks_for(self._admit_tokens(req))
+
+    def _preempt(self, slot: int, t: float, live: np.ndarray,
+                 pos: np.ndarray, tokens: np.ndarray) -> None:
+        """Pool exhausted: evict a lane and requeue its request.
+
+        Preempt-and-recompute, vLLM-style: generated tokens fold into
+        the prompt, the request goes back to the *head* of the queue
+        (keeps FIFO), and on re-admission the lane replays the extended
+        prompt through teacher forcing. Greedy decoding makes the replay
+        reproduce the identical continuation, so preemption never
+        changes a greedy stream — only its timing. (Under temperature
+        sampling the continuation draws fresh PRNG — streams may differ
+        from an unpreempted run, like any sampled rerun.)
+        """
+        req = self._sched.release(slot)
+        self._pool.release(slot)
+        # fold only the not-yet-folded suffix: a request preempted a
+        # second time must not duplicate tokens already in the prompt
+        folded = self._folded.get(req.rid, 0)
+        fresh = req.generated[folded:]
+        if fresh:
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(fresh, np.int32)])
+            self._folded[req.rid] = len(req.generated)
+        self._sched.requeue_front(req)
+        self.metrics.on_preempt(req.rid, t)
+        live[slot] = False
+        pos[slot] = 0
+        tokens[slot, 0] = 0
+
+    def _ensure_decode_blocks(self, live: np.ndarray, pos: np.ndarray,
+                              tokens: np.ndarray) -> None:
+        """Back every live lane's next write position, preempting the
+        youngest live lane when the pool runs dry. Oldest-first order
+        gives long-running lanes (closest to finishing, holding the
+        most blocks) priority; the victim is always the youngest live
+        lane — the requester itself when it *is* the youngest (or the
+        only lane), and then its requeued request later gets the pool
+        to itself, which ``submit`` guaranteed is enough (progress is
+        total).
+        """
+        pool, sched = self._pool, self._sched
+        order = sorted((i for i in range(self.batch_size) if live[i]),
+                       key=lambda i: sched.slot(i).seq)
+        for i in order:
+            while live[i] and not pool.ensure(i, int(pos[i]) + 1):
+                # youngest live lane overall — possibly the requester
+                # itself (then the loop exits via live[i] going False and
+                # the requeued request later gets the pool to itself)
+                victim = max((j for j in range(self.batch_size) if live[j]),
+                             key=lambda j: sched.slot(j).seq)
+                self._preempt(victim, self._now(), live, pos, tokens)
 
     def _prefill_chunk_pass(self, cache, pos: np.ndarray, live: np.ndarray,
                             tokens: np.ndarray):
@@ -279,6 +472,13 @@ class GenerationEngine:
             if live[i]:
                 r = sched.slot(i).request
                 lens[i] = min(S, max(0, len(r.prompt) - 1 - pos[i]))
+                if lens[i] and self._pool is not None:
+                    # paged: clip the chunk to what the pool can back
+                    # right now (never preempt for prefill — a clipped
+                    # lane just chunks less this launch, and the decode
+                    # pass owns last-resort preemption)
+                    backed = self._pool.grow(i, int(pos[i]) + int(lens[i]))
+                    lens[i] = min(lens[i], max(0, backed - int(pos[i])))
         if not lens.any():
             return cache, False
         ctoks = np.zeros((B, S), np.int32)
@@ -291,10 +491,13 @@ class GenerationEngine:
         cache = self._chunk_step(
             self.params, cache, jnp.asarray(ctoks),
             jnp.asarray(pos.copy()), jnp.asarray(lens),
+            pages=self._pages_mirror(),
         )
         t_now = self._now()
-        self.metrics.on_step(int(live.sum()), sched.queue_depth, t_now,
-                             kind="prefill")
+        self.metrics.on_step(
+            int(live.sum()), sched.queue_depth, t_now, kind="prefill",
+            blocks_in_use=(None if self._pool is None
+                           else self._pool.used_blocks))
         self.metrics.on_prompt_tokens(int(lens.sum()), kind="prefill")
         for i in range(B):
             if lens[i]:
@@ -306,14 +509,38 @@ class GenerationEngine:
                 tokens[i, 0] = int(st.request.prompt[pos[i]])
         return cache, True
 
+    def _pages_mirror(self):
+        """Device mirror of the pool's page table, refreshed only when the
+        allocator mutated it (same pattern as the ctrl arrays)."""
+        if self._pool is None:
+            return None
+        if self._pages_dev is None or self._pages_ver != self._pool.version:
+            # .copy(): transfers are async and the host table mutates on
+            # the very next alloc/release.
+            self._pages_dev = jnp.asarray(self._pool.table.copy())
+            self._pages_ver = self._pool.version
+        return self._pages_dev
+
     def _run_continuous(self) -> Dict[int, Request]:
         B = self.batch_size
         sched = self._sched
-        cache = make_cache(self.params, self.cfg, B, self.max_len,
-                           per_lane=True)
+        paged = self.kv_layout == "paged"
+        self._pool = (KVBlockPool(self.kv_blocks, self.kv_block_size, B,
+                                  self._n_pt) if paged else None)
+        self._pages_dev = None
+        self._pages_ver = -1
+        cache = make_cache(
+            self.params, self.cfg, B, self.max_len, per_lane=True,
+            paged=(self.kv_blocks, self.kv_block_size) if paged else None)
+        self.metrics.set_kv_stats(
+            sum(int(x.size) * x.dtype.itemsize
+                for x in jax.tree.leaves(cache)),
+            kv_blocks=self.kv_blocks if paged else None,
+            kv_block_size=self.kv_block_size if paged else None)
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         live = np.zeros((B,), bool)
+        reset = np.zeros((B,), bool)   # lanes admitted since the last step
         temp = np.zeros((B,), np.float32)
         topk = np.zeros((B,), np.int32)
         topp = np.ones((B,), np.float32)
@@ -323,15 +550,30 @@ class GenerationEngine:
 
         while sched.has_work():
             now = self._now()
-            for slot, req in sched.admit(now):
-                live[slot] = True
-                pos[slot] = 0
-                tokens[slot, 0] = int(req.prompt[0])
-                sp = req.sampling if req.sampling is not None else self.sampling
-                temp[slot], topk[slot], topp[slot] = (
-                    sp.temperature, sp.top_k, sp.top_p)
-                ctrl_dirty = True
-                self.metrics.on_admit(req.rid, now)
+            while True:
+                # paged: admit one at a time so the allocator-aware gate
+                # sees each admission's block reservation before judging
+                # the next queued request (no overcommit inside a batch).
+                admitted = sched.admit(
+                    now, gate=self._admit_gate if paged else None,
+                    limit=1 if paged else None)
+                if not admitted:
+                    break
+                for slot, req in admitted:
+                    live[slot] = True
+                    pos[slot] = 0
+                    tokens[slot, 0] = int(req.prompt[0])
+                    reset[slot] = True
+                    sp = (req.sampling if req.sampling is not None
+                          else self.sampling)
+                    temp[slot], topk[slot], topp[slot] = (
+                        sp.temperature, sp.top_k, sp.top_p)
+                    ctrl_dirty = True
+                    self.metrics.on_admit(req.rid, now)
+                    if paged:   # reserve prompt + minimum decode budget
+                        self._pool.grow(slot, self._admit_tokens(req))
+                if not paged:
+                    break
             if not live.any():
                 nxt = sched.next_arrival()
                 if nxt is None:       # nothing queued, nothing running
@@ -351,6 +593,15 @@ class GenerationEngine:
                 # chunking (the decode step teacher-forces mid-bulk lanes
                 # one extra prompt token — order-free per lane, so token
                 # streams are unchanged; only TTFT timing improves).
+            if paged:
+                # back every lane's next write position; exhaustion
+                # preempts the youngest lane(s) into the queue.
+                before = self.metrics.preemptions
+                self._ensure_decode_blocks(live, pos, tokens)
+                if self.metrics.preemptions != before:
+                    ctrl_dirty = True
+                    if not live.any():
+                        continue
             if ctrl_dirty:
                 ctrl = tuple(jnp.asarray(a)
                              for a in (live, temp, topk, topp))
@@ -361,20 +612,30 @@ class GenerationEngine:
                 ctrl_dirty = False
 
             d_live, d_temp, d_topk, d_topp = ctrl
+            # trailing step args shared by both step variants: page-table
+            # mirror (paged) and recurrent lane-reset mask (ssm/hybrid)
+            extra = dict(pages=self._pages_mirror())
+            if self._needs_reset:
+                extra["reset"] = jnp.asarray(reset.copy())
             if greedy_only:                        # greedy fast path: no
                 toks, cache = self._step_greedy(   # sampler, no PRNG work
                     self.params, cache, jnp.asarray(tokens),
-                    jnp.asarray(pos), d_live,
+                    jnp.asarray(pos), d_live, **extra,
                 )
             else:
                 self._key, sub = jax.random.split(self._key)
                 toks, cache = self._step(
                     self.params, cache, jnp.asarray(tokens),
                     jnp.asarray(pos), d_live, d_temp, d_topk, d_topp, sub,
+                    **extra,
                 )
+            reset[:] = False    # consumed by this launch
             nxt_tok = np.asarray(toks)
             t_now = self._now()
-            self.metrics.on_step(int(live.sum()), sched.queue_depth, t_now)
+            self.metrics.on_step(
+                int(live.sum()), sched.queue_depth, t_now,
+                blocks_in_use=(None if self._pool is None
+                               else self._pool.used_blocks))
 
             n_prompt = 0
             for i in range(B):

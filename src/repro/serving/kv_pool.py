@@ -1,0 +1,145 @@
+"""Paged KV-cache block pool: host-side free-list allocator + page tables.
+
+The paged cache layout (``kv_layout='paged'``) replaces the contiguous
+per-lane ``(B, max_len, ...)`` KV regions with one global **block pool**
+per layer — ``(num_blocks, block_size, n_kv_heads, hd)`` — plus a
+per-lane **page table** ``(B, max_blocks)`` mapping each lane's logical
+position range ``[j*block_size, (j+1)*block_size)`` to a physical block.
+Cache HBM is then ``num_blocks * block_size`` rows, decoupled from
+``batch * max_len``: a pool sized for the *expected* footprint serves
+traffic whose per-request ``max_len`` would otherwise reserve the
+worst case for every lane.
+
+This module is the host side of that design, mirroring the slot
+scheduler's philosophy: pure bookkeeping, no device state. The pool
+owns the free list and the page table (an int32 numpy array the engine
+ships to the device whenever ``version`` changes — exactly how the
+engine's position vector is the single source of truth for cache write
+indices). Blocks are appended on demand as a lane's position crosses a
+block boundary (``ensure``/``grow`` before every launch) and reclaimed
+the step the lane finishes or is preempted (``release``).
+
+Invariants (property-tested in tests/test_kv_pool.py):
+
+  * a physical block is owned by at most one lane at a time;
+  * ``free_blocks + used_blocks == num_blocks`` always (conservation);
+  * ``release`` returns every block the lane owned, same call;
+  * page-table rows list a lane's blocks in logical order, ``-1`` padded.
+
+The device side never sees the allocator: the jitted step receives the
+page table as a plain array, computes physical write indices
+``(table[lane, pos // bs], pos % bs)`` and gathers K/V through the
+table (models/layers.py). Unmapped entries are ``-1``: writes through
+them are pushed out of range so the ``mode='drop'`` scatter discards
+them, gathers clamp and are masked by the existing per-lane validity
+masks — stale block contents can never become valid, because a lane
+writes position ``p`` in the same step ``p`` first enters its valid
+range.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+__all__ = ["KVBlockPool"]
+
+
+class KVBlockPool:
+    """Free-list allocator over ``num_blocks`` physical KV blocks.
+
+    ``max_blocks_per_lane`` is the page-table width (ceil(max_len /
+    block_size)): a lane can never map more logical positions than the
+    engine's cache cap.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, n_lanes: int,
+                 max_blocks_per_lane: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        if max_blocks_per_lane < 1:
+            raise ValueError(
+                f"max_blocks_per_lane must be >= 1, got {max_blocks_per_lane}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.n_lanes = n_lanes
+        self.max_blocks_per_lane = max_blocks_per_lane
+        # LIFO free list: recycled blocks are reused first (hot in cache)
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owned: List[List[int]] = [[] for _ in range(n_lanes)]
+        self.table = np.full((n_lanes, max_blocks_per_lane), -1, np.int32)
+        # bumped on every table mutation: the engine re-ships the table
+        # to the device only when this changed since the last launch
+        self.version = 0
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def lane_blocks(self, lane: int) -> int:
+        return len(self._owned[lane])
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to back ``n_tokens`` logical positions."""
+        return -(-max(0, n_tokens) // self.block_size)
+
+    # -- allocation -----------------------------------------------------
+    def grow(self, lane: int, n_tokens: int) -> int:
+        """Append blocks until ``lane`` backs ``n_tokens`` positions (or
+        the pool / page table runs out). Returns the number of positions
+        actually backed — callers clip their chunk to it; a return below
+        ``n_tokens`` means the pool is exhausted (preempt or retry)."""
+        want = min(self.blocks_for(n_tokens), self.max_blocks_per_lane)
+        owned = self._owned[lane]
+        while len(owned) < want and self._free:
+            blk = self._free.pop()
+            self.table[lane, len(owned)] = blk
+            owned.append(blk)
+            self.version += 1
+        return min(len(owned) * self.block_size,
+                   self.max_blocks_per_lane * self.block_size)
+
+    def ensure(self, lane: int, n_tokens: int) -> bool:
+        """True iff ``lane`` backs ``n_tokens`` positions after growing."""
+        return self.grow(lane, n_tokens) >= min(
+            n_tokens, self.max_blocks_per_lane * self.block_size)
+
+    def release(self, lane: int) -> int:
+        """Reclaim every block the lane owns (EOS / recycle / preempt).
+        Returns how many blocks were freed."""
+        owned = self._owned[lane]
+        n = len(owned)
+        if n:
+            # LIFO: freed blocks sit on top of the free list
+            self._free.extend(reversed(owned))
+            self.table[lane, :n] = -1
+            owned.clear()
+            self.version += 1
+        return n
+
+    def check_invariants(self) -> None:
+        """Raise AssertionError on any broken allocator invariant
+        (test/debug hook — the engine never calls this on the hot path)."""
+        seen: set = set()
+        for lane, owned in enumerate(self._owned):
+            row = self.table[lane]
+            assert list(row[: len(owned)]) == owned, (
+                f"lane {lane}: table row disagrees with owned list")
+            assert (row[len(owned):] == -1).all(), (
+                f"lane {lane}: table row not -1 beyond owned blocks")
+            for b in owned:
+                assert 0 <= b < self.num_blocks, f"bad block id {b}"
+                assert b not in seen, f"block {b} owned by two lanes"
+                seen.add(b)
+        assert not (seen & set(self._free)), "block both owned and free"
+        assert len(seen) + len(self._free) == self.num_blocks, (
+            "free-list conservation violated")

@@ -5,12 +5,16 @@ own clock (wall time by default, a virtual clock in simulation) so the
 numbers stay meaningful either way:
 
   * per request: queue wait (arrival -> admit), TTFT (arrival -> first
-    *generated* token, i.e. prompt walk included), decode tokens/s;
+    *generated* token, i.e. prompt walk included), decode tokens/s, and
+    how many times the request was preempted and requeued;
   * per engine run: aggregate generated tokens/s over the active window,
-    mean slot occupancy and queue depth sampled once per step, and the
+    mean slot occupancy and queue depth sampled once per step, the
     prefill-vs-decode token split — prompt tokens consumed by the
     S-token prefill chunk program vs tokens that went through the
-    1-token decode program (teacher-forced prompt walk + generation).
+    1-token decode program (teacher-forced prompt walk + generation) —
+    and the paged-KV footprint: device cache bytes, pool geometry,
+    preemption count and blocks-in-use sampled once per step (mean
+    utilization + peak).
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ class RequestMetrics:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_generated: int = 0
+    n_preempted: int = 0    # times this request was preempted + requeued
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -73,6 +78,12 @@ class MetricsCollector:
         self.decode_steps: int = 0           # decode-program launches
         self.prefill_tokens: int = 0         # prompt tokens via chunk program
         self.prompt_decode_tokens: int = 0   # prompt tokens walked 1/step
+        # paged-KV observability (kv_layout='paged')
+        self.preemptions: int = 0            # preempt-and-requeue events
+        self.blocks_in_use_samples: List[int] = []   # sampled once per step
+        self.cache_bytes: Optional[int] = None       # device KV cache bytes
+        self.kv_blocks: Optional[int] = None         # pool size (blocks)
+        self.kv_block_size: Optional[int] = None     # rows per block
 
     # -- events ---------------------------------------------------------
     def on_submit(self, rid: int, arrival_time: float, prompt_len: int):
@@ -91,16 +102,32 @@ class MetricsCollector:
         r.n_generated = n_generated
 
     def on_step(self, occupancy: int, queue_depth: int, t: float,
-                kind: str = "decode"):
+                kind: str = "decode", blocks_in_use: Optional[int] = None):
         if self.start_time is None:
             self.start_time = t
         self.end_time = t
         self.occupancy_samples.append(occupancy)
         self.queue_depth_samples.append(queue_depth)
+        if blocks_in_use is not None:
+            self.blocks_in_use_samples.append(blocks_in_use)
         if kind == "prefill":
             self.prefill_steps += 1
         else:
             self.decode_steps += 1
+
+    def on_preempt(self, rid: int, t: float):
+        """Lane preempted (pool exhausted) and its request requeued."""
+        self.preemptions += 1
+        self.requests[rid].n_preempted += 1
+
+    def set_kv_stats(self, cache_bytes: int,
+                     kv_blocks: Optional[int] = None,
+                     kv_block_size: Optional[int] = None):
+        """Device KV-cache footprint for this run (set once, at cache
+        build time; kv_blocks/kv_block_size only for the paged layout)."""
+        self.cache_bytes = int(cache_bytes)
+        self.kv_blocks = kv_blocks
+        self.kv_block_size = kv_block_size
 
     def on_prompt_tokens(self, n: int, kind: str = "decode"):
         """Prompt tokens consumed this step: ``kind='prefill'`` via the
@@ -123,6 +150,7 @@ class MetricsCollector:
         waits = [r.queue_wait for r in done if r.queue_wait is not None]
         occ = self.occupancy_samples
         qd = self.queue_depth_samples
+        bu = self.blocks_in_use_samples
         return dict(
             requests=float(len(self.requests)),
             completed=float(len(done)),
@@ -140,6 +168,19 @@ class MetricsCollector:
             decode_steps=float(self.decode_steps),
             prefill_tokens=float(self.prefill_tokens),
             prompt_decode_tokens=float(self.prompt_decode_tokens),
+            preemptions=float(self.preemptions),
+            cache_bytes=(float(self.cache_bytes)
+                         if self.cache_bytes is not None else float("nan")),
+            kv_blocks=(float(self.kv_blocks)
+                       if self.kv_blocks is not None else float("nan")),
+            kv_block_size=(float(self.kv_block_size)
+                           if self.kv_block_size is not None
+                           else float("nan")),
+            mean_blocks_in_use=((sum(bu) / len(bu)) if bu else float("nan")),
+            peak_blocks_in_use=(float(max(bu)) if bu else float("nan")),
+            mean_block_utilization=(
+                (sum(bu) / len(bu)) / self.kv_blocks
+                if bu and self.kv_blocks else float("nan")),
         )
 
 

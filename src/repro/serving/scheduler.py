@@ -56,6 +56,8 @@ class Slot:
     request: Request
     pos: int = 0            # tokens already fed to the model for this lane
     admitted_at: float = 0.0
+    seq: int = 0            # admission sequence number (strict total order;
+                            # the paged engine preempts the youngest lane)
 
 
 class SlotScheduler:
@@ -67,10 +69,18 @@ class SlotScheduler:
         self._slots: List[Optional[Slot]] = [None] * n_slots
         self._free: List[int] = list(range(n_slots))  # min-heap: low slot first
         heapq.heapify(self._free)
+        self._seq = 0
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self._queue.append(req)
+
+    def requeue_front(self, req: Request) -> None:
+        """Put a preempted request back at the head of the queue: it keeps
+        its FIFO position and is re-admitted (into any free slot) as soon
+        as capacity allows. The caller has already folded any generated
+        tokens into the prompt (preempt-and-recompute)."""
+        self._queue.appendleft(req)
 
     @property
     def queue_depth(self) -> int:
@@ -93,24 +103,38 @@ class SlotScheduler:
         return self._queue[0].arrival_time
 
     # -- slot table -----------------------------------------------------
-    def admit(self, now: Optional[float] = None) -> List[Tuple[int, Request]]:
+    def admit(self, now: Optional[float] = None,
+              gate: Optional[Callable[[Request], bool]] = None,
+              limit: Optional[int] = None) -> List[Tuple[int, Request]]:
         """Fill free slots from the queue head; returns [(slot, request)].
 
         FIFO order is preserved: admission stops at the first queued
         request that has not arrived yet (``arrival_time > now``), even
-        if later requests already arrived — no reordering.
+        if later requests already arrived — no reordering. ``gate`` is
+        an extra admission predicate consulted on the queue head (the
+        paged engine's allocator-aware check: free blocks must cover the
+        prompt plus a minimum decode budget); a False stops admission
+        the same head-blocked way. ``limit`` caps admissions per call so
+        a caller doing per-admission resource accounting can interleave
+        (admit one, allocate, repeat).
         """
         out: List[Tuple[int, Request]] = []
         while self._free and self._queue:
+            if limit is not None and len(out) >= limit:
+                break
             req = self._queue[0]
             if now is not None and req.arrival_time > now:
+                break
+            if gate is not None and not gate(req):
                 break
             self._queue.popleft()
             slot = heapq.heappop(self._free)
             self._slots[slot] = Slot(
                 request=req, pos=0,
                 admitted_at=0.0 if now is None else now,
+                seq=self._seq,
             )
+            self._seq += 1
             out.append((slot, req))
         return out
 

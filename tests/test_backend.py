@@ -501,3 +501,64 @@ def test_kernel_autotune_arms_populates_all_keys(tmp_path, monkeypatch):
     assert set(table) == {"decode", "prefill", "dequant"}
     assert list(table["prefill"]) == [64]
     autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# XLA-arm decoded-selector memo (ISSUE-5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_kernel_xla_sel_memo_built_only_for_xla_v2(monkeypatch):
+    monkeypatch.delenv("ICQ_XLA_SEL_MEMO", raising=False)
+    pk = _pack()
+    assert backend.prepare(pk, backend="xla", fmt="v2").sel_memo is not None
+    assert backend.prepare(pk, backend="xla", fmt="v1").sel_memo is None
+    assert backend.prepare(pk, backend="pallas", fmt="v2").sel_memo is None
+    monkeypatch.setenv("ICQ_XLA_SEL_MEMO", "0")
+    assert backend.prepare(pk, backend="xla", fmt="v2").sel_memo is None
+
+
+def test_kernel_xla_sel_memo_bitwise_parity(monkeypatch):
+    """The memo replaces the per-call in-graph gap-stream decode: outputs
+    must be bit-identical with and without it (and to the v1 bitmap)."""
+    pk = _pack()
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(3, 330)).astype(np.float32))
+    monkeypatch.setenv("ICQ_XLA_SEL_MEMO", "0")
+    p_plain = backend.prepare(pk, backend="xla", fmt="v2")
+    monkeypatch.setenv("ICQ_XLA_SEL_MEMO", "1")
+    p_memo = backend.prepare(pk, backend="xla", fmt="v2")
+    assert p_memo.sel_memo is not None and p_plain.sel_memo is None
+    y_plain = np.asarray(backend.linear_apply(x, p_plain))
+    y_memo = np.asarray(backend.linear_apply(x, p_memo))
+    assert np.array_equal(y_plain.view(np.uint8), y_memo.view(np.uint8))
+    w_plain = np.asarray(backend.dequantize_prepared(p_plain))
+    w_memo = np.asarray(backend.dequantize_prepared(p_memo))
+    assert np.array_equal(w_plain.view(np.uint8), w_memo.view(np.uint8))
+
+
+def test_kernel_xla_sel_memo_excluded_from_bits_accounting(monkeypatch):
+    """The memo is an off-TPU fallback compute cache, not part of the
+    runtime format: the v2 bits/weight story must not change with it."""
+    pk = _pack()
+    monkeypatch.setenv("ICQ_XLA_SEL_MEMO", "0")
+    p_plain = backend.prepare(pk, backend="xla", fmt="v2")
+    monkeypatch.setenv("ICQ_XLA_SEL_MEMO", "1")
+    p_memo = backend.prepare(pk, backend="xla", fmt="v2")
+    assert p_memo.bits_per_weight() == p_plain.bits_per_weight()
+    assert (p_memo.outlier_bits_per_weight()
+            == p_plain.outlier_bits_per_weight())
+
+
+def test_kernel_xla_sel_memo_slices_under_stacked_lead_axes():
+    """Stacked (layer-scanned) prepared weights slice the memo child with
+    the other children; the sliced layer must still decode bitwise."""
+    pk = _pack()
+    # fake a 2-layer stack by stacking the packed children
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), pk)
+    prep = backend.prepare(stacked, backend="xla", fmt="v2")
+    assert prep.sel_memo is not None and prep.sel_memo.ndim == 3
+    layer0 = jax.tree.map(lambda a: a[0], prep)
+    flat = backend.prepare(pk, backend="xla", fmt="v2")
+    a = np.asarray(backend.dequantize_prepared(layer0))
+    b = np.asarray(backend.dequantize_prepared(flat))
+    assert np.array_equal(a.view(np.uint8), b.view(np.uint8))

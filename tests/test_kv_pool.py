@@ -1,0 +1,379 @@
+"""Paged KV-cache subsystem (ISSUE-5): block-pool allocator invariants,
+paged-vs-contiguous bitwise cache/logits parity for gqa + mla, engine
+token identity (including chunked prefill, recycled slots and
+preempt-and-requeue), and the layout/env knobs.
+
+The contract under test: paging changes *where* cache rows live (and how
+much HBM they charge), never what any sampled token sees — greedy paged
+output must be token-identical to the contiguous per-lane cache, even
+when the pool is small enough that lanes get preempted and recomputed.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.steps import (
+    make_cache,
+    sync_cache_pages,
+    sync_cache_positions,
+)
+from repro.models import init_model
+from repro.models.model import lm_apply
+from repro.serving import GenerationEngine, KVBlockPool, Request
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# allocator: property-style invariants (no model)
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_reclaim_invariants_random_schedule():
+    """Random ensure/grow/release schedule: no double-assignment, free-list
+    conservation, full reclaim — checked after every operation."""
+    rng = np.random.default_rng(0)
+    pool = KVBlockPool(num_blocks=13, block_size=4, n_lanes=3,
+                       max_blocks_per_lane=5)
+    tokens = [0, 0, 0]
+    for _ in range(300):
+        lane = int(rng.integers(3))
+        if rng.random() < 0.3:
+            owned = pool.lane_blocks(lane)
+            assert pool.release(lane) == owned   # full reclaim, same call
+            tokens[lane] = 0
+        else:
+            want = tokens[lane] + int(rng.integers(1, 6))
+            backed = pool.grow(lane, want)
+            assert backed == min(pool.lane_blocks(lane) * 4, 20)
+            assert backed <= 20                       # page-table cap
+            tokens[lane] = min(want, backed)
+        pool.check_invariants()
+        assert pool.free_blocks + pool.used_blocks == 13
+    for lane in range(3):
+        pool.release(lane)
+    pool.check_invariants()
+    assert pool.free_blocks == 13
+
+
+def test_pool_release_returns_all_blocks_same_call():
+    pool = KVBlockPool(num_blocks=8, block_size=2, n_lanes=2,
+                       max_blocks_per_lane=4)
+    assert pool.ensure(0, 7)          # 4 blocks
+    assert pool.ensure(1, 3)          # 2 blocks
+    assert pool.used_blocks == 6
+    assert pool.release(0) == 4       # every block back, immediately
+    assert pool.free_blocks == 6
+    assert (pool.table[0] == -1).all()
+    pool.check_invariants()
+
+
+def test_pool_exhaustion_reports_shortfall_without_corruption():
+    pool = KVBlockPool(num_blocks=3, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    assert pool.grow(0, 12) == 12     # 3 blocks: pool drained
+    assert not pool.ensure(1, 4)      # nothing left for lane 1
+    assert pool.grow(1, 4) == 0
+    pool.check_invariants()
+    pool.release(0)
+    assert pool.ensure(1, 4)          # freed blocks immediately reusable
+    pool.check_invariants()
+
+
+def test_pool_page_table_is_logical_order_and_versioned():
+    pool = KVBlockPool(num_blocks=6, block_size=2, n_lanes=2,
+                       max_blocks_per_lane=3)
+    v0 = pool.version
+    pool.ensure(0, 5)                 # 3 blocks
+    assert pool.version > v0
+    row = pool.table[0]
+    assert (row[:3] >= 0).all()
+    assert len(set(row[:3].tolist())) == 3
+    v1 = pool.version
+    pool.ensure(0, 5)                 # no growth needed -> no version bump
+    assert pool.version == v1
+
+
+def test_pool_rejects_bad_shapes():
+    for bad in (dict(num_blocks=0), dict(block_size=0), dict(n_lanes=0),
+                dict(max_blocks_per_lane=0)):
+        kw = dict(num_blocks=4, block_size=4, n_lanes=2,
+                  max_blocks_per_lane=2)
+        kw.update(bad)
+        with pytest.raises(ValueError):
+            KVBlockPool(**kw)
+
+
+# ---------------------------------------------------------------------------
+# layer-level: paged cache == contiguous cache, bitwise (gqa + mla)
+# ---------------------------------------------------------------------------
+
+def _attn_leaves(cache):
+    return cache["stack"]["attn"]
+
+
+def _logical_view(leaf, pages, bs):
+    """(num_blocks, bs, ...) pool + (B, n_pt) table -> (B, n_pt*bs, ...)."""
+    a = np.asarray(leaf)
+    pg = np.clip(np.asarray(pages), 0, a.shape[0] - 1)
+    return a[pg].reshape((pg.shape[0], pg.shape[1] * bs) + a.shape[2:])
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_paged_walk_bitwise_cache_and_logits(arch):
+    """Walk identical chunked prompts through a contiguous per-lane cache
+    and a paged cache with a *shuffled* physical block assignment: every
+    valid logical cache row and the next-token logits must match the
+    contiguous cache bitwise (gqa K/V pool and mla latent pool)."""
+    cfg, params = _setup(arch)
+    B, L, S, bs = 3, 16, 4, 4
+    n_pt = L // bs
+    rng = np.random.default_rng(0)
+    plens = [8, 5, 6]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    # non-identity mapping: lanes interleave through a 14-block pool
+    nb = 14
+    perm = rng.permutation(nb)
+    pages = np.full((B, n_pt), -1, np.int32)
+    for i in range(B):
+        need = -(-plens[i] // bs) + 1     # one spare block mapped
+        pages[i, :need] = perm[i::B][:need]
+    d_pages = jnp.asarray(pages)
+
+    def walk(cache, paged):
+        consumed = np.zeros(B, np.int32)
+        for _ in range(2):
+            lens = np.zeros(B, np.int32)
+            toks = np.zeros((B, S), np.int32)
+            for i in range(B):
+                n = min(S, plens[i] - consumed[i])
+                if n > 0:
+                    toks[i, :n] = prompts[i][consumed[i]: consumed[i] + n]
+                    lens[i] = n
+            c = sync_cache_positions(cache, jnp.asarray(consumed.copy()))
+            if paged:
+                c = sync_cache_pages(c, d_pages)
+            _, cache, _ = lm_apply(params, cfg, jnp.asarray(toks), cache=c,
+                                   start_pos=jnp.asarray(consumed.copy()),
+                                   seq_lens=jnp.asarray(lens))
+            consumed += lens
+        assert list(consumed) == plens
+        return cache
+
+    cache_c = walk(make_cache(params, cfg, B, L, per_lane=True), False)
+    cache_p = walk(make_cache(params, cfg, B, L, per_lane=True,
+                              paged=(nb, bs)), True)
+
+    for name, leaf in _attn_leaves(cache_c).items():
+        if name == "index":
+            continue
+        a = np.asarray(leaf)                          # (Lyr, B, L, ...)
+        pleaf = _attn_leaves(cache_p)[name]
+        for lyr in range(a.shape[0]):
+            b = _logical_view(pleaf[lyr], pages, bs)
+            for i in range(B):
+                va, vb = a[lyr, i, : plens[i]], b[i, : plens[i]]
+                assert np.array_equal(va.view(np.uint8),
+                                      vb.view(np.uint8)), (
+                    f"{name}: paged lane {i} cache rows diverge bitwise")
+
+    # next-token logits: what the first generated token would see
+    nxt = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
+    pos = np.asarray(plens, np.int32)
+
+    def logits(cache, paged):
+        c = sync_cache_positions(cache, jnp.asarray(pos))
+        if paged:
+            c = sync_cache_pages(c, d_pages)
+        return np.asarray(lm_apply(params, cfg, jnp.asarray(nxt), cache=c,
+                                   start_pos=jnp.asarray(pos))[0])
+
+    l_c, l_p = logits(cache_c, False), logits(cache_p, True)
+    assert np.array_equal(l_c.view(np.uint8), l_p.view(np.uint8))
+
+
+def test_paged_cache_requires_per_lane():
+    cfg, params = _setup("llama3.2-1b")
+    with pytest.raises(NotImplementedError):
+        make_cache(params, cfg, 2, 16, per_lane=False, paged=(8, 4))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: token identity + reclaim + preemption
+# ---------------------------------------------------------------------------
+
+def _mixed_specs(cfg, n, seed=0, prompt_hi=9, new_hi=8):
+    rng = np.random.default_rng(seed)
+    return [dict(rid=rid,
+                 prompt=rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(2, prompt_hi))
+                                     ).astype(np.int32),
+                 max_new_tokens=int(rng.integers(2, new_hi)))
+            for rid in range(n)]
+
+
+def _run(params, cfg, specs, **kw):
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", **kw)
+    for s in specs:
+        eng.submit(Request(**s))
+    out = {rid: r.generated for rid, r in eng.run().items()}
+    return out, eng
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_engine_paged_greedy_token_identical(arch):
+    """contiguous == paged == paged+chunked-prefill, per request, with
+    more requests than slots so recycled slots re-map fresh blocks."""
+    cfg, params = _setup(arch)
+    specs = _mixed_specs(cfg, 5)
+    out = {}
+    runs = (
+        ("contig", dict(kv_layout="contiguous")),
+        ("paged", dict(kv_layout="paged", kv_block_size=4)),
+        ("paged_chunk", dict(kv_layout="paged", kv_block_size=4,
+                             prefill_chunk=4)),
+        ("paged_offcap", dict(kv_layout="paged", kv_block_size=5)),
+    )
+    for label, kw in runs:
+        out[label], eng = _run(params, cfg, specs, **kw)
+        if eng._pool is not None:
+            eng._pool.check_invariants()
+            # every lane finished -> every block reclaimed
+            assert eng._pool.free_blocks == eng._pool.num_blocks
+    assert (out["paged"] == out["paged_chunk"] == out["paged_offcap"]
+            == out["contig"])
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_engine_preemption_recomputes_identical_streams(arch):
+    """Pool sized so two long-running lanes cannot both finish: the
+    youngest lane is preempted, requeued at the queue head, and its
+    greedy stream must still match the contiguous run token-for-token."""
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(1)
+    specs = [dict(rid=r,
+                  prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                  max_new_tokens=16) for r in range(2)]
+    out_c, _ = _run(params, cfg, specs, kv_layout="contiguous")
+    out_p, eng = _run(params, cfg, specs, kv_layout="paged",
+                      kv_block_size=4, kv_blocks=6)
+    assert eng.metrics.preemptions >= 1, \
+        "pool was large enough that nothing was preempted — bad fixture"
+    assert out_p == out_c
+    assert eng.metrics.requests[1].n_preempted >= 1
+    assert eng._pool.free_blocks == eng._pool.num_blocks
+
+
+def test_engine_double_preemption_folds_only_fresh_tokens():
+    """A request preempted TWICE must fold only the not-yet-folded
+    generated suffix into its prompt each time — double-folding would
+    duplicate tokens in the replay and diverge from contiguous. Three
+    lanes: the short lane finishes and frees blocks, the youngest long
+    lane is readmitted mid-run and preempted a second time."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(1)
+    specs = [dict(rid=0, prompt=rng.integers(0, cfg.vocab_size, 4)
+                  .astype(np.int32), max_new_tokens=8),
+             dict(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4)
+                  .astype(np.int32), max_new_tokens=24),
+             dict(rid=2, prompt=rng.integers(0, cfg.vocab_size, 4)
+                  .astype(np.int32), max_new_tokens=24)]
+    eng_c = GenerationEngine(params, cfg, batch_size=3, max_len=32,
+                             mode="continuous", kv_layout="contiguous")
+    for s in specs:
+        eng_c.submit(Request(**s))
+    out_c = {rid: r.generated for rid, r in eng_c.run().items()}
+    eng_p = GenerationEngine(params, cfg, batch_size=3, max_len=32,
+                             mode="continuous", kv_layout="paged",
+                             kv_block_size=4, kv_blocks=8)
+    for s in specs:
+        eng_p.submit(Request(**s))
+    out_p = {rid: r.generated for rid, r in eng_p.run().items()}
+    assert eng_p.metrics.requests[2].n_preempted >= 2, \
+        "fixture no longer produces a double preemption"
+    assert out_p == out_c
+    eng_p._pool.check_invariants()
+    assert eng_p._pool.free_blocks == eng_p._pool.num_blocks
+
+
+def test_engine_paged_uses_less_cache_hbm():
+    cfg, params = _setup("llama3.2-1b")
+    specs = _mixed_specs(cfg, 3)
+    _, eng_c = _run(params, cfg, specs, kv_layout="contiguous")
+    _, eng_p = _run(params, cfg, specs, kv_layout="paged",
+                    kv_block_size=4, kv_blocks=8)
+    assert eng_p.metrics.cache_bytes < eng_c.metrics.cache_bytes
+    s = eng_p.metrics.summary()
+    assert s["kv_blocks"] == 8 and s["kv_block_size"] == 4
+    assert 0 < s["mean_block_utilization"] <= 1
+    assert s["peak_blocks_in_use"] <= 8
+
+
+def test_engine_rejects_unservable_paged_request():
+    """A request whose prompt + budget can never fit the pool alone must
+    be rejected at submit (otherwise preemption could livelock)."""
+    cfg, params = _setup("llama3.2-1b")
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", kv_layout="paged",
+                           kv_block_size=4, kv_blocks=3)
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit(Request(0, np.zeros(10, np.int32), max_new_tokens=8))
+    # the same request fits a bigger pool
+    eng2 = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                            mode="continuous", kv_layout="paged",
+                            kv_block_size=4, kv_blocks=5)
+    eng2.submit(Request(0, np.zeros(10, np.int32), max_new_tokens=8))
+
+
+def test_engine_paged_gating():
+    cfg, params = _setup("llama3.2-1b")
+    with pytest.raises(NotImplementedError):   # wave engine rebuilds caches
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="wave", kv_layout="paged")
+    with pytest.raises(ValueError):
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         kv_layout="banana")
+    ssm_cfg, ssm_params = _setup("mamba2-130m")
+    with pytest.raises(NotImplementedError):   # no attention cache to page
+        GenerationEngine(ssm_params, ssm_cfg, batch_size=2, max_len=16,
+                         mode="continuous", kv_layout="paged")
+
+
+def test_kv_layout_env_defaults(monkeypatch):
+    from repro.serving.engine import default_kv_block_size, default_kv_layout
+
+    monkeypatch.delenv("ICQ_KV_LAYOUT", raising=False)
+    monkeypatch.delenv("ICQ_KV_BLOCK_SIZE", raising=False)
+    assert default_kv_layout() == "contiguous"
+    assert default_kv_block_size() == 16
+    monkeypatch.setenv("ICQ_KV_LAYOUT", "paged")
+    assert default_kv_layout() == "paged"
+    monkeypatch.setenv("ICQ_KV_LAYOUT", "rowwise")
+    with pytest.raises(ValueError):
+        default_kv_layout()
+    monkeypatch.setenv("ICQ_KV_BLOCK_SIZE", "8")
+    assert default_kv_block_size() == 8
+    monkeypatch.setenv("ICQ_KV_BLOCK_SIZE", "0")
+    with pytest.raises(ValueError):
+        default_kv_block_size()
+    monkeypatch.setenv("ICQ_KV_BLOCK_SIZE", "banana")
+    with pytest.raises(ValueError):
+        default_kv_block_size()
+
+
+def test_engine_env_selects_paged(monkeypatch):
+    cfg, params = _setup("llama3.2-1b")
+    monkeypatch.setenv("ICQ_KV_LAYOUT", "paged")
+    monkeypatch.setenv("ICQ_KV_BLOCK_SIZE", "4")
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                           mode="continuous")
+    assert eng.kv_layout == "paged" and eng.kv_block_size == 4
+    # default pool = contiguous capacity in blocks
+    assert eng.kv_blocks == 2 * (16 // 4)

@@ -1,0 +1,141 @@
+"""Continuous SSM/hybrid serving (ISSUE-5 satellite): the lane-reset mask
+threaded into ``mamba2_apply`` must make slot recycling equivalent to a
+fresh wave cache, so the continuous engine's greedy streams are
+token-identical to the wave engine for recurrent mixers too.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import init_model
+from repro.models.ssm import mamba2_apply, mamba2_cache_init, mamba2_init
+from repro.serving import GenerationEngine, Request
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# layer-level: reset mask == fresh state, other lanes untouched
+# ---------------------------------------------------------------------------
+
+def test_reset_mask_zeroes_only_masked_lanes():
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    p = mamba2_init(jax.random.PRNGKey(0), cfg)
+    B = 3
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)).astype(np.float32))
+
+    # warm every lane's state with a few tokens
+    cache = mamba2_cache_init(cfg, B, per_lane=True)
+    for _ in range(4):
+        xt = jnp.asarray(
+            rng.normal(size=(B, 1, cfg.d_model)).astype(np.float32))
+        _, cache = mamba2_apply(p, xt, cfg, cache=cache)
+
+    reset = jnp.asarray(np.array([False, True, False]))
+    y_reset, c_reset = mamba2_apply(p, x, cfg, cache=cache, reset=reset)
+
+    # lane 1 must behave exactly like a fresh cache fed the same token
+    fresh = mamba2_cache_init(cfg, B, per_lane=True)
+    y_fresh, c_fresh = mamba2_apply(p, x, cfg, cache=fresh)
+    assert np.array_equal(np.asarray(y_reset[1]).view(np.uint8),
+                          np.asarray(y_fresh[1]).view(np.uint8))
+    for k in ("conv", "ssm"):
+        assert np.array_equal(
+            np.asarray(c_reset[k][1]).view(np.uint8),
+            np.asarray(c_fresh[k][1]).view(np.uint8))
+
+    # unmasked lanes must be bit-identical to the no-reset step
+    y_none, c_none = mamba2_apply(p, x, cfg, cache=cache)
+    for i in (0, 2):
+        assert np.array_equal(np.asarray(y_reset[i]).view(np.uint8),
+                              np.asarray(y_none[i]).view(np.uint8))
+        for k in ("conv", "ssm"):
+            assert np.array_equal(
+                np.asarray(c_reset[k][i]).view(np.uint8),
+                np.asarray(c_none[k][i]).view(np.uint8))
+
+
+def test_mamba2_cache_per_lane_index_shape():
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    assert mamba2_cache_init(cfg, 2)["index"].shape == ()
+    assert mamba2_cache_init(cfg, 2, per_lane=True)["index"].shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: continuous == wave for recurrent mixers
+# ---------------------------------------------------------------------------
+
+def _mixed_specs(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [dict(rid=rid,
+                 prompt=rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(2, 9))
+                                     ).astype(np.int32),
+                 max_new_tokens=int(rng.integers(2, 8)))
+            for rid in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "hymba-1.5b"])
+def test_ssm_continuous_greedy_token_identical_to_wave(arch):
+    """More requests than slots: recycled lanes must restart from zeroed
+    conv/ssm state (and, for hybrid, a rewound attention position) and
+    reproduce the wave engine's streams exactly."""
+    cfg, params = _setup(arch)
+    specs = _mixed_specs(cfg, 5)
+    out = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                               mode=mode)
+        for s in specs:
+            eng.submit(Request(**s))
+        out[mode] = {rid: r.generated for rid, r in eng.run().items()}
+    assert out["continuous"] == out["wave"]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "hymba-1.5b"])
+def test_ssm_auto_mode_picks_continuous(arch):
+    """The ssm/hybrid wave-only gate is lifted: 'auto' now selects the
+    continuous engine (no ring cache in the smoke configs)."""
+    cfg, params = _setup(arch)
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                           mode="auto")
+    assert eng.mode == "continuous"
+
+
+def test_ssm_chunked_prefill_falls_back_to_walk():
+    """Recurrent state has no per-position validity masking: a chunked
+    prefill request degrades to the 1-token walk with a warning."""
+    cfg, params = _setup("mamba2-130m")
+    with pytest.warns(UserWarning, match="chunked prefill"):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                               mode="continuous", prefill_chunk=4)
+    assert eng.prefill_chunk == 1 and eng._chunk_step is None
+
+
+def test_ssm_continuous_fewer_steps_than_wave():
+    """The point of lifting the gate: mixed lengths recycle lanes."""
+    cfg, params = _setup("mamba2-130m")
+    rng = np.random.default_rng(1)
+    specs = [
+        dict(rid=rid,
+             prompt=rng.integers(0, cfg.vocab_size, 3 + 5 * (rid % 2))
+             .astype(np.int32),
+             max_new_tokens=2 + 10 * (rid % 2))
+        for rid in range(6)
+    ]
+    steps = {}
+    for mode in ("wave", "continuous"):
+        eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                               mode=mode)
+        for s in specs:
+            eng.submit(Request(**s))
+        eng.run()
+        steps[mode] = eng.metrics.summary()["steps"]
+    assert steps["continuous"] < steps["wave"], steps
