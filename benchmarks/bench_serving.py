@@ -27,6 +27,17 @@ occupancy, and that pool pressure actually exercised preemption —
 reporting cache bytes, block utilization, preemption count and tokens/s
 for both layouts.
 
+A fourth **fault-storm trace** replays the skewed workload through the
+paged engine under a deterministic fault plan (NaN logits, a raised
+launch, and an allocator-exhaustion drill) plus one request with
+``max_queue_wait_s=0`` (deterministically ``expired``) and one cancelled
+mid-decode from its own ``on_token`` callback. It asserts the
+fault-tolerance contract: every submitted request terminates with a
+typed status, every ``ok`` request's greedy stream is token-identical to
+a no-fault run of the same workload, recovery actually engaged
+(``degraded_steps >= 1``) and the engine shuts down with its pool and
+scheduler invariants intact.
+
 Structured result lands in BENCH_serving.json via ``benchmarks/run.py``.
 """
 from __future__ import annotations
@@ -39,6 +50,8 @@ from repro.configs import get_config, smoke_variant
 from repro.launch.quantize import quantize_tree
 from repro.models import init_model
 from repro.serving import GenerationEngine, Request
+from repro.serving.faults import FaultInjector, parse_fault_plan
+from repro.serving.scheduler import STATUSES
 
 ARCH = "llama3.2-1b"
 BATCH = 4
@@ -82,6 +95,14 @@ PAGED_PROMPT_SHORT = (2, 9)
 PAGED_NEW_SHORT = (2, 9)
 PAGED_PREFILL_CHUNK = 8         # exercise the paged chunk-write path
 PAGED_CONFIGS = ("prepared_v2", "dense")
+
+# fault-storm trace: the skewed paged workload with one of each fault
+# kind injected at fixed launch indices (all comfortably below the
+# trace's launch count, so the whole plan fires), one request that can
+# never be admitted in time, and one cancelled from its token stream.
+FAULT_STORM_PLAN = "3:nan,7:raise,15:alloc"
+FAULT_CANCEL_RID = 3            # a long request: cancelled mid-decode
+FAULT_CANCEL_AFTER = 3          # ...after it has streamed this many tokens
 
 
 def _workload(cfg, seed: int = 0):
@@ -158,6 +179,94 @@ def _run_engine(params, cfg, mode, weight_cache, fmt, specs,
     summary = engine.metrics.summary()
     tokens = {rid: r.generated for rid, r in done.items()}
     return tokens, summary
+
+
+def _run_fault_storm(params, cfg) -> dict:
+    """No-fault baseline, then the storm: same workload + fault plan +
+    an expired request + a mid-decode cancellation. Returns the bench
+    row; raises AssertionError if the fault-tolerance contract breaks."""
+    engine_kw = dict(
+        batch_size=BATCH, max_len=PAGED_MAX_LEN, weight_cache="prepared",
+        runtime_fmt="v2", mode="continuous",
+        prefill_chunk=PAGED_PREFILL_CHUNK, kv_layout="paged",
+        kv_block_size=PAGED_BLOCK_SIZE, kv_blocks=PAGED_BLOCKS,
+    )
+    specs = _skewed_workload(cfg)
+
+    base_eng = GenerationEngine(params, cfg, **engine_kw)
+    for s in specs:
+        base_eng.submit(Request(**s))
+    base = base_eng.run()
+    base_eng.check_shutdown_invariants()
+    base_tokens = {rid: r.generated for rid, r in base.items()}
+
+    eng = GenerationEngine(
+        params, cfg,
+        faults=FaultInjector(parse_fault_plan(FAULT_STORM_PLAN)),
+        **engine_kw)
+    streamed = {"n": 0}
+
+    def cancel_mid(rid, tok):
+        streamed["n"] += 1
+        if streamed["n"] == FAULT_CANCEL_AFTER:
+            eng.cancel(rid)
+
+    expired_rid = PAGED_N_REQUESTS
+    last_arrival = specs[-1]["arrival_time"]
+    for s in specs:
+        kw = dict(s)
+        if kw["rid"] == FAULT_CANCEL_RID:
+            kw["on_token"] = cancel_mid
+        eng.submit(Request(**kw))
+    eng.submit(Request(
+        expired_rid,
+        np.arange(4, dtype=np.int32) % cfg.vocab_size,
+        max_new_tokens=4, arrival_time=last_arrival,
+        max_queue_wait_s=0.0))
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    summary = eng.metrics.summary()
+
+    all_rids = {s["rid"] for s in specs} | {expired_rid}
+    if set(done) != all_rids:
+        raise AssertionError(
+            f"fault_storm: requests lost ({sorted(all_rids - set(done))}) "
+            f"or invented ({sorted(set(done) - all_rids)})")
+    for rid, r in done.items():
+        if r.status not in STATUSES:
+            raise AssertionError(
+                f"fault_storm: req {rid} ended without a typed status "
+                f"({r.status!r})")
+    if done[expired_rid].status != "expired":
+        raise AssertionError(
+            f"fault_storm: max_queue_wait_s=0 request ended "
+            f"{done[expired_rid].status!r}, expected 'expired'")
+    if done[FAULT_CANCEL_RID].status != "cancelled":
+        raise AssertionError(
+            f"fault_storm: cancelled request ended "
+            f"{done[FAULT_CANCEL_RID].status!r}, expected 'cancelled'")
+    # survivors must be bit-identical to the no-fault run: recovery that
+    # changes tokens is corruption with extra steps
+    mismatched = [
+        rid for rid, r in done.items()
+        if r.status == "ok" and r.generated != base_tokens[rid]
+    ]
+    if mismatched:
+        raise AssertionError(
+            f"fault_storm: ok-status streams diverged from the no-fault "
+            f"run for rids {mismatched}")
+    if summary["degraded_steps"] < 1:
+        raise AssertionError(
+            "fault_storm: recovery never engaged the degraded XLA arm")
+    if eng.faults.pending:
+        raise AssertionError(
+            f"fault_storm: plan faults never drawn: {eng.faults.pending}")
+
+    row = {k: (round(v, 4) if v == v else None) for k, v in summary.items()}
+    row["status_counts"] = eng.metrics.status_counts()
+    row["fault_kinds"] = dict(eng.metrics.faults)
+    row["ok_parity"] = True
+    return row
 
 
 def run() -> dict:
@@ -329,6 +438,22 @@ def run() -> dict:
             f"block_util={row['paged']['mean_block_utilization']};"
             f"parity={row['greedy_parity']}",
         )
+
+    # ---- fault-storm trace: typed termination + recovery parity -------
+    storm = _run_fault_storm(qparams, cfg)
+    out["fault_storm"] = dict(
+        plan=FAULT_STORM_PLAN, cancel_rid=FAULT_CANCEL_RID,
+        expired_rid=PAGED_N_REQUESTS, row=storm,
+    )
+    emit(
+        "serving/fault_storm",
+        storm["wall_s"] * 1e6,
+        f"statuses={storm['status_counts']};"
+        f"faults={storm['fault_kinds']};"
+        f"degraded_steps={int(storm['degraded_steps'])};"
+        f"replays={int(storm['replays'])};"
+        f"ok_parity={storm['ok_parity']}",
+    )
     return out
 
 

@@ -6,7 +6,13 @@ Layout:  <root>/step_<k>/
 
 Properties needed at 1000+-node scale and honored by the design:
   * atomicity: a step directory is written under ``.tmp`` and renamed —
-    a crash mid-save never corrupts the latest checkpoint;
+    a crash mid-save never corrupts the latest checkpoint. A terminal
+    ``MANIFEST-complete`` marker (the last file written before the
+    rename) additionally guards against *torn copies*: a step dir
+    rsynced or restored halfway has no marker, so ``latest_step()``
+    skips it and ``restore()`` refuses it with a ``CheckpointError``
+    naming the directory, instead of crashing on a missing leaf file or
+    silently loading stale arrays;
   * restart: ``latest_step()`` + ``restore()`` resume training loops;
   * elasticity: arrays are stored with their *global* shape and their
     PartitionSpec recorded; ``restore(..., sharding_fn)`` re-shards to an
@@ -28,6 +34,16 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+#: terminal marker file: present <=> every leaf + manifest was written
+_COMPLETE = "MANIFEST-complete"
+
+
+class CheckpointError(FileNotFoundError):
+    """A checkpoint step directory is missing or partial (no terminal
+    ``MANIFEST-complete`` marker, or a leaf file absent). Subclasses
+    FileNotFoundError so callers treating 'no restorable checkpoint' as
+    a not-found condition keep working."""
+
 
 def _flatten(tree: Any):
     leaves, treedef = jax.tree.flatten(tree)
@@ -44,11 +60,18 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:08d}")
 
+    def _is_complete(self, d: str) -> bool:
+        return os.path.exists(os.path.join(d, _COMPLETE))
+
     def latest_step(self) -> Optional[int]:
+        """Newest step with a *complete* save — ``.tmp`` dirs and step
+        dirs missing the terminal marker (torn copies, pre-marker saves)
+        are never selected."""
         steps = [
             int(d.split("_")[1])
             for d in os.listdir(self.root)
             if d.startswith("step_") and not d.endswith(".tmp")
+            and self._is_complete(os.path.join(self.root, d))
         ]
         return max(steps) if steps else None
 
@@ -81,6 +104,10 @@ class CheckpointManager:
             )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # terminal marker: strictly the last file written, so its
+        # presence certifies every leaf + the manifest landed
+        with open(os.path.join(tmp, _COMPLETE), "w") as f:
+            f.write(f"step {step}: {len(leaves)} leaves\n")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -88,10 +115,13 @@ class CheckpointManager:
         return final
 
     def _gc(self):
+        # retention counts *complete* saves only: a partial dir must
+        # neither crowd out a good checkpoint nor be silently deleted
         steps = sorted(
             int(d.split("_")[1])
             for d in os.listdir(self.root)
             if d.startswith("step_") and not d.endswith(".tmp")
+            and self._is_complete(os.path.join(self.root, d))
         )
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
@@ -109,12 +139,25 @@ class CheckpointManager:
         if step is None:
             step = self.latest_step()
             if step is None:
-                raise FileNotFoundError(f"no checkpoints under {self.root}")
+                raise CheckpointError(
+                    f"no complete checkpoints under {self.root}")
         d = self._step_dir(step)
+        if not os.path.isdir(d):
+            raise CheckpointError(
+                f"checkpoint step {step} has no directory at {d}")
+        if not self._is_complete(d):
+            raise CheckpointError(
+                f"checkpoint at {d} is partial (no {_COMPLETE} marker — "
+                f"interrupted save or torn copy); refusing to load it")
         leaves, treedef = _flatten(like)
         out = []
         for i, leaf in enumerate(leaves):
-            arr = np.load(os.path.join(d, f"{i}.npy"))
+            path = os.path.join(d, f"{i}.npy")
+            if not os.path.exists(path):
+                raise CheckpointError(
+                    f"checkpoint at {d} is missing leaf file {i}.npy "
+                    f"({len(leaves)} leaves expected)")
+            arr = np.load(path)
             if hasattr(leaf, "dtype"):
                 arr = arr.astype(leaf.dtype)
             if sharding_fn is not None:

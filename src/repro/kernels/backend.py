@@ -92,9 +92,11 @@ decode and prefill block independently when both have been tuned.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import os
+import zlib
 from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
@@ -136,6 +138,48 @@ _CODEBOOK_DTYPES = {None: jnp.float32, "f32": jnp.float32,
                     "bf16": jnp.bfloat16}
 
 
+class WeightIntegrityError(ValueError):
+    """A packed v2 sidecar failed its crc32 check: the gap stream was
+    corrupted between encode and load. Raised loudly at load time —
+    a corrupted outlier index stream must never reach the kernels,
+    where it would decode to silently-wrong weights."""
+
+
+def _crc32(x) -> int:
+    return zlib.crc32(np.asarray(jax.device_get(x)).tobytes()) & 0xFFFFFFFF
+
+
+def _sidecar_crcs(syms, offs, dbase) -> Tuple[Tuple[str, int], ...]:
+    """crc32 of each present v2 sidecar, as stored (padding included)."""
+    return tuple(
+        (name, _crc32(t))
+        for name, t in (("syms", syms), ("offs", offs), ("dbase", dbase))
+        if t is not None
+    )
+
+
+def verify_runtime_integrity(rt: Dict) -> None:
+    """Verify a v2 runtime dict (``ops.to_runtime(fmt='v2')``) against
+    the crc32 checksums it recorded at encode time. No-op for v1 dicts
+    or dicts without a ``crc`` entry; raises ``WeightIntegrityError``
+    naming the corrupted tensor otherwise. ``prepare()`` calls this on
+    every v2 dict it loads, so checkpointed/transmitted streams fail
+    loudly at load instead of serving garbage tokens."""
+    crc = rt.get("crc") if isinstance(rt, dict) else None
+    if not crc or rt.get("fmt", "v1") != "v2":
+        return
+    for name, want in crc.items():
+        t = rt.get(name)
+        got = _crc32(t) if t is not None else 0
+        if got != want:
+            raise WeightIntegrityError(
+                f"v2 runtime sidecar {name!r} failed its crc32 check "
+                f"(stored 0x{want:08x}, recomputed 0x{got:08x}): the "
+                f"packed stream was corrupted after to_runtime() — a "
+                f"flipped bit here reassigns outlier indices across "
+                f"quantization groups, so the load is refused")
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class ICQPrepared:
@@ -173,6 +217,10 @@ class ICQPrepared:
     interpret: bool = dataclasses.field(metadata=dict(static=True))
     fmt: str = dataclasses.field(default="v1", metadata=dict(static=True))
     b: int = dataclasses.field(default=0, metadata=dict(static=True))
+    # v2 integrity sidecar: (('syms', crc32), ('offs', crc32), ...) over
+    # the padded stored bytes — None for v1 (see verify_integrity)
+    crc: Optional[Tuple[Tuple[str, int], ...]] = dataclasses.field(
+        default=None, metadata=dict(static=True))
     sel_memo: Optional[jnp.ndarray] = None  # (*lead, d_out, ceil(d_in/32))
 
     def tree_flatten(self):
@@ -180,12 +228,40 @@ class ICQPrepared:
                  self.syms, self.offs, self.dbase, self.sel_memo),
                 (self.n_bits, self.d_out, self.d_in, self.block_m,
                  self.block_n, self.block_k, self.backend, self.interpret,
-                 self.fmt, self.b))
+                 self.fmt, self.b, self.crc))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         *tensors, sel_memo = children
         return cls(*tensors, *aux, sel_memo=sel_memo)
+
+    def verify_integrity(self) -> None:
+        """Recompute the v2 sidecar checksums and compare to the crc
+        recorded at prepare time, raising ``WeightIntegrityError`` on the
+        first mismatch.
+
+        The failure mode this guards is specific to index-coded
+        formats: a flipped bit in the packed gap stream (or its
+        offset/base checkpoints) silently *reassigns an outlier index
+        across quantization groups* — every weight after the corrupted
+        symbol decodes against the wrong codebook half, and generation
+        degrades to plausible-looking garbage instead of crashing.
+        Verification costs one host pass over the sidecars; call it at
+        load/restore boundaries, never per step. No-op when ``crc`` is
+        None (v1, or a layout prepared before checksums existed)."""
+        if self.crc is None:
+            return
+        have = dict(_sidecar_crcs(self.syms, self.offs, self.dbase))
+        for name, want in self.crc:
+            got = have.get(name, 0)
+            if got != want:
+                raise WeightIntegrityError(
+                    f"ICQPrepared v2 sidecar {name!r} failed its crc32 "
+                    f"check (stored 0x{want:08x}, recomputed "
+                    f"0x{got:08x} over {self.d_out}x{self.d_in}): the "
+                    f"packed gap stream was corrupted after prepare() — "
+                    f"refusing to serve weights whose outlier indices "
+                    f"would silently shift across groups")
 
     def _tensors(self):
         # sel_memo deliberately absent: XLA-fallback compute cache, not
@@ -356,6 +432,10 @@ def prepare(
     cb_dtype = _CODEBOOK_DTYPES[codebook_dtype]
 
     is_v2_dict = isinstance(w, dict) and w.get("fmt", "v1") == "v2"
+    if is_v2_dict:
+        # load boundary: a checkpointed/transmitted stream is verified
+        # against its encode-time checksums before any decoding happens
+        verify_runtime_integrity(w)
     if is_v2_dict and want == "v1":
         raise ValueError("cannot prepare a v2 runtime dict as fmt='v1' — "
                          "the dense bitmap was never materialized")
@@ -431,6 +511,15 @@ def prepare(
         fmt=fmt,
         b=b,
     )
+    if fmt == "v2":
+        # record crc32 of the padded sidecars as stored: cheap (one host
+        # pass at load time), and verify_integrity() can then catch any
+        # later corruption of the packed stream before it reaches a
+        # kernel. v1's dense bitmap degrades gracefully under bit flips
+        # (one weight wrong); the v2 stream does not (every weight after
+        # the flip decodes against the wrong group) — hence v2-only.
+        prep = dataclasses.replace(
+            prep, crc=_sidecar_crcs(prep.syms, prep.offs, prep.dbase))
     if fmt == "v2" and backend != "pallas" and xla_sel_memo_enabled():
         # memoize the decoded selector for the pure-XLA arm: the stream
         # decode below is exactly the per-call computation the memo
@@ -463,8 +552,41 @@ def prepare_tree(params: Any, **kw) -> Any:
     )
 
 
+_FORCED_BACKEND: Optional[str] = None
+
+
+@contextlib.contextmanager
+def forced_backend(name: Optional[str]):
+    """Per-call dispatch override: every ``choose_path`` decision made
+    while the context is active lands on ``name``'s arm, regardless of
+    the prepared backend or M.
+
+    Only ``'xla'`` (and None = no-op) is accepted: the pure-XLA arm is
+    the bitwise-exact fallback every prepared layout can execute, which
+    is what makes it the *degraded mode* of the serving fault-recovery
+    path — a step retried under ``forced_backend('xla')`` recomputes
+    the same tokens the Pallas arms would have produced (exactly on
+    CPU/same-arm configs; greedy-token-identical on TPU). The override
+    is consulted at **trace time**: wrap the jitted call so the first
+    trace bakes the XLA arm in (wrapping subsequent calls is free).
+    """
+    if name not in (None, "xla"):
+        raise ValueError(
+            f"forced_backend supports only 'xla' (the universal fallback "
+            f"arm) or None, got {name!r}")
+    global _FORCED_BACKEND
+    prev = _FORCED_BACKEND
+    _FORCED_BACKEND = name
+    try:
+        yield
+    finally:
+        _FORCED_BACKEND = prev
+
+
 def choose_path(M: int, prep: ICQPrepared) -> str:
     """'fused' | 'dequant' | 'xla' for a call with M batched tokens."""
+    if _FORCED_BACKEND == "xla":
+        return "xla"
     if prep.backend != "pallas" or prep.codes.ndim != 2:
         return "xla"
     return "fused" if M <= decode_m_threshold() else "dequant"
@@ -673,13 +795,16 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
 
 __all__ = [
     "ICQPrepared",
+    "WeightIntegrityError",
     "prepare",
     "prepare_tree",
     "arm_blocks",
     "bucket_m",
     "choose_path",
     "dequantize_prepared",
+    "forced_backend",
     "linear_apply",
+    "verify_runtime_integrity",
     "vmem_bytes_estimate",
     "vmem_budget_bytes",
     "DEFAULT_BLOCKS",

@@ -30,6 +30,7 @@ never pass it explicitly anymore.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Optional
 
 import jax
@@ -41,10 +42,12 @@ from repro.core.icquant import ICQPacked
 from repro.core.index_coding import decode_to_dense_mask, stream_checkpoints
 from repro.kernels.backend import (
     ICQPrepared,
+    WeightIntegrityError,
     dequantize_prepared,
     linear_apply,
     prepare,
     prepare_tree,
+    verify_runtime_integrity,
 )
 from repro.kernels.icq_dequant import (
     _round_up,
@@ -87,13 +90,22 @@ def to_runtime(packed: ICQPacked, fmt: str = "v1", *, tile: int = 512,
     sym_np = np.asarray(jax.device_get(packed.symbols))
     cnt_np = np.asarray(jax.device_get(packed.counts))
     offs, dbase = stream_checkpoints(sym_np, cnt_np, packed.b, tile, pk)
+    words = packing.pack_symbols_np(sym_np, packed.b)
+    # encode-time crc32 of each packed sidecar: verified by prepare()
+    # (and verify_runtime_integrity) at every load boundary, so a
+    # corrupted stream fails loudly instead of decoding outlier indices
+    # into the wrong quantization groups.
+    crc = {name: zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+           for name, a in (("syms", words), ("offs", offs),
+                           ("dbase", dbase))}
     return dict(
         common, fmt="v2",
-        syms=jnp.asarray(packing.pack_symbols_np(sym_np, packed.b)),
+        syms=jnp.asarray(words),
         offs=jnp.asarray(offs),
         dbase=jnp.asarray(dbase),
         b=packed.b,
         tile=tile,
+        crc=crc,
     )
 
 
@@ -166,4 +178,5 @@ def matmul(x, rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarr
 __all__ = ["to_runtime", "runtime_bits_per_weight",
            "runtime_outlier_bits_per_weight", "dequant", "matmul",
            "kmeans_assign", "ICQPrepared", "prepare", "prepare_tree",
-           "dequantize_prepared", "linear_apply"]
+           "dequantize_prepared", "linear_apply",
+           "WeightIntegrityError", "verify_runtime_integrity"]

@@ -19,6 +19,7 @@ from repro.configs import get_config, smoke_variant
 from repro.launch.quantize import quantize_tree
 from repro.launch.train import train
 from repro.serving import GenerationEngine, Request, SamplingParams
+from repro.serving.faults import FaultInjector, parse_fault_plan
 
 
 def main():
@@ -71,6 +72,39 @@ def main():
                          "batch * ceil(max_len / block_size) = contiguous "
                          "capacity; shrink to oversubscribe and trade "
                          "preemptions for HBM)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded submit queue: refuse admission beyond "
+                         "this many waiting requests (default "
+                         "ICQ_MAX_QUEUE / unbounded)")
+    ap.add_argument("--shed-policy", default=None,
+                    choices=["reject", "shed-oldest"],
+                    help="what a full queue sheds: 'reject' the new "
+                         "request or 'shed-oldest' waiting one (default "
+                         "ICQ_SHED_POLICY / reject)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds from arrival; "
+                         "lanes past it finish with status 'timeout' "
+                         "(default: none)")
+    ap.add_argument("--max-queue-wait", type=float, default=None,
+                    help="per-request bound on queue wait in seconds; "
+                         "requests not admitted in time finish with "
+                         "status 'expired' (default: none)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection, e.g. "
+                         "'3:nan,6:raise' = launch 3 produces NaN "
+                         "logits, launch 6 raises (default "
+                         "ICQ_FAULT_PLAN)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="seeded random fault injection probability per "
+                         "launch (default ICQ_FAULT_RATE / 0)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="PRNG seed for --fault-rate draws (default "
+                         "ICQ_FAULT_SEED / 0)")
+    ap.add_argument("--degrade-steps", type=int, default=None,
+                    help="after a recovered fault, pin this many launches "
+                         "to the bitwise-exact XLA arm before returning "
+                         "to the fast path (default ICQ_DEGRADE_STEPS "
+                         "/ 8)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -102,6 +136,12 @@ def main():
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
+    faults = None
+    if args.fault_plan is not None or args.fault_rate is not None:
+        faults = FaultInjector(
+            parse_fault_plan(args.fault_plan) if args.fault_plan else None,
+            seed=args.fault_seed if args.fault_seed is not None else 0,
+            rate=args.fault_rate if args.fault_rate is not None else 0.0)
     engine = GenerationEngine(params, cfg, batch_size=args.batch,
                               max_len=args.max_len,
                               weight_cache=args.weight_cache,
@@ -111,7 +151,11 @@ def main():
                               prefill_chunk=args.prefill_chunk,
                               kv_layout=args.kv_layout,
                               kv_block_size=args.kv_block_size,
-                              kv_blocks=args.kv_blocks)
+                              kv_blocks=args.kv_blocks,
+                              max_queue=args.max_queue,
+                              shed_policy=args.shed_policy,
+                              faults=faults,
+                              degrade_steps=args.degrade_steps)
     kv_desc = engine.kv_layout
     if engine.kv_layout == "paged":
         kv_desc += (f": {engine.kv_blocks} blocks x "
@@ -141,7 +185,14 @@ def main():
                   f"{args.max_len}; truncating budget to {max_new} "
                   f"new tokens")
         try:
-            engine.submit(Request(rid, prompt, max_new_tokens=max_new))
+            accepted = engine.submit(
+                Request(rid, prompt, max_new_tokens=max_new,
+                        deadline_s=args.deadline,
+                        max_queue_wait_s=args.max_queue_wait))
+            if not accepted:
+                print(f"[serve] SHED req {rid}: queue full "
+                      f"(max_queue={engine.max_queue}, "
+                      f"policy={engine.shed_policy})")
         except ValueError as e:
             # e.g. a paged pool too small to ever serve this request:
             # mirror the max_len policy above — reject, don't crash
@@ -151,7 +202,7 @@ def main():
     for rid in sorted(done):
         r = done[rid]
         print(f"[serve] req {rid}: prompt_len={len(r.prompt)} "
-              f"generated={r.generated}")
+              f"generated={r.generated} status={r.status}")
     s = engine.metrics.summary()
     print(f"[serve] {int(s['completed'])}/{int(s['requests'])} requests, "
           f"{int(s['generated_tokens'])} tokens in {s['wall_s']:.2f}s "
@@ -166,6 +217,18 @@ def main():
               f"{int(s['preemptions'])} preemptions, block utilization "
               f"{s['mean_block_utilization']:.2f} mean / "
               f"{int(s['peak_blocks_in_use'])} peak blocks")
+    counts = engine.metrics.status_counts()
+    statuses = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[serve] statuses: {statuses or 'none'}")
+    if s["faults"] or s["degraded_steps"] or s["replays"]:
+        by_kind = " ".join(f"{k}={v}" for k, v in
+                           sorted(engine.metrics.faults.items()))
+        print(f"[serve] faults: {int(s['faults'])} ({by_kind}), "
+              f"{int(s['degraded_steps'])} degraded steps, "
+              f"{int(s['replays'])} replays")
+    print(f"[serve] watchdog: step time p50 {s['step_time_p50']:.4f}s / "
+          f"p95 {s['step_time_p95']:.4f}s, "
+          f"{int(s['stalled_steps'])} stalled steps")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,17 @@ class StragglerMonitor:
         self._ewma: Dict[int, float] = {}
         self._counts: Dict[int, int] = {}
 
+    def ewma(self, host: int):
+        """Current EWMA step time for ``host`` (None before any record).
+        Public accessor so the serving step-time watchdog
+        (serving/metrics.py) can reuse this module's smoothing instead
+        of duplicating it."""
+        return self._ewma.get(host)
+
+    def count(self, host: int) -> int:
+        """Recorded samples for ``host`` (warmup gating)."""
+        return self._counts.get(host, 0)
+
     def record(self, host: int, step_time_s: float) -> None:
         prev = self._ewma.get(host)
         self._ewma[host] = (

@@ -1,19 +1,82 @@
+"""Serving subsystem: continuous batching, paged KV, fault tolerance.
+
+Fault-tolerance contract
+------------------------
+
+Every request submitted to ``GenerationEngine`` terminates with exactly
+one **typed status** (``Request.status``, one of
+``scheduler.STATUSES``):
+
+  * ``ok``        — ran to completion (budget or EOS);
+  * ``timeout``   — a running lane crossed its ``deadline_s`` (seconds
+    from ``arrival_time`` on the engine clock) and was finished with
+    whatever it had generated;
+  * ``expired``   — a queued request exceeded ``max_queue_wait_s``
+    before ever being admitted (``max_queue_wait_s=0`` deterministically
+    expires: the lifecycle pass runs before admission);
+  * ``cancelled`` — ``engine.cancel(rid)`` took effect (queued or
+    mid-decode; a live lane's slot and paged blocks are reclaimed);
+  * ``rejected``  — shed by the bounded submit queue (see below);
+  * ``failed``    — the recovery path gave up: the launch failed on the
+    degraded arm too and the request exhausted its replay budget, or a
+    sampled (temperature > 0) lane had to be preempted, whose stream
+    cannot be replayed bit-identically.
+
+**Backpressure**: ``max_queue`` bounds the submit queue (default
+``ICQ_MAX_QUEUE``, unbounded when unset). A full queue applies
+``shed_policy`` (default ``ICQ_SHED_POLICY`` / ``reject``):
+
+  * ``reject``     — the *new* request is refused (``submit`` returns
+    ``False``) and recorded with status ``rejected``;
+  * ``shed-oldest`` — the oldest *waiting* request is shed with status
+    ``rejected`` and the new one admitted in its place.
+
+**Fault injection and degraded mode**: ``serving.faults.FaultInjector``
+injects deterministic launch faults — a planned schedule
+(``ICQ_FAULT_PLAN``, e.g. ``"3:nan,6:raise"``: kinds ``raise`` /
+``nan`` / ``alloc``) and/or a seeded random rate (``ICQ_FAULT_RATE``,
+``ICQ_FAULT_SEED``). The engine also *detects* genuine faults: NaN/inf
+logits on a live lane and runtime errors from a launch. Either way the
+step is retried once on the bitwise-exact pure-XLA dispatch arm
+(``kernels.backend.forced_backend('xla')``) with identical inputs —
+including the same PRNG subkey, so sampled streams stay reproducible —
+and the engine stays pinned to that arm for ``degrade_steps`` clean
+launches (``ICQ_DEGRADE_STEPS``, default 8) before returning to the
+fast path. If the retry fails too, the live lanes are preempted and
+requeued (the paged engine's replay machinery), each request at most
+twice before it is finished as ``failed``. The
+``MetricsCollector`` ledger (``faults`` by kind, ``degraded_steps``,
+``replays``, per-status counters) and the ``StepTimeWatchdog``
+(EWMA step-time p50/p95 + ``stalled`` flag) make every recovery
+visible in ``metrics.summary()``.
+
+With injection disabled (the default) greedy continuous serving is
+token-identical to the pre-fault-tolerance engine, contiguous and
+paged alike.
+"""
 from repro.serving.engine import GenerationEngine, make_serving_step
+from repro.serving.faults import FaultInjected, FaultInjector, parse_fault_plan
 from repro.serving.kv_pool import KVBlockPool
-from repro.serving.metrics import MetricsCollector, RequestMetrics
+from repro.serving.metrics import (MetricsCollector, RequestMetrics,
+                                   StepTimeWatchdog)
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
-from repro.serving.scheduler import Request, Slot, SlotScheduler
+from repro.serving.scheduler import STATUSES, Request, Slot, SlotScheduler
 
 __all__ = [
     "GenerationEngine",
     "GREEDY",
+    "FaultInjected",
+    "FaultInjector",
     "KVBlockPool",
     "MetricsCollector",
     "Request",
     "RequestMetrics",
+    "STATUSES",
     "SamplingParams",
     "Slot",
     "SlotScheduler",
+    "StepTimeWatchdog",
     "make_serving_step",
+    "parse_fault_plan",
     "sample_tokens",
 ]

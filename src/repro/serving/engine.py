@@ -89,9 +89,48 @@ layout serving at ~0.3-0.45 b/w outlier overhead); ``'dense'``
 materializes dense weights once; ``'none'`` keeps the reference
 in-graph decode. A MetricsCollector (serving/metrics.py) records TTFT,
 queue wait, tokens/s, slot occupancy and queue depth for every run.
+
+Fault tolerance (this layer's additions; every default preserves the
+pre-fault-tolerance engine bit-for-bit):
+
+  * **Request lifecycle** — ``Request.deadline_s`` (end-to-end, from
+    arrival on the engine clock) and ``max_queue_wait_s`` (queue wait
+    alone) are enforced once per engine iteration: an expired running
+    lane finishes with status ``'timeout'`` (partial output kept), an
+    expired queued request with ``'expired'``. ``cancel(rid)`` is safe
+    from ``on_token`` callbacks: a queued request leaves the queue, a
+    running lane is torn down (slot + paged blocks freed) at the next
+    iteration boundary, both with status ``'cancelled'``. Every request
+    handed back by ``run()`` carries exactly one terminal
+    ``Request.status`` from ``scheduler.STATUSES``.
+  * **Backpressure** — ``max_queue`` bounds the submit queue
+    (``ICQ_MAX_QUEUE``; None = unbounded, the historical behavior).
+    ``submit`` returns False for a request the ``shed_policy``
+    (``ICQ_SHED_POLICY``) turned away: ``'reject'`` sheds the *new*
+    request, ``'shed-oldest'`` sheds the longest-queued one and admits
+    the new. Shed requests terminate with status ``'rejected'``.
+  * **Fault injection + recovery** — a seeded ``FaultInjector``
+    (serving/faults.py; ``ICQ_FAULT_PLAN`` / ``ICQ_FAULT_RATE`` /
+    ``ICQ_FAULT_SEED``) can fail chosen launches. Injected or not,
+    every step launch is *checked*: launches that raise, and decode
+    launches whose logits come back NaN/inf on a live lane (the
+    signature of a corrupted v2 gap stream), are retried **once, on the
+    bitwise-exact pure-XLA arm** (``kernels/backend.forced_backend``) —
+    degraded mode, which then stays sticky for ``degrade_steps`` clean
+    launches (``ICQ_DEGRADE_STEPS``, default 8) before dispatch returns
+    to the kernel arms. If the degraded retry also fails, the engine
+    falls back to the paged engine's preempt-and-requeue machinery:
+    every live lane is preempted and replayed (greedy streams recompute
+    identically). A request that needs more than two replays — a
+    genuinely poisoned weight would otherwise loop forever — finishes
+    as ``'failed'``, as does a sampled (temperature > 0) preemption
+    victim, whose replay would silently diverge. The metrics ledger
+    (faults / degraded_steps / replays / timeouts / cancellations /
+    sheds) makes every recovery visible.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 from typing import Callable, Dict, List, Optional
@@ -100,8 +139,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backend import forced_backend
 from repro.launch.steps import make_cache, make_decode_step, \
     make_prefill_chunk_step, prepare_serving_params
+from repro.serving.faults import FaultInjected, FaultInjector
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
@@ -110,7 +151,17 @@ from repro.serving.scheduler import Request, SlotScheduler
 __all__ = ["GenerationEngine", "Request", "make_serving_step"]
 
 
-def make_serving_step(cfg, sample: bool = True):
+class _BadLogits(RuntimeError):
+    """A decode launch returned NaN/inf logits on a live lane (detected
+    by the checked step, or reported by an injected ``'nan'`` fault)."""
+
+
+class _ReplayNeeded(RuntimeError):
+    """Both the normal launch and its degraded XLA retry failed: the
+    engine must preempt the live lanes and replay them."""
+
+
+def make_serving_step(cfg, sample: bool = True, check: bool = False):
     """decode-one-token + select-next, as a single jit-able program.
 
     ``sample=True``: (params, cache, tokens (B,1), pos (B,), live (B,),
@@ -119,6 +170,13 @@ def make_serving_step(cfg, sample: bool = True):
     sampling arrays and key (argmax only, measurably cheaper per step on
     CPU than the full sampler; the engine uses it whenever no live lane
     has temperature > 0, which keeps greedy serving at wave step cost).
+
+    ``check=True`` appends a third output ``bad`` (B,) bool: True where
+    a *live* lane's logits contain NaN/inf — the health probe the
+    fault-recovery path keys on (a corrupted v2 gap stream poisons
+    logits silently; this converts that into a typed, retryable
+    failure). The token outputs are computed identically, so checked
+    and unchecked variants emit the same streams.
 
     Both variants take two trailing optional arrays: ``pages`` (B,
     max_blocks) mirrors the paged-KV page tables into the cache
@@ -134,6 +192,9 @@ def make_serving_step(cfg, sample: bool = True):
                                reset=reset)
         toks = sample_tokens(logits, key, temperature, top_k, top_p,
                              live=live)
+        if check:
+            bad = live & ~jnp.isfinite(logits).all(axis=-1)
+            return toks, cache, bad
         return toks, cache
 
     def greedy_step(params, cache, tokens, pos, live, pages=None,
@@ -141,6 +202,9 @@ def make_serving_step(cfg, sample: bool = True):
         logits, cache = decode(params, cache, tokens, pos, pages=pages,
                                reset=reset)
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if check:
+            bad = live & ~jnp.isfinite(logits).all(axis=-1)
+            return jnp.where(live, toks, 0), cache, bad
         return jnp.where(live, toks, 0), cache
 
     return step if sample else greedy_step
@@ -191,6 +255,51 @@ def default_kv_block_size() -> int:
     return bs
 
 
+def default_max_queue() -> Optional[int]:
+    """Bounded-submit-queue default (ICQ_MAX_QUEUE; unset = None =
+    unbounded, the pre-backpressure behavior)."""
+    env = os.environ.get("ICQ_MAX_QUEUE")
+    if not env:
+        return None
+    try:
+        mq = int(env)
+    except ValueError:
+        raise ValueError(f"ICQ_MAX_QUEUE must be an integer, got {env!r}")
+    if mq < 0:
+        raise ValueError(f"ICQ_MAX_QUEUE must be >= 0, got {mq}")
+    return mq
+
+
+def default_shed_policy() -> str:
+    """Backpressure shed policy default (ICQ_SHED_POLICY, default
+    'reject' — turn away the *new* request; 'shed-oldest' drops the
+    longest-queued request instead)."""
+    env = os.environ.get("ICQ_SHED_POLICY")
+    if not env:
+        return "reject"
+    if env not in ("reject", "shed-oldest"):
+        raise ValueError(
+            f"ICQ_SHED_POLICY must be 'reject' or 'shed-oldest', got {env!r}")
+    return env
+
+
+def default_degrade_steps() -> int:
+    """Degraded-mode stickiness default (ICQ_DEGRADE_STEPS, default 8):
+    clean launches on the XLA fallback arm before dispatch returns to
+    the kernel arms after a recovered fault."""
+    env = os.environ.get("ICQ_DEGRADE_STEPS")
+    if not env:
+        return 8
+    try:
+        n = int(env)
+    except ValueError:
+        raise ValueError(
+            f"ICQ_DEGRADE_STEPS must be an integer, got {env!r}")
+    if n < 1:
+        raise ValueError(f"ICQ_DEGRADE_STEPS must be >= 1, got {n}")
+    return n
+
+
 def _continuous_supported(cfg, max_len: int) -> Optional[str]:
     """None if the config can run the continuous engine, else the reason."""
     if cfg.is_encdec:
@@ -211,7 +320,11 @@ class GenerationEngine:
                  kv_layout: Optional[str] = None,
                  kv_block_size: Optional[int] = None,
                  kv_blocks: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: Optional[str] = None,
+                 faults: Optional[FaultInjector] = None,
+                 degrade_steps: Optional[int] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
@@ -285,8 +398,19 @@ class GenerationEngine:
             raise ValueError(f"kv_blocks must be >= 1, got {self.kv_blocks}")
 
         self._decode = jax.jit(make_decode_step(cfg))       # wave path
-        self._step = jax.jit(make_serving_step(cfg))        # continuous path
-        self._step_greedy = jax.jit(make_serving_step(cfg, sample=False))
+        # continuous path: checked variants (tokens identical to the
+        # unchecked programs; the extra `bad` output is the NaN probe the
+        # recovery path keys on)
+        self._step = jax.jit(make_serving_step(cfg, check=True))
+        self._step_greedy = jax.jit(
+            make_serving_step(cfg, sample=False, check=True))
+        # degraded twins: the *same* programs, but their (lazy) first
+        # trace happens under forced_backend('xla') — every matmul is
+        # pinned to the bitwise-exact pure-XLA arm. Distinct jit objects
+        # so the two arms never share a compilation cache entry.
+        self._step_xla = jax.jit(make_serving_step(cfg, check=True))
+        self._step_greedy_xla = jax.jit(
+            make_serving_step(cfg, sample=False, check=True))
         # recurrent mixers need the lane-reset mask on every decode launch
         self._needs_reset = cfg.family in ("ssm", "hybrid")
         # second persistent jitted program: S-token prompt-chunk admission
@@ -295,6 +419,9 @@ class GenerationEngine:
         self._chunk_step = (
             jax.jit(make_prefill_chunk_step(cfg))
             if self.prefill_chunk > 1 and self.mode == "continuous" else None)
+        self._chunk_step_xla = (
+            jax.jit(make_prefill_chunk_step(cfg))
+            if self._chunk_step is not None else None)
         if self._chunk_step is not None:
             from repro.kernels import autotune
 
@@ -316,8 +443,41 @@ class GenerationEngine:
         self.completed: Dict[int, Request] = {}
         self.metrics = MetricsCollector()
 
+        # ---- fault tolerance (see module doc)
+        self.max_queue = default_max_queue() if max_queue is None \
+            else int(max_queue)
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        self.shed_policy = (default_shed_policy() if shed_policy is None
+                            else shed_policy)
+        if self.shed_policy not in ("reject", "shed-oldest"):
+            raise ValueError(f"shed_policy must be 'reject' or "
+                             f"'shed-oldest', got {self.shed_policy!r}")
+        # faults=None reads the ICQ_FAULT_* env knobs (normally unset ->
+        # no injector at all; pass an explicit FaultInjector to drive a
+        # storm programmatically)
+        self.faults = FaultInjector.from_env() if faults is None else faults
+        self.degrade_steps = (default_degrade_steps() if degrade_steps is None
+                              else int(degrade_steps))
+        if self.degrade_steps < 1:
+            raise ValueError(
+                f"degrade_steps must be >= 1, got {self.degrade_steps}")
+        self._launch_no = 0           # global launch counter (decode+chunk)
+        self._degraded_left = 0       # sticky degraded-mode countdown
+        self._cancel_pending: set = set()   # rids awaiting cancellation
+        self._replayed: Dict[int, int] = {}  # rid -> replay count (cap 2)
+        self._replay_cap = 2
+
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request; returns False when backpressure shed it.
+
+        Invalid requests (empty prompt, prompt that cannot fit,
+        duplicate rid, paged-unservable) still raise — those are caller
+        bugs, not load. A shed request terminates immediately with
+        status ``'rejected'`` and appears in ``run()``'s results like
+        every other submission, so callers never lose track of a rid.
+        """
         n = len(req.prompt)
         if n == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
@@ -349,8 +509,36 @@ class GenerationEngine:
             warnings.warn(
                 f"request {req.rid}: per-request sampling parameters are "
                 f"ignored by the greedy-only wave engine", stacklevel=2)
+        if (self.max_queue is not None
+                and self._sched.queue_depth >= self.max_queue):
+            if self.shed_policy == "reject":
+                # the new request is the victim: record it (metrics +
+                # results) and turn it away
+                self.metrics.on_submit(req.rid, req.arrival_time, n)
+                self._terminal_queued(req, req.arrival_time, "rejected")
+                return False
+            victim = self._sched.shed_oldest()   # 'shed-oldest'
+            if victim is not None:
+                self._terminal_queued(victim, req.arrival_time, "rejected")
         self.metrics.on_submit(req.rid, req.arrival_time, n)
         self._sched.submit(req)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of ``rid``; safe from ``on_token``.
+
+        Returns True when the cancellation is pending (it takes effect
+        at the next iteration boundary: a queued request leaves the
+        queue, a running lane frees its slot and paged blocks — both
+        with status ``'cancelled'`` and partial output kept), False when
+        the request already finished. Unknown rids raise KeyError.
+        """
+        if rid not in self.metrics.requests:
+            raise KeyError(f"unknown request id {rid}")
+        if rid in self.completed:
+            return False
+        self._cancel_pending.add(rid)
+        return True
 
     def _now(self) -> float:
         raw = time.monotonic() if self._real_clock else self._clock()
@@ -373,16 +561,75 @@ class GenerationEngine:
     # ------------------------------------------------------------------
 
     def _finish(self, slot: int, t: float, live: np.ndarray,
-                pos: np.ndarray, tokens: np.ndarray) -> None:
+                pos: np.ndarray, tokens: np.ndarray,
+                status: str = "ok") -> None:
         req = self._sched.release(slot)
         if self._pool is not None:
             self._pool.release(slot)   # blocks reclaimed the same step
         self._folded.pop(req.rid, None)
-        self.metrics.on_finish(req.rid, t, len(req.generated))
+        self._replayed.pop(req.rid, None)
+        self._cancel_pending.discard(req.rid)
+        req.status = status
+        self.metrics.on_finish(req.rid, t, len(req.generated), status=status)
         self.completed[req.rid] = req
         live[slot] = False
         pos[slot] = 0
         tokens[slot, 0] = 0
+
+    def _terminal_queued(self, req: Request, t: float, status: str) -> None:
+        """Terminal path for a request that never occupies a slot again
+        (queued expiry/cancellation, backpressure shed). Partial output
+        from a pre-preemption life is kept on the request."""
+        self._folded.pop(req.rid, None)
+        self._replayed.pop(req.rid, None)
+        self._cancel_pending.discard(req.rid)
+        req.status = status
+        self.metrics.on_finish(req.rid, t, len(req.generated), status=status)
+        self.completed[req.rid] = req
+
+    def _lifecycle_pass(self, now: float, live: np.ndarray, pos: np.ndarray,
+                        tokens: np.ndarray) -> bool:
+        """Once-per-iteration deadline/cancellation enforcement.
+
+        Queued requests past ``max_queue_wait_s`` or ``deadline_s`` (or
+        cancelled) leave the queue without ever occupying a slot; live
+        lanes past ``deadline_s`` finish as ``'timeout'`` with whatever
+        they generated, cancelled lanes as ``'cancelled'``. Returns True
+        when anything changed (the caller must refresh the device ctrl
+        mirror). Comparisons are ``>=`` so a zero deadline/wait expires
+        deterministically under the virtual clock (which only advances
+        across idle gaps) — ``max_queue_wait_s=0`` is the deterministic
+        'never admitted' testing hook.
+        """
+        sched = self._sched
+        changed = False
+
+        def queued_verdict(req: Request) -> Optional[str]:
+            if req.rid in self._cancel_pending:
+                return "cancelled"
+            waited = now - req.arrival_time
+            if req.deadline_s is not None and waited >= req.deadline_s:
+                return "expired"
+            if (req.max_queue_wait_s is not None
+                    and waited >= req.max_queue_wait_s):
+                return "expired"
+            return None
+
+        for req in sched.drop_queued(lambda r: queued_verdict(r) is not None):
+            self._terminal_queued(req, now, queued_verdict(req))
+            changed = True
+        for i in range(self.batch_size):
+            if not live[i]:
+                continue
+            req = sched.slot(i).request
+            if req.rid in self._cancel_pending:
+                self._finish(i, now, live, pos, tokens, status="cancelled")
+                changed = True
+            elif (req.deadline_s is not None
+                  and now - req.arrival_time >= req.deadline_s):
+                self._finish(i, now, live, pos, tokens, status="timeout")
+                changed = True
+        return changed
 
     # -- paged-KV admission / preemption -------------------------------
 
@@ -409,12 +656,24 @@ class GenerationEngine:
         (keeps FIFO), and on re-admission the lane replays the extended
         prompt through teacher forcing. Greedy decoding makes the replay
         reproduce the identical continuation, so preemption never
-        changes a greedy stream — only its timing. (Under temperature
-        sampling the continuation draws fresh PRNG — streams may differ
-        from an unpreempted run, like any sampled rerun.)
+        changes a greedy stream — only its timing.
+
+        A **sampled** lane (temperature > 0) has no such guarantee: its
+        replay draws fresh PRNG and silently diverges from the stream
+        already handed to ``on_token``. Rather than return a stream no
+        run can reproduce, the lane force-finishes with status
+        ``'failed'`` (partial output kept) — the caller sees a typed
+        loss, not quiet divergence.
         """
+        st = self._sched.slot(slot)
+        sp = (st.request.sampling if st.request.sampling is not None
+              else self.sampling)
+        if sp.temperature > 0.0:
+            self._finish(slot, t, live, pos, tokens, status="failed")
+            return
         req = self._sched.release(slot)
-        self._pool.release(slot)
+        if self._pool is not None:    # contiguous replay has no pool
+            self._pool.release(slot)
         # fold only the not-yet-folded suffix: a request preempted a
         # second time must not duplicate tokens already in the prompt
         folded = self._folded.get(req.rid, 0)
@@ -453,6 +712,90 @@ class GenerationEngine:
                              key=lambda j: sched.slot(j).seq)
                 self._preempt(victim, self._now(), live, pos, tokens)
 
+    # -- fault recovery -------------------------------------------------
+
+    def _decode_launch(self, cache, tokens, pos, ctrl, greedy_only, sub,
+                       extra, live, fault):
+        """One checked decode launch under the recovery policy.
+
+        Returns (toks, cache). A launch that raises (injected or genuine
+        RuntimeError) or whose logits come back non-finite on a live
+        lane is retried **once** on the degraded XLA arm with identical
+        inputs — including the PRNG subkey, so a recovered sampled
+        launch draws the very tokens the failed one would have. Failure
+        of the retry raises ``_ReplayNeeded``; the caller preempts and
+        replays the live lanes. The failed launch's cache output is
+        discarded (jitted steps are functional), so a retry never sees
+        half-written state.
+        """
+        d_live, d_temp, d_topk, d_topp = ctrl
+        t_dev, p_dev = jnp.asarray(tokens), jnp.asarray(pos)
+
+        def run(degraded: bool):
+            if greedy_only:
+                prog = (self._step_greedy_xla if degraded
+                        else self._step_greedy)
+                args = (self.params, cache, t_dev, p_dev, d_live)
+            else:
+                prog = self._step_xla if degraded else self._step
+                args = (self.params, cache, t_dev, p_dev, d_live,
+                        d_temp, d_topk, d_topp, sub)
+            ctx = (forced_backend("xla") if degraded
+                   else contextlib.nullcontext())
+            with ctx:
+                toks, cache2, bad = prog(*args, **extra)
+            if bool((np.asarray(bad) & live).any()):
+                raise _BadLogits("non-finite logits on a live lane")
+            return toks, cache2
+
+        degraded = self._degraded_left > 0
+        try:
+            if fault == "raise":
+                raise FaultInjected(
+                    f"injected 'raise' at launch {self._launch_no - 1}")
+            out = run(degraded)
+            if fault == "nan":
+                # the launch ran; its logits are reported poisoned
+                raise _BadLogits(
+                    f"injected 'nan' at launch {self._launch_no - 1}")
+        except RuntimeError as e:   # FaultInjected / _BadLogits / XLA
+            if fault is not None:
+                self.metrics.on_fault(fault)
+            else:
+                self.metrics.on_fault(
+                    "nan" if isinstance(e, _BadLogits) else "error")
+            self._degraded_left = self.degrade_steps
+            try:
+                out = run(True)   # retry once, bitwise-exact XLA arm
+            except RuntimeError:
+                raise _ReplayNeeded("decode launch failed twice")
+        if self._degraded_left > 0:
+            self._degraded_left -= 1
+            self.metrics.on_degraded_step()
+        return out
+
+    def _replay_live_lanes(self, t: float, live: np.ndarray,
+                           pos: np.ndarray, tokens: np.ndarray) -> None:
+        """Both launch attempts failed: preempt every live lane through
+        the standing preempt-and-requeue machinery, so the whole batch
+        replays from requeued prompts (greedy streams recompute
+        identically; sampled lanes force-finish as 'failed' inside
+        ``_preempt``). A request that needs more than ``_replay_cap``
+        replays — a genuinely poisoned weight or model would otherwise
+        loop forever — finishes as ``'failed'`` with partial output.
+        """
+        self.metrics.on_replay()
+        for i in range(self.batch_size):
+            if not live[i]:
+                continue
+            rid = self._sched.slot(i).request.rid
+            n = self._replayed.get(rid, 0) + 1
+            self._replayed[rid] = n
+            if n > self._replay_cap:
+                self._finish(i, t, live, pos, tokens, status="failed")
+            else:
+                self._preempt(i, t, live, pos, tokens)
+
     def _prefill_chunk_pass(self, cache, pos: np.ndarray, live: np.ndarray,
                             tokens: np.ndarray):
         """Drain bulk prompt through the chunk program, one launch.
@@ -488,11 +831,37 @@ class GenerationEngine:
                 ctoks[i, : lens[i]] = r.prompt[pos[i]: pos[i] + lens[i]]
         # .copy(): argument transfers are async and pos mutates below —
         # the chunk step has no host-side output read to fence on.
-        cache = self._chunk_step(
-            self.params, cache, jnp.asarray(ctoks),
-            jnp.asarray(pos.copy()), jnp.asarray(lens),
-            pages=self._pages_mirror(),
-        )
+        args = (self.params, cache, jnp.asarray(ctoks),
+                jnp.asarray(pos.copy()), jnp.asarray(lens))
+        fault = (self.faults.draw(self._launch_no)
+                 if self.faults is not None else None)
+        self._launch_no += 1
+
+        def run(degraded: bool):
+            prog = self._chunk_step_xla if degraded else self._chunk_step
+            ctx = (forced_backend("xla") if degraded
+                   else contextlib.nullcontext())
+            with ctx:
+                return prog(*args, pages=self._pages_mirror())
+
+        degraded = self._degraded_left > 0
+        try:
+            if fault is not None:
+                # the chunk step returns no logits and never touches the
+                # allocator, so 'nan'/'alloc' draws degrade to 'raise'
+                raise FaultInjected(
+                    f"injected {fault!r} at chunk launch {self._launch_no - 1}")
+            cache = run(degraded)
+        except (FaultInjected, RuntimeError):
+            self.metrics.on_fault(fault if fault is not None else "error")
+            self._degraded_left = self.degrade_steps
+            try:
+                cache = run(True)   # retry once, bitwise-exact XLA arm
+            except (FaultInjected, RuntimeError):
+                raise _ReplayNeeded("chunk launch failed twice")
+        if self._degraded_left > 0:
+            self._degraded_left -= 1
+            self.metrics.on_degraded_step()
         t_now = self._now()
         self.metrics.on_step(
             int(live.sum()), sched.queue_depth, t_now, kind="prefill",
@@ -550,6 +919,10 @@ class GenerationEngine:
 
         while sched.has_work():
             now = self._now()
+            if self._lifecycle_pass(now, live, pos, tokens):
+                ctrl_dirty = True
+                if not sched.has_work():
+                    break
             while True:
                 # paged: admit one at a time so the allocator-aware gate
                 # sees each admission's block reservation before judging
@@ -581,8 +954,13 @@ class GenerationEngine:
                 self._idle_until(nxt)
                 continue
             if self._chunk_step is not None:
-                cache, launched = self._prefill_chunk_pass(
-                    cache, pos, live, tokens)
+                try:
+                    cache, launched = self._prefill_chunk_pass(
+                        cache, pos, live, tokens)
+                except _ReplayNeeded:
+                    self._replay_live_lanes(self._now(), live, pos, tokens)
+                    ctrl_dirty = True
+                    continue
                 if launched and not any(
                     live[i] and pos[i] >= len(sched.slot(i).request.prompt) - 1
                     for i in range(B)
@@ -602,6 +980,26 @@ class GenerationEngine:
                     ctrl_dirty = True
                     if not live.any():
                         continue
+            # once-per-launch fault draw. An 'alloc' drill mutates the
+            # live set through the standing preemption machinery, so it
+            # runs *before* the ctrl refresh below; 'raise'/'nan' ride
+            # into the launch helper.
+            fault = (self.faults.draw(self._launch_no)
+                     if self.faults is not None else None)
+            self._launch_no += 1
+            if fault == "alloc":
+                if paged and live.any():
+                    self.metrics.on_fault("alloc")
+                    victim = max(
+                        (j for j in range(B) if live[j]),
+                        key=lambda j: sched.slot(j).seq)
+                    self._preempt(victim, self._now(), live, pos, tokens)
+                    ctrl_dirty = True
+                    fault = None
+                    if not live.any():
+                        continue
+                else:
+                    fault = "raise"  # contiguous: no allocator to exhaust
             if ctrl_dirty:
                 ctrl = tuple(jnp.asarray(a)
                              for a in (live, temp, topk, topp))
@@ -611,24 +1009,24 @@ class GenerationEngine:
                 greedy_only = not (temp[live] > 0.0).any()
                 ctrl_dirty = False
 
-            d_live, d_temp, d_topk, d_topp = ctrl
             # trailing step args shared by both step variants: page-table
             # mirror (paged) and recurrent lane-reset mask (ssm/hybrid)
             extra = dict(pages=self._pages_mirror())
             if self._needs_reset:
                 extra["reset"] = jnp.asarray(reset.copy())
-            if greedy_only:                        # greedy fast path: no
-                toks, cache = self._step_greedy(   # sampler, no PRNG work
-                    self.params, cache, jnp.asarray(tokens),
-                    jnp.asarray(pos), d_live, **extra,
-                )
-            else:
+            sub = None
+            if not greedy_only:   # greedy fast path: no sampler, no PRNG
+                # one split per iteration, shared by every retry of this
+                # launch — a degraded retry redraws identical samples
                 self._key, sub = jax.random.split(self._key)
-                toks, cache = self._step(
-                    self.params, cache, jnp.asarray(tokens),
-                    jnp.asarray(pos), d_live, d_temp, d_topk, d_topp, sub,
-                    **extra,
-                )
+            try:
+                toks, cache = self._decode_launch(
+                    cache, tokens, pos, ctrl, greedy_only, sub, extra,
+                    live, fault)
+            except _ReplayNeeded:
+                self._replay_live_lanes(self._now(), live, pos, tokens)
+                ctrl_dirty = True
+                continue
             reset[:] = False    # consumed by this launch
             nxt_tok = np.asarray(toks)
             t_now = self._now()
@@ -714,12 +1112,14 @@ class GenerationEngine:
                         or (r.eos_id is not None and tok == r.eos_id)
                     ):
                         done[i] = True
+                        r.status = "ok"
                         self.metrics.on_finish(r.rid, t_now, len(r.generated))
                         self.completed[r.rid] = r
             if n_prompt:
                 self.metrics.on_prompt_tokens(n_prompt)
         for i, r in enumerate(wave):                # max_len cutoff
             if not done[i]:
+                r.status = "ok"
                 self.metrics.on_finish(r.rid, self._now(), len(r.generated))
                 self.completed[r.rid] = r
 
@@ -737,6 +1137,44 @@ class GenerationEngine:
         return self.completed
 
     # ------------------------------------------------------------------
+    def check_shutdown_invariants(self) -> None:
+        """Post-``run()`` leak check (tests and benches call this after
+        every run, fault storms included). Asserts that:
+
+          * the scheduler is fully drained — no occupied slots, no
+            queued requests;
+          * the paged block pool (if any) has every block back on the
+            free list, no block both owned and free, and page tables
+            consistent (``KVBlockPool.check_invariants``);
+          * every submitted rid is in ``completed`` exactly once, each
+            with a typed terminal status.
+
+        Raises AssertionError on the first violated invariant.
+        """
+        sched = self._sched
+        assert sched.occupancy == 0, (
+            f"{sched.occupancy} slot(s) still occupied after run()")
+        assert sched.queue_depth == 0, (
+            f"{sched.queue_depth} request(s) still queued after run()")
+        if self._pool is not None:
+            self._pool.check_invariants()
+            assert self._pool.used_blocks == 0, (
+                f"{self._pool.used_blocks} KV block(s) not reclaimed "
+                f"after run()")
+        submitted = set(self.metrics.requests)
+        finished = set(self.completed)
+        assert submitted == finished, (
+            f"submitted/completed rid mismatch: "
+            f"missing={sorted(submitted - finished)} "
+            f"extra={sorted(finished - submitted)}")
+        from repro.serving.scheduler import STATUSES
+        for r in self.completed.values():
+            assert r.status in STATUSES, (
+                f"request {r.rid} finished without a typed status "
+                f"({r.status!r})")
+        assert not self._cancel_pending, (
+            f"cancellations never resolved: {sorted(self._cancel_pending)}")
+
     def run(self) -> Dict[int, Request]:
         if self.mode == "continuous":
             return self._run_continuous()

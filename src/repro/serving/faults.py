@@ -1,0 +1,148 @@
+"""Deterministic fault injection for the serving engine.
+
+The serving fault-tolerance layer (serving/engine.py) survives three
+failure shapes: a step launch that *raises* (compiler/runtime error,
+device loss), a launch that returns *NaN/inf logits* (a flipped bit in
+a v2 gap stream reassigns an outlier index across quantization groups —
+the uniquely dangerous ICQ failure mode, which poisons output silently
+unless checked), and an *allocator* that reports exhaustion early. The
+``FaultInjector`` here manufactures all three on demand so every
+recovery path is exercised in CI instead of being discovered in
+production.
+
+Faults are **seeded and deterministic**: a run with the same plan (or
+the same seed + rate) injects the same faults at the same launches, so
+the fault-storm benchmark can assert that the *surviving* greedy output
+matches a no-fault run token for token.
+
+Two knobs, combinable:
+
+  * ``plan`` — explicit ``(launch_index, kind)`` entries; each fires
+    exactly once when the engine's global launch counter (decode and
+    prefill-chunk launches share it) reaches that index. Env form
+    ``ICQ_FAULT_PLAN="3:nan,6:raise,9:alloc"``.
+  * ``rate`` + ``seed`` — every launch draws Bernoulli(rate) from a
+    ``numpy`` generator seeded with ``seed`` and picks uniformly among
+    ``kinds``. Env form ``ICQ_FAULT_RATE=0.05`` / ``ICQ_FAULT_SEED=7``.
+
+Kinds:
+
+  * ``'raise'`` — the launch raises ``FaultInjected`` before running.
+  * ``'nan'``   — the launch runs, but its logits are reported
+    non-finite for every live lane (the engine discards the result and
+    retries, exactly as for genuinely corrupted logits). On launches
+    with no logits to poison (prefill chunk), the engine downgrades
+    this to ``'raise'``.
+  * ``'alloc'`` — the paged-KV allocator reports exhaustion: the
+    engine preempts the youngest live lane through the standing
+    preempt-and-requeue machinery. Downgraded to ``'raise'`` when the
+    engine runs the contiguous layout (no allocator to exhaust).
+
+``fired`` records every injected ``(launch_index, kind)`` so tests and
+benchmarks can assert the storm actually happened.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Fault", "FaultInjected", "FaultInjector", "parse_fault_plan"]
+
+KINDS = ("raise", "nan", "alloc")
+
+
+class FaultInjected(RuntimeError):
+    """Raised by the engine in place of a step launch the injector failed."""
+
+
+Fault = Tuple[int, str]   # (launch_index, kind)
+
+
+def parse_fault_plan(text: str) -> Tuple[Fault, ...]:
+    """``"3:nan,6:raise"`` -> ((3, 'nan'), (6, 'raise')).
+
+    Whitespace is ignored; duplicate launch indices are an error (one
+    launch cannot fail two ways).
+    """
+    plan: List[Fault] = []
+    seen = set()
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            step_s, kind = part.split(":")
+            step = int(step_s)
+        except ValueError:
+            raise ValueError(
+                f"fault plan entry {part!r} is not '<launch_index>:<kind>'")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise ValueError(
+                f"fault plan entry {part!r}: kind must be one of {KINDS}")
+        if step < 0:
+            raise ValueError(
+                f"fault plan entry {part!r}: launch index must be >= 0")
+        if step in seen:
+            raise ValueError(
+                f"fault plan has two entries for launch {step}")
+        seen.add(step)
+        plan.append((step, kind))
+    return tuple(plan)
+
+
+class FaultInjector:
+    """Seeded, deterministic launch-fault source (see module doc)."""
+
+    def __init__(self, plan: Sequence[Fault] = (), *, seed: int = 0,
+                 rate: float = 0.0, kinds: Sequence[str] = ("raise", "nan")):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        for _, kind in plan:
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}; one of {KINDS}")
+        for kind in kinds:
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}; one of {KINDS}")
+        self._plan: Dict[int, str] = {int(s): k for s, k in plan}
+        self._rate = float(rate)
+        self._kinds = tuple(kinds)
+        self._rng = np.random.default_rng(seed)
+        self.fired: List[Fault] = []
+
+    @classmethod
+    def from_env(cls) -> Optional["FaultInjector"]:
+        """Build from ``ICQ_FAULT_PLAN`` / ``ICQ_FAULT_RATE`` /
+        ``ICQ_FAULT_SEED``; None when no fault knob is set (the default —
+        the engine then skips the injector entirely)."""
+        plan_s = os.environ.get("ICQ_FAULT_PLAN", "")
+        rate_s = os.environ.get("ICQ_FAULT_RATE", "")
+        if not plan_s and not rate_s:
+            return None
+        seed = int(os.environ.get("ICQ_FAULT_SEED", "0") or "0")
+        rate = float(rate_s) if rate_s else 0.0
+        return cls(parse_fault_plan(plan_s), seed=seed, rate=rate)
+
+    def draw(self, launch_index: int) -> Optional[str]:
+        """Fault kind to inject at this launch, or None.
+
+        Plan entries are one-shot: a consumed entry never fires again
+        (the degraded retry of a failed launch re-runs *clean*, which is
+        what lets recovery converge). The rate path draws once per call,
+        so a fixed seed yields the same fault sequence for the same
+        sequence of launches.
+        """
+        kind = self._plan.pop(launch_index, None)
+        if kind is None and self._rate > 0.0:
+            if self._rng.random() < self._rate:
+                kind = self._kinds[int(self._rng.integers(len(self._kinds)))]
+        if kind is not None:
+            self.fired.append((launch_index, kind))
+        return kind
+
+    @property
+    def pending(self) -> int:
+        """Plan entries that have not fired yet."""
+        return len(self._plan)

@@ -5,21 +5,29 @@ own clock (wall time by default, a virtual clock in simulation) so the
 numbers stay meaningful either way:
 
   * per request: queue wait (arrival -> admit), TTFT (arrival -> first
-    *generated* token, i.e. prompt walk included), decode tokens/s, and
-    how many times the request was preempted and requeued;
+    *generated* token, i.e. prompt walk included), decode tokens/s, the
+    terminal ``status`` (ok|timeout|expired|cancelled|rejected|failed),
+    and how many times the request was preempted and requeued;
   * per engine run: aggregate generated tokens/s over the active window,
     mean slot occupancy and queue depth sampled once per step, the
-    prefill-vs-decode token split — prompt tokens consumed by the
-    S-token prefill chunk program vs tokens that went through the
-    1-token decode program (teacher-forced prompt walk + generation) —
-    and the paged-KV footprint: device cache bytes, pool geometry,
-    preemption count and blocks-in-use sampled once per step (mean
-    utilization + peak).
+    prefill-vs-decode token split, the paged-KV footprint (cache bytes,
+    pool geometry, preemptions, blocks-in-use), and the
+    **fault-tolerance ledger**: timeouts / cancellations / expired /
+    sheds / failed terminal counts, injected-or-detected fault count by
+    kind, degraded-mode steps (launches retried or pinned to the
+    bitwise-exact XLA arm) and replay events (lanes preempted and
+    requeued by the recovery path);
+  * a **step-time watchdog** (``StepTimeWatchdog``): per-iteration wall
+    time fed through the EWMA logic of ``runtime/straggler.py``,
+    exposing p50/p95 step time and a ``stalled`` flag whenever an
+    iteration exceeds ``threshold x`` the EWMA of its predecessors.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
+
+from repro.runtime.straggler import StragglerMonitor
 
 
 @dataclasses.dataclass
@@ -32,6 +40,7 @@ class RequestMetrics:
     finish_time: Optional[float] = None
     n_generated: int = 0
     n_preempted: int = 0    # times this request was preempted + requeued
+    status: Optional[str] = None   # terminal status (scheduler.STATUSES)
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -64,10 +73,63 @@ def _percentile(xs: List[float], q: float) -> float:
     return ys[i]
 
 
+class StepTimeWatchdog:
+    """EWMA step-time monitor for one engine run.
+
+    Reuses the smoothing from ``runtime.straggler.StragglerMonitor``
+    (one 'host' = this engine): each recorded iteration time updates the
+    EWMA, and an iteration is flagged **stalled** when it exceeds
+    ``threshold x`` the EWMA of the iterations before it (after
+    ``warmup`` samples — the first steps include compilation). A
+    virtual-clock run records dt = 0 everywhere and never flags.
+    """
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 3.0,
+                 warmup: int = 3):
+        self._mon = StragglerMonitor(1, alpha=alpha, threshold=threshold,
+                                     warmup=warmup)
+        self.threshold = threshold
+        self.warmup = warmup
+        self.samples: List[float] = []
+        self.stalled = False          # the most recent iteration stalled
+        self.stalled_steps = 0        # iterations flagged over the run
+
+    def record(self, dt: float) -> bool:
+        """Feed one iteration wall time; returns the stalled flag."""
+        prev = self._mon.ewma(0)
+        self.stalled = bool(
+            self._mon.count(0) >= self.warmup
+            and prev is not None and prev > 0.0
+            and dt > self.threshold * prev
+        )
+        if self.stalled:
+            self.stalled_steps += 1
+        self._mon.record(0, dt)
+        self.samples.append(dt)
+        return self.stalled
+
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._mon.ewma(0)
+
+    def p(self, q: float) -> float:
+        return _percentile(self.samples, q)
+
+
+#: terminal-status -> collector counter attribute
+_STATUS_COUNTERS = {
+    "timeout": "timeouts",
+    "expired": "expired",
+    "cancelled": "cancellations",
+    "rejected": "sheds",
+    "failed": "failed",
+}
+
+
 class MetricsCollector:
     """Event sink for one engine run."""
 
-    def __init__(self):
+    def __init__(self, watchdog: Optional[StepTimeWatchdog] = None):
         self.requests: Dict[int, RequestMetrics] = {}
         self.occupancy_samples: List[int] = []
         self.queue_depth_samples: List[int] = []
@@ -84,6 +146,16 @@ class MetricsCollector:
         self.cache_bytes: Optional[int] = None       # device KV cache bytes
         self.kv_blocks: Optional[int] = None         # pool size (blocks)
         self.kv_block_size: Optional[int] = None     # rows per block
+        # fault-tolerance ledger
+        self.timeouts: int = 0               # running lanes past deadline_s
+        self.expired: int = 0                # queued requests past their wait
+        self.cancellations: int = 0          # cancel(rid) taking effect
+        self.sheds: int = 0                  # bounded-queue rejections
+        self.failed: int = 0                 # recovery gave up on the request
+        self.faults: Dict[str, int] = {}     # injected/detected, by kind
+        self.degraded_steps: int = 0         # launches on the XLA fallback arm
+        self.replays: int = 0                # whole-batch replay events
+        self.watchdog = watchdog if watchdog is not None else StepTimeWatchdog()
 
     # -- events ---------------------------------------------------------
     def on_submit(self, rid: int, arrival_time: float, prompt_len: int):
@@ -96,15 +168,22 @@ class MetricsCollector:
     def on_first_token(self, rid: int, t: float):
         self.requests[rid].first_token_time = t
 
-    def on_finish(self, rid: int, t: float, n_generated: int):
+    def on_finish(self, rid: int, t: float, n_generated: int,
+                  status: str = "ok"):
         r = self.requests[rid]
         r.finish_time = t
         r.n_generated = n_generated
+        r.status = status
+        counter = _STATUS_COUNTERS.get(status)
+        if counter is not None:
+            setattr(self, counter, getattr(self, counter) + 1)
 
     def on_step(self, occupancy: int, queue_depth: int, t: float,
                 kind: str = "decode", blocks_in_use: Optional[int] = None):
         if self.start_time is None:
             self.start_time = t
+        elif self.end_time is not None:
+            self.watchdog.record(max(0.0, t - self.end_time))
         self.end_time = t
         self.occupancy_samples.append(occupancy)
         self.queue_depth_samples.append(queue_depth)
@@ -116,9 +195,22 @@ class MetricsCollector:
             self.decode_steps += 1
 
     def on_preempt(self, rid: int, t: float):
-        """Lane preempted (pool exhausted) and its request requeued."""
+        """Lane preempted (pool exhausted / replay) + request requeued."""
         self.preemptions += 1
         self.requests[rid].n_preempted += 1
+
+    def on_fault(self, kind: str):
+        """A launch fault was injected or detected (kind: 'raise' | 'nan'
+        | 'alloc' | 'error')."""
+        self.faults[kind] = self.faults.get(kind, 0) + 1
+
+    def on_degraded_step(self):
+        """One launch executed on the degraded (bitwise-exact XLA) arm."""
+        self.degraded_steps += 1
+
+    def on_replay(self):
+        """Recovery preempted the live lanes and requeued them for replay."""
+        self.replays += 1
 
     def set_kv_stats(self, cache_bytes: int,
                      kv_blocks: Optional[int] = None,
@@ -138,19 +230,29 @@ class MetricsCollector:
             self.prompt_decode_tokens += n
 
     # -- report ---------------------------------------------------------
+    def status_counts(self) -> Dict[str, int]:
+        """Terminal-status histogram over all finished requests."""
+        out: Dict[str, int] = {}
+        for r in self.requests.values():
+            if r.status is not None:
+                out[r.status] = out.get(r.status, 0) + 1
+        return out
+
     def summary(self) -> Dict[str, float]:
         done = [r for r in self.requests.values() if r.finish_time is not None]
+        served = [r for r in done if r.status in (None, "ok", "timeout")]
         total_tokens = sum(r.n_generated for r in done)
         wall = (
             (self.end_time - self.start_time)
             if self.start_time is not None and self.end_time is not None
             else 0.0
         )
-        ttfts = [r.ttft for r in done if r.ttft is not None]
-        waits = [r.queue_wait for r in done if r.queue_wait is not None]
+        ttfts = [r.ttft for r in served if r.ttft is not None]
+        waits = [r.queue_wait for r in served if r.queue_wait is not None]
         occ = self.occupancy_samples
         qd = self.queue_depth_samples
         bu = self.blocks_in_use_samples
+        wd = self.watchdog
         return dict(
             requests=float(len(self.requests)),
             completed=float(len(done)),
@@ -181,7 +283,22 @@ class MetricsCollector:
             mean_block_utilization=(
                 (sum(bu) / len(bu)) / self.kv_blocks
                 if bu and self.kv_blocks else float("nan")),
+            # fault-tolerance ledger
+            timeouts=float(self.timeouts),
+            expired=float(self.expired),
+            cancellations=float(self.cancellations),
+            sheds=float(self.sheds),
+            failed=float(self.failed),
+            faults=float(sum(self.faults.values())),
+            degraded_steps=float(self.degraded_steps),
+            replays=float(self.replays),
+            # step-time watchdog
+            step_time_p50=wd.p(0.50),
+            step_time_p95=wd.p(0.95),
+            step_time_ewma=(wd.ewma if wd.ewma is not None else float("nan")),
+            stalled_steps=float(wd.stalled_steps),
+            stalled=float(wd.stalled),
         )
 
 
-__all__ = ["RequestMetrics", "MetricsCollector"]
+__all__ = ["RequestMetrics", "MetricsCollector", "StepTimeWatchdog"]

@@ -29,6 +29,19 @@ import numpy as np
 from repro.serving.sampling import SamplingParams
 
 
+#: Terminal request statuses. Every request handed back by the engine
+#: carries exactly one of these in ``Request.status``:
+#:   ok        — finished normally (EOS / token budget / cache cap)
+#:   timeout   — a *running* lane crossed its ``deadline_s``
+#:   expired   — a *queued* request crossed ``max_queue_wait_s`` (or its
+#:               deadline) before ever being admitted
+#:   cancelled — ``GenerationEngine.cancel(rid)`` took effect
+#:   rejected  — shed by the bounded submit queue (``max_queue``)
+#:   failed    — terminated by the fault-recovery path (e.g. a sampled
+#:               lane that cannot be replayed, or replay retries ran out)
+STATUSES = ("ok", "timeout", "expired", "cancelled", "rejected", "failed")
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.
@@ -37,6 +50,14 @@ class Request:
     was built with another default). ``arrival_time`` is seconds on the
     engine clock (0.0 = already arrived); the wave engine ignores it.
     ``on_token(rid, token)`` streams tokens as they are emitted.
+
+    ``deadline_s`` is an end-to-end deadline in seconds *from
+    arrival_time* on the engine clock: a running lane that crosses it
+    finishes with status ``'timeout'`` (partial output kept); a queued
+    request that crosses it expires. ``max_queue_wait_s`` bounds queue
+    wait alone — a request still queued that long after arrival
+    finishes with status ``'expired'``. ``status`` is None while the
+    request is pending and one of ``STATUSES`` once terminal.
     """
 
     rid: int
@@ -46,7 +67,10 @@ class Request:
     sampling: Optional[SamplingParams] = None
     arrival_time: float = 0.0
     on_token: Optional[Callable[[int, int], None]] = None
+    deadline_s: Optional[float] = None
+    max_queue_wait_s: Optional[float] = None
     generated: List[int] = dataclasses.field(default_factory=list)
+    status: Optional[str] = None       # terminal status (see STATUSES)
 
 
 @dataclasses.dataclass
@@ -81,6 +105,28 @@ class SlotScheduler:
         as capacity allows. The caller has already folded any generated
         tokens into the prompt (preempt-and-recompute)."""
         self._queue.appendleft(req)
+
+    def drop_queued(self, pred: Callable[[Request], bool]) -> List[Request]:
+        """Remove (and return) every queued request matching ``pred``,
+        preserving the FIFO order of the survivors. The lifecycle pass
+        uses this for queue-wait expiry, deadline expiry and queued
+        cancellation — requests that must leave the queue *without*
+        ever occupying a slot."""
+        dropped: List[Request] = []
+        kept: Deque[Request] = deque()
+        for req in self._queue:
+            if pred(req):
+                dropped.append(req)
+            else:
+                kept.append(req)
+        self._queue = kept
+        return dropped
+
+    def shed_oldest(self) -> Optional[Request]:
+        """Pop the queue head (the request that has waited longest) —
+        the ``shed-oldest`` backpressure policy's victim. None when the
+        queue is empty."""
+        return self._queue.popleft() if self._queue else None
 
     @property
     def queue_depth(self) -> int:
@@ -154,4 +200,4 @@ class SlotScheduler:
         return {i: s for i, s in enumerate(self._slots) if s is not None}
 
 
-__all__ = ["Request", "Slot", "SlotScheduler"]
+__all__ = ["Request", "STATUSES", "Slot", "SlotScheduler"]

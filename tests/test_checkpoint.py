@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 
 
 def _tree(seed):
@@ -47,8 +47,54 @@ def test_no_partial_checkpoint_visible(tmp_path):
 
 def test_restore_missing_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
-    with pytest.raises(FileNotFoundError):
+    with pytest.raises(FileNotFoundError):    # CheckpointError subclasses it
         mgr.restore(dict(x=jnp.zeros(1)))
+
+
+def test_save_writes_terminal_complete_marker(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    d = mgr.save(5, _tree(5))
+    assert os.path.exists(os.path.join(d, "MANIFEST-complete"))
+
+
+def test_partial_save_skipped_and_refused(tmp_path):
+    """A step dir without the terminal marker (torn copy / interrupted
+    save) must never be selected by latest_step() nor loaded."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, _tree(2))
+    # simulate a torn copy of a newer step: leaf files but no marker
+    torn = os.path.join(tmp_path, "step_00000009")
+    os.makedirs(torn)
+    np.save(os.path.join(torn, "0.npy"), np.zeros(3))
+    assert mgr.latest_step() == 2                 # partial never selected
+    with pytest.raises(CheckpointError, match="partial"):
+        mgr.restore(dict(x=jnp.zeros(1)), step=9)
+    out = mgr.restore(jax.tree.map(jnp.zeros_like, _tree(0)))
+    assert int(out["step"]) == 2                  # falls back to complete
+
+
+def test_restore_names_missing_step_and_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(4)
+    d = mgr.save(4, t)
+    with pytest.raises(CheckpointError, match="no directory"):
+        mgr.restore(jax.tree.map(jnp.zeros_like, t), step=8)
+    os.remove(os.path.join(d, "1.npy"))           # lost one leaf file
+    with pytest.raises(CheckpointError, match="1.npy"):
+        mgr.restore(jax.tree.map(jnp.zeros_like, t))
+
+
+def test_partial_dir_does_not_consume_retention(tmp_path):
+    """Retention must count complete saves only — and never delete a
+    markerless dir (it may be the subject of an investigation)."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    torn = os.path.join(tmp_path, "step_00000001")
+    os.makedirs(torn)
+    for s in (2, 3, 4):
+        mgr.save(s, _tree(s))
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert "step_00000001" in kept                # untouched
+    assert len(kept) == 3                         # 2 complete + 1 partial
 
 
 def test_elastic_restore_with_sharding_fn(tmp_path):

@@ -1,0 +1,437 @@
+"""Serving fault-tolerance layer: deadlines, cancellation, backpressure,
+fault injection + degrade-to-XLA recovery, replay caps, weight-integrity
+checksums, step-time watchdog, and post-run shutdown invariants."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.configs import get_config, smoke_variant
+from repro.core.stats import heavy_tailed_weights
+from repro.kernels import backend, ops
+from repro.models import init_model
+from repro.serving import GenerationEngine, Request, SamplingParams
+from repro.serving.faults import (
+    FaultInjected,
+    FaultInjector,
+    parse_fault_plan,
+)
+from repro.serving.metrics import StepTimeWatchdog
+from repro.serving.scheduler import STATUSES
+
+
+def _setup(arch="llama3.2-1b"):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, length=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _run(params, cfg, reqs, **kw):
+    eng = GenerationEngine(params, cfg, batch_size=kw.pop("batch_size", 2),
+                           max_len=kw.pop("max_len", 32), mode="continuous",
+                           **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# injector unit behavior
+# ---------------------------------------------------------------------------
+
+def test_parse_fault_plan():
+    assert parse_fault_plan("3:nan, 6:raise") == ((3, "nan"), (6, "raise"))
+    assert parse_fault_plan("") == ()
+    with pytest.raises(ValueError, match="kind"):
+        parse_fault_plan("2:explode")
+    with pytest.raises(ValueError, match="two entries"):
+        parse_fault_plan("2:nan,2:raise")
+
+
+def test_injector_plan_is_one_shot_and_rate_deterministic():
+    inj = FaultInjector(((2, "nan"),))
+    assert [inj.draw(i) for i in range(4)] == [None, None, "nan", None]
+    assert inj.draw(2) is None          # consumed: never fires again
+    assert inj.fired == [(2, "nan")]
+    a = FaultInjector(seed=7, rate=0.5)
+    b = FaultInjector(seed=7, rate=0.5)
+    assert [a.draw(i) for i in range(20)] == [b.draw(i) for i in range(20)]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: typed statuses, deadlines, cancellation
+# ---------------------------------------------------------------------------
+
+def test_all_statuses_ok_on_clean_run():
+    cfg, params = _setup()
+    reqs = [Request(i, p, max_new_tokens=3)
+            for i, p in enumerate(_prompts(cfg, 3))]
+    eng, done = _run(params, cfg, reqs)
+    assert all(r.status == "ok" for r in done.values())
+    assert eng.metrics.status_counts() == {"ok": 3}
+    s = eng.metrics.summary()
+    assert s["timeouts"] == s["cancellations"] == s["sheds"] == 0
+    assert s["faults"] == s["degraded_steps"] == s["replays"] == 0
+
+
+def test_wave_mode_statuses_ok():
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16, mode="wave")
+    for i, p in enumerate(_prompts(cfg, 3)):
+        eng.submit(Request(i, p, max_new_tokens=2))
+    done = eng.run()
+    assert all(r.status == "ok" for r in done.values())
+
+
+def test_deadline_timeout_keeps_partial_output():
+    cfg, params = _setup()
+    clock = [0.0]
+
+    def tick(rid, tok):       # each generated token costs 1s of clock
+        clock[0] += 1.0
+
+    [p] = _prompts(cfg, 1)
+    req = Request(0, p, max_new_tokens=20, deadline_s=float(len(p) + 3),
+                  on_token=tick)
+    eng, done = _run(params, cfg, [req], batch_size=1,
+                     clock=lambda: clock[0])
+    assert done[0].status == "timeout"
+    assert 0 < len(done[0].generated) < 20      # partial output kept
+    assert eng.metrics.timeouts == 1
+    assert eng.metrics.requests[0].status == "timeout"
+
+
+def test_zero_queue_wait_expires_deterministically():
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, 2)
+    reqs = [Request(0, p1, max_new_tokens=3),
+            Request(1, p2, max_new_tokens=3, max_queue_wait_s=0.0)]
+    eng, done = _run(params, cfg, reqs, batch_size=1,
+                     clock=lambda: 0.0)
+    assert done[0].status == "ok"
+    assert done[1].status == "expired"
+    assert done[1].generated == []
+    assert eng.metrics.expired == 1
+
+
+def test_cancel_queued_and_live():
+    cfg, params = _setup()
+    p = _prompts(cfg, 3)
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=32,
+                           mode="continuous")
+    seen = []
+
+    def maybe_cancel(rid, tok):
+        seen.append((rid, tok))
+        if rid == 0 and len([x for x in seen if x[0] == 0]) == 2:
+            assert eng.cancel(0) is True         # live lane, mid-decode
+    eng.submit(Request(0, p[0], max_new_tokens=10, on_token=maybe_cancel))
+    eng.submit(Request(1, p[1], max_new_tokens=3))
+    eng.submit(Request(2, p[2], max_new_tokens=3))
+    assert eng.cancel(2) is True                 # still queued
+    with pytest.raises(KeyError):
+        eng.cancel(99)
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    assert done[0].status == "cancelled"
+    assert 2 <= len(done[0].generated) < 10      # partial output kept
+    assert done[2].status == "cancelled" and done[2].generated == []
+    assert done[1].status == "ok"
+    assert eng.metrics.cancellations == 2
+    assert eng.cancel(1) is False                # already finished
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_rejects_new_requests():
+    cfg, params = _setup()
+    p = _prompts(cfg, 4)
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=32,
+                           mode="continuous", max_queue=2)
+    accepted = [eng.submit(Request(i, p[i], max_new_tokens=2))
+                for i in range(4)]
+    assert accepted == [True, True, False, False]
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    assert done[0].status == done[1].status == "ok"
+    assert done[2].status == done[3].status == "rejected"
+    assert done[2].generated == []
+    assert eng.metrics.sheds == 2
+
+
+def test_shed_oldest_drops_longest_queued():
+    cfg, params = _setup()
+    p = _prompts(cfg, 3)
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=32,
+                           mode="continuous", max_queue=2,
+                           shed_policy="shed-oldest")
+    assert eng.submit(Request(0, p[0], max_new_tokens=2)) is True
+    assert eng.submit(Request(1, p[1], max_new_tokens=2)) is True
+    assert eng.submit(Request(2, p[2], max_new_tokens=2)) is True  # kept
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    assert done[0].status == "rejected"          # the oldest was shed
+    assert done[1].status == done[2].status == "ok"
+
+
+def test_engine_rejects_bad_fault_tolerance_config():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="shed_policy"):
+        GenerationEngine(params, cfg, 1, 16, shed_policy="drop-newest")
+    with pytest.raises(ValueError, match="degrade_steps"):
+        GenerationEngine(params, cfg, 1, 16, degrade_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# fault injection + degrade-to-XLA recovery
+# ---------------------------------------------------------------------------
+
+def _greedy_tokens(params, cfg, reqs_fn, **kw):
+    eng, done = _run(params, cfg, reqs_fn(), **kw)
+    return eng, {rid: r.generated for rid, r in done.items()}
+
+
+@pytest.mark.parametrize("kind", ["nan", "raise"])
+def test_injected_fault_recovers_token_identically(kind):
+    """A faulted launch retries on the bitwise-exact XLA arm: greedy
+    output must match the no-fault run token for token, with the
+    recovery visible in the metrics ledger."""
+    cfg, params = _setup()
+
+    def reqs():
+        return [Request(i, p, max_new_tokens=6)
+                for i, p in enumerate(_prompts(cfg, 2))]
+
+    _, want = _greedy_tokens(params, cfg, reqs)
+    inj = FaultInjector(((2, kind),))
+    eng, got = _greedy_tokens(params, cfg, reqs, faults=inj)
+    assert got == want
+    assert inj.fired == [(2, kind)]
+    assert eng.metrics.faults.get(kind) == 1
+    assert eng.metrics.degraded_steps >= 1
+    assert all(r.status == "ok" for r in eng.completed.values())
+
+
+def test_degraded_mode_sticky_then_clears():
+    cfg, params = _setup()
+
+    def reqs():
+        return [Request(0, _prompts(cfg, 1, length=4)[0],
+                        max_new_tokens=12)]
+
+    _, want = _greedy_tokens(params, cfg, reqs)
+    inj = FaultInjector(((1, "raise"),))
+    eng, got = _greedy_tokens(params, cfg, reqs, faults=inj,
+                              degrade_steps=3)
+    assert got == want
+    # the retry plus the next clean launches, capped by stickiness
+    assert eng.metrics.degraded_steps == 3
+
+
+def test_alloc_fault_preempts_and_replays_paged():
+    cfg, params = _setup()
+
+    def reqs():
+        return [Request(i, p, max_new_tokens=6)
+                for i, p in enumerate(_prompts(cfg, 2, length=4))]
+
+    base_kw = dict(kv_layout="paged", kv_block_size=4)
+    _, want = _greedy_tokens(params, cfg, reqs, **base_kw)
+    inj = FaultInjector(((4, "alloc"),))
+    eng, got = _greedy_tokens(params, cfg, reqs, faults=inj, **base_kw)
+    assert got == want                       # greedy replay is identical
+    assert eng.metrics.faults.get("alloc") == 1
+    assert eng.metrics.preemptions >= 1
+
+
+def test_alloc_fault_downgrades_to_raise_on_contiguous():
+    cfg, params = _setup()
+
+    def reqs():
+        return [Request(0, _prompts(cfg, 1)[0], max_new_tokens=5)]
+
+    _, want = _greedy_tokens(params, cfg, reqs)
+    inj = FaultInjector(((1, "alloc"),))
+    eng, got = _greedy_tokens(params, cfg, reqs, faults=inj)
+    assert got == want
+    assert eng.metrics.faults.get("raise") == 1   # no allocator to exhaust
+
+
+def test_chunk_launch_fault_recovers():
+    cfg, params = _setup()
+
+    def reqs():
+        return [Request(i, p, max_new_tokens=4)
+                for i, p in enumerate(_prompts(cfg, 2, length=9))]
+
+    kw = dict(prefill_chunk=4)
+    _, want = _greedy_tokens(params, cfg, reqs, **kw)
+    inj = FaultInjector(((0, "raise"),))    # launch 0 is a chunk launch
+    eng, got = _greedy_tokens(params, cfg, reqs, faults=inj, **kw)
+    assert got == want
+    assert eng.metrics.degraded_steps >= 1
+
+
+def test_sampled_fault_recovery_reuses_subkey():
+    """A recovered sampled launch must draw the same tokens the failed
+    one would have: the per-iteration PRNG subkey is shared by retries."""
+    cfg, params = _setup()
+    hot = SamplingParams(temperature=1.2)
+
+    def reqs():
+        return [Request(0, _prompts(cfg, 1)[0], max_new_tokens=8,
+                        sampling=hot)]
+
+    _, want = _greedy_tokens(params, cfg, reqs, seed=5)
+    inj = FaultInjector(((3, "nan"),))
+    eng, got = _greedy_tokens(params, cfg, reqs, seed=5, faults=inj)
+    assert got == want
+    assert eng.metrics.degraded_steps >= 1
+
+
+def test_persistent_failure_fails_requests_with_replay_cap():
+    """When every launch fails on both arms (a genuinely poisoned model),
+    the engine must not loop: requests replay up to the cap, then
+    force-finish as 'failed', and the run terminates cleanly."""
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=1, max_len=16,
+                           mode="continuous")
+
+    def boom(*a, **k):
+        raise RuntimeError("synthetic persistent launch failure")
+    eng._step_greedy = boom
+    eng._step_greedy_xla = boom
+    eng.submit(Request(0, _prompts(cfg, 1)[0], max_new_tokens=4))
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    assert done[0].status == "failed"
+    assert eng.metrics.replays >= 1
+    assert eng.metrics.failed == 1
+
+
+def test_sampled_preemption_victim_force_fails():
+    """A temperature>0 lane cannot be replayed reproducibly: preemption
+    force-finishes it as 'failed' instead of silently diverging."""
+    cfg, params = _setup()
+    p = _prompts(cfg, 2, length=4)
+    inj = FaultInjector(((4, "alloc"),))
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", kv_layout="paged",
+                           kv_block_size=4, faults=inj)
+    eng.submit(Request(0, p[0], max_new_tokens=8))
+    eng.submit(Request(1, p[1], max_new_tokens=8,
+                       sampling=SamplingParams(temperature=1.0)))
+    done = eng.run()
+    eng.check_shutdown_invariants()
+    # the youngest live lane (rid 1, admitted second) was the victim
+    assert done[1].status == "failed"
+    assert done[0].status == "ok"
+    assert eng.metrics.failed == 1
+
+
+def test_fault_env_knobs(monkeypatch):
+    monkeypatch.delenv("ICQ_FAULT_PLAN", raising=False)
+    monkeypatch.delenv("ICQ_FAULT_RATE", raising=False)
+    assert FaultInjector.from_env() is None
+    monkeypatch.setenv("ICQ_FAULT_PLAN", "5:nan")
+    inj = FaultInjector.from_env()
+    assert inj is not None and inj.pending == 1
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, 1, 16)
+    assert eng.faults is not None and eng.faults.pending == 1
+    monkeypatch.setenv("ICQ_MAX_QUEUE", "3")
+    monkeypatch.setenv("ICQ_SHED_POLICY", "shed-oldest")
+    monkeypatch.setenv("ICQ_DEGRADE_STEPS", "5")
+    eng2 = GenerationEngine(params, cfg, 1, 16)
+    assert (eng2.max_queue, eng2.shed_policy, eng2.degrade_steps) == \
+        (3, "shed-oldest", 5)
+
+
+# ---------------------------------------------------------------------------
+# step-time watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_stall_after_warmup():
+    wd = StepTimeWatchdog(threshold=3.0, warmup=3)
+    for _ in range(5):
+        assert wd.record(0.1) is False
+    assert wd.record(1.0) is True          # 10x the EWMA: stalled
+    assert wd.stalled and wd.stalled_steps == 1
+    assert wd.record(0.1) is False         # recovers
+    assert wd.p(0.50) == pytest.approx(0.1)
+
+
+def test_watchdog_never_flags_virtual_clock_or_warmup():
+    wd = StepTimeWatchdog(warmup=3)
+    assert wd.record(5.0) is False         # first samples: warming up
+    assert wd.record(0.0) is False
+    vd = StepTimeWatchdog()
+    for _ in range(10):
+        assert vd.record(0.0) is False     # virtual clock: dt == 0 always
+    assert vd.stalled_steps == 0
+
+
+def test_engine_run_feeds_watchdog():
+    cfg, params = _setup()
+    reqs = [Request(0, _prompts(cfg, 1)[0], max_new_tokens=4)]
+    eng, _ = _run(params, cfg, reqs, batch_size=1)
+    s = eng.metrics.summary()
+    assert s["step_time_p50"] >= 0.0
+    assert np.isfinite(s["step_time_ewma"])
+
+
+# ---------------------------------------------------------------------------
+# weight integrity (v2 sidecar crc32)
+# ---------------------------------------------------------------------------
+
+def _packed(R=40, C=256, n_bits=3, seed=2):
+    W = heavy_tailed_weights(R, C, seed=seed)
+    return core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+
+
+def test_v2_runtime_dict_carries_and_verifies_crc():
+    rt = ops.to_runtime(_packed(), fmt="v2")
+    assert set(rt["crc"]) == {"syms", "offs", "dbase"}
+    ops.verify_runtime_integrity(rt)                      # clean: no raise
+    bad = dict(rt)
+    syms = np.asarray(jax.device_get(rt["syms"])).copy()
+    syms.flat[0] ^= 1                                     # one flipped bit
+    bad["syms"] = jnp.asarray(syms)
+    with pytest.raises(ops.WeightIntegrityError, match="syms"):
+        ops.verify_runtime_integrity(bad)
+    with pytest.raises(ops.WeightIntegrityError):
+        backend.prepare(bad, fmt="v2")      # load boundary refuses it
+
+
+def test_prepared_verify_integrity_detects_mutation():
+    prep = backend.prepare(_packed(), fmt="v2")
+    assert prep.crc is not None
+    prep.verify_integrity()                               # clean: no raise
+    offs = np.asarray(jax.device_get(prep.offs)).copy()
+    offs.flat[3] ^= 1
+    tampered = dataclasses.replace(prep, offs=jnp.asarray(offs))
+    with pytest.raises(backend.WeightIntegrityError, match="offs"):
+        tampered.verify_integrity()
+
+
+def test_v1_and_crcless_layouts_are_exempt():
+    pk = _packed()
+    rt1 = ops.to_runtime(pk, fmt="v1")
+    assert "crc" not in rt1
+    ops.verify_runtime_integrity(rt1)                     # no-op for v1
+    prep1 = backend.prepare(pk, fmt="v1")
+    assert prep1.crc is None
+    prep1.verify_integrity()                              # no-op
