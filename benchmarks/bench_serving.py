@@ -25,7 +25,12 @@ capacity. It asserts greedy parity (preempt-and-requeue recomputes
 identical streams), a strictly smaller cache footprint, sustained lane
 occupancy, and that pool pressure actually exercised preemption —
 reporting cache bytes, block utilization, preemption count and tokens/s
-for both layouts.
+for both layouts. The paged workload additionally replays with the
+fused mixed prefill/decode step disabled (``fused_step=False``, the
+split chunk+decode structure), asserting greedy parity fused-vs-split,
+strictly fewer device launches with fusion, and that the decode
+attention bytes-read estimate shows the paged arm streaming strictly
+fewer live-block bytes than the logical full-table span.
 
 A fourth **fault-storm trace** replays the skewed workload through the
 paged engine under a deterministic fault plan (NaN logits, a raised
@@ -388,6 +393,11 @@ def run() -> dict:
             ("paged", dict(kv_layout="paged",
                            kv_block_size=PAGED_BLOCK_SIZE,
                            kv_blocks=PAGED_BLOCKS)),
+            # split two-launch structure: the fused-step control
+            ("paged_split", dict(kv_layout="paged",
+                                 kv_block_size=PAGED_BLOCK_SIZE,
+                                 kv_blocks=PAGED_BLOCKS,
+                                 fused_step=False)),
         )
         for label, kw in runs:
             tokens[label], summary = _run_engine(
@@ -399,11 +409,35 @@ def run() -> dict:
                 for k, v in summary.items()
             }
         # identical greedy streams at a strictly smaller footprint is the
-        # whole claim — preemption replays must recompute exact tokens.
-        row["greedy_parity"] = tokens["paged"] == tokens["contiguous"]
+        # whole claim — preemption replays must recompute exact tokens,
+        # and folding mixed iterations into one fused launch must not
+        # change a single token either.
+        row["greedy_parity"] = (tokens["paged"] == tokens["contiguous"]
+                                == tokens["paged_split"])
         if not row["greedy_parity"]:
             raise AssertionError(
-                f"{tag}: paged vs contiguous greedy token streams diverge")
+                f"{tag}: paged / contiguous / split-step greedy token "
+                f"streams diverge")
+        # fused mixed iterations are ONE launch: strictly fewer device
+        # launches than the split chunk+decode structure for the same
+        # tokens
+        fused_l = row["paged"]["launches"]
+        split_l = row["paged_split"]["launches"]
+        row["launch_reduction"] = round(split_l / fused_l, 3)
+        if not (row["paged"]["fused_steps"] >= 1 and fused_l < split_l):
+            raise AssertionError(
+                f"{tag}: fused step did not reduce launches "
+                f"({fused_l} fused vs {split_l} split)")
+        # the paged decode attention streams only live blocks: its
+        # bytes-read estimate must sit strictly below the logical
+        # full-table span a contiguous gather would stream
+        attn_log = row["paged"]["attn_logical_bytes"]
+        attn_live = row["paged"]["attn_live_bytes"]
+        row["attn_bytes_ratio"] = round(attn_live / attn_log, 3)
+        if not 0 < attn_live < attn_log:
+            raise AssertionError(
+                f"{tag}: paged attention bytes-read estimate did not "
+                f"shrink (live {attn_live} vs logical {attn_log})")
         c_bytes = row["contiguous"]["cache_bytes"]
         p_bytes = row["paged"]["cache_bytes"]
         row["cache_bytes_ratio"] = round(p_bytes / c_bytes, 3)
@@ -436,6 +470,8 @@ def run() -> dict:
             f"occupancy={occ_p}vs{occ_c};"
             f"preemptions={int(row['paged']['preemptions'])};"
             f"block_util={row['paged']['mean_block_utilization']};"
+            f"attn_bytes={int(attn_live)}vs{int(attn_log)};"
+            f"launches={int(fused_l)}vs{int(split_l)};"
             f"parity={row['greedy_parity']}",
         )
 

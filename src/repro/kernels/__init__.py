@@ -3,6 +3,9 @@
   icq_dequant.py  — tile dequantization (one-hot dot_general codebook
                     lookup; `dequant_padded` hot-path core)
   icq_matmul.py   — fused dequantize+matmul (`matmul_padded` core)
+  paged_attention.py — S=1 decode attention over the paged KV block
+                    pool (in-kernel page-table walk, online softmax;
+                    streams only live blocks through VMEM)
   kmeans_assign.py— weighted-Lloyd accumulation (calibration hot loop)
   ref.py          — pure-jnp oracles (ground truth in tests)
   ops.py          — jit'd public wrappers + runtime-format conversion

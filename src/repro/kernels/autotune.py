@@ -65,30 +65,38 @@ def cache_path() -> str:
     )
 
 
-def _key_suffix(fmt: str, onehot: Optional[str]) -> str:
-    """Key qualifiers: runtime formats and one-hot dtypes tune
-    independently (v1/f32 keep the legacy un-suffixed spellings so
-    existing cache files stay valid). The one-hot dtype must be part of
-    the key because VMEM admission depends on it — a block winner
-    admitted under the half-width bf16 one-hot may bust the budget when
-    replayed at f32."""
+def _key_suffix(fmt: str, onehot: Optional[str],
+                accum: Optional[str] = "f32") -> str:
+    """Key qualifiers: runtime formats, one-hot dtypes and accumulator
+    dtypes tune independently (v1/f32 keep the legacy un-suffixed
+    spellings so existing cache files stay valid). The one-hot and
+    accumulator dtypes must be part of the key because VMEM admission
+    depends on them — a block winner admitted under a half-width bf16
+    temporary may bust the budget when replayed at f32."""
     if onehot is None:
         from repro.kernels.platform import default_onehot_dtype
 
         onehot = default_onehot_dtype()
+    if accum is None:
+        from repro.kernels.platform import default_accum_dtype
+
+        accum = default_accum_dtype()
     sfx = "" if fmt == "v1" else f"_{fmt}"
     if onehot != "f32":
         sfx += f"_oh-{onehot}"
+    if accum != "f32":
+        sfx += f"_acc-{accum}"
     return sfx
 
 
 def matmul_key(M: int, d_out: int, d_in: int, n_bits: int,
                backend: str, interpret: bool, fmt: str = "v1",
-               onehot: Optional[str] = None) -> str:
-    """Cache key (see _key_suffix for the fmt/onehot qualifiers)."""
+               onehot: Optional[str] = None,
+               accum: Optional[str] = None) -> str:
+    """Cache key (see _key_suffix for the fmt/onehot/accum qualifiers)."""
     mode = f"{backend}{'-int' if interpret else ''}"
     return (f"matmul/m{M}_o{d_out}_i{d_in}_n{n_bits}_{mode}"
-            f"{_key_suffix(fmt, onehot)}")
+            f"{_key_suffix(fmt, onehot, accum)}")
 
 
 def dequant_key(d_out: int, d_in: int, n_bits: int,
@@ -351,6 +359,104 @@ def autotune_dequant(
         best, best_us = (br, bc), None
     record(key, best)
     return dict(blocks=best, us=best_us, cached=False)
+
+
+def paged_attn_key(G: int, d: int, dv: int, bs: int, n_pt: int, *,
+                   d2: int = 0, itemsize: int = 4,
+                   backend: str = "pallas",
+                   interpret: bool = False) -> str:
+    """Cache key for the paged-attention pages-per-step sweep. Keyed on
+    per-program geometry (head group G, head dims, KV block size, page
+    table length, pool itemsize) — batch and kv-head count only scale
+    the grid, not the per-step working set."""
+    mode = f"{backend}{'-int' if interpret else ''}"
+    return (f"paged_attn/g{G}_d{d}_v{dv}_r{d2}_bs{bs}_pt{n_pt}"
+            f"_e{itemsize}_{mode}")
+
+
+def paged_attn_pages_per_step(*, G: int, d: int, dv: int, bs: int,
+                              n_pt: int, d2: int = 0,
+                              itemsize: int = 4) -> int:
+    """Trace-time pages-per-grid-step pick for the paged-attention
+    kernel: the cached sweep winner if one exists, else the largest
+    candidate fitting the VMEM budget (no timing — what
+    ``models/layers.py`` consults per dispatch, mirroring
+    ``backend.arm_blocks``)."""
+    from repro.kernels.paged_attention import fallback_pages_per_step
+    from repro.kernels.platform import default_interpret
+
+    hit = lookup(paged_attn_key(G, d, dv, bs, n_pt, d2=d2,
+                                itemsize=itemsize,
+                                interpret=default_interpret()))
+    if hit:
+        return int(hit[0])
+    return fallback_pages_per_step(G=G, d=d, dv=dv, bs=bs, n_pt=n_pt,
+                                   d2=d2, itemsize=itemsize)
+
+
+def autotune_paged_attn(
+    B: int, Hkv: int, G: int, d: int, dv: int, bs: int, n_pt: int,
+    *,
+    d2: int = 0,
+    interpret: Optional[bool] = None,
+    candidates: Optional[Sequence[int]] = None,
+    iters: int = 3,
+) -> Dict[str, object]:
+    """Sweep the paged-attention pages-per-grid-step knob on synthetic
+    full-occupancy pools; cache and return the winner.
+
+    Candidates whose per-step VMEM bill exceeds the budget are skipped
+    before reaching the compiler; P=1 always fits as the floor.
+    Returns {"pages_per_step": P, "us": median_us, "cached": bool}.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import backend as _backend
+    from repro.kernels.paged_attention import (
+        PAGES_PER_STEP_CANDIDATES, attn_vmem_bytes, paged_attention,
+    )
+    from repro.kernels.platform import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    key = paged_attn_key(G, d, dv, bs, n_pt, d2=d2, interpret=interpret)
+    hit = lookup(key)
+    if hit is not None:
+        return dict(pages_per_step=int(hit[0]), us=None, cached=True)
+
+    rng = np.random.default_rng(0)
+    nb = B * n_pt + 1
+    k_pool = jnp.asarray(
+        rng.standard_normal((nb, bs, Hkv, d)), jnp.float32)
+    v_pool = jnp.asarray(
+        rng.standard_normal((nb, bs, Hkv, dv)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, d)), jnp.float32)
+    q2 = k2_pool = None
+    if d2:
+        q2 = jnp.asarray(rng.standard_normal((B, Hkv, G, d2)), jnp.float32)
+        k2_pool = jnp.asarray(
+            rng.standard_normal((nb, bs, Hkv, d2)), jnp.float32)
+    # full lanes (worst case): every page mapped, shuffled placement
+    pages = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[:B * n_pt].reshape(B, n_pt)
+        .astype(np.int32))
+    kv_len = jnp.full((B,), n_pt * bs, jnp.int32)
+
+    best, best_us = None, float("inf")
+    budget = _backend.vmem_budget_bytes()
+    for P in (candidates or PAGES_PER_STEP_CANDIDATES):
+        P = min(int(P), n_pt)
+        if P != 1 and attn_vmem_bytes(P, G=G, d=d, dv=dv, bs=bs,
+                                      d2=d2) > budget:
+            continue
+        fn = lambda P=P: paged_attention(
+            q, k_pool, v_pool, pages, kv_len, q2=q2, k2_pool=k2_pool,
+            pages_per_step=P, interpret=interpret)
+        us = _time_once(fn, iters)
+        if us < best_us:
+            best, best_us = P, us
+    record(key, [best])
+    return dict(pages_per_step=best, us=best_us, cached=False)
 
 
 def autotune_arms(

@@ -126,6 +126,7 @@ from repro.kernels.icq_matmul import (
 )
 from repro.kernels.platform import (
     decode_m_threshold,
+    default_accum_dtype,
     default_backend,
     default_interpret,
     default_onehot_dtype,
@@ -323,7 +324,8 @@ def vmem_budget_bytes() -> int:
 def vmem_bytes_estimate(block_m: int, block_n: int, block_k: int, *,
                         n_bits: int, C: int, fmt: str = "v1",
                         s_cols: int = 0,
-                        onehot: Optional[str] = None) -> int:
+                        onehot: Optional[str] = None,
+                        accum: Optional[str] = None) -> int:
     """Rough VMEM bytes for one fused-matmul block (dequant is a subset).
 
     Dominated by the (BN, BK, C) one-hot codebook-select temporary —
@@ -334,8 +336,11 @@ def vmem_bytes_estimate(block_m: int, block_n: int, block_k: int, *,
     Deliberately coarse — used to reject/clamp block candidates before
     the compiler OOMs, not to bill exact bytes."""
     f32 = 4
+    if accum is None:
+        accum = default_accum_dtype()
     est = block_m * block_k * f32                      # x tile
-    est += 2 * block_m * block_n * f32                 # acc scratch + out
+    est += block_m * block_n * f32                     # out tile
+    est += block_m * block_n * (2 if accum == "bf16" else 4)  # acc scratch
     est += block_n * block_k * f32                     # dequantized W tile
     est += block_n * block_k * C * onehot_itemsize(onehot)  # one-hot temp
     est += block_n * (block_k // (32 // n_bits)) * 4   # packed codes
@@ -754,6 +759,7 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
     onehot = default_onehot_dtype()
 
     if path == "fused":
+        accum = default_accum_dtype()
         bm = min(abm, _round_up(M, 8))
         pm = _round_up(M, bm)
         x_p = jnp.pad(x2, ((0, pm - M), (0, pk - prep.d_in)))
@@ -763,12 +769,14 @@ def linear_apply(x: jnp.ndarray, prep: ICQPrepared) -> jnp.ndarray:
                 prep.codebooks,
                 n_bits=prep.n_bits, b=prep.b, block_m=bm,
                 block_n=abn, interpret=prep.interpret, onehot=onehot,
+                accum=accum,
             )[:M, : prep.d_out]
         else:
             y = matmul_padded(
                 x_p, prep.codes, prep.bitmap, prep.codebooks,
                 n_bits=prep.n_bits, block_m=bm, block_n=abn,
                 block_k=abk, interpret=prep.interpret, onehot=onehot,
+                accum=accum,
             )[:M, : prep.d_out]
     else:  # 'dequant': reconstruct once, ride the dense MXU matmul
         if prep.fmt == "v2":

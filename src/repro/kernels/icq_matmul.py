@@ -35,7 +35,22 @@ from repro.kernels.icq_dequant import (
     column_granularity,
     snap_block_k,
 )
-from repro.kernels.platform import default_interpret, default_onehot_dtype
+from repro.kernels.platform import (
+    default_accum_dtype,
+    default_interpret,
+    default_onehot_dtype,
+)
+
+
+def check_accum(accum: str) -> None:
+    if accum not in ("f32", "bf16"):
+        raise ValueError(f"accum must be 'f32' or 'bf16', got {accum!r}")
+
+
+def accum_scratch_dtype(accum: str):
+    """VMEM accumulator dtype for ``ICQ_ACCUM_DTYPE`` (f32 exact; bf16
+    halves the scratch and rounds partial sums per K step)."""
+    return jnp.float32 if accum == "f32" else jnp.bfloat16
 
 
 def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
@@ -52,17 +67,17 @@ def _matmul_kernel(x_ref, codes_ref, bitmap_ref, cb_ref, out_ref, acc_ref,
         x_ref[...].astype(jnp.float32), w,
         (((1,), (1,)), ((), ())),                          # x @ w.T
         preferred_element_type=jnp.float32,
-    )
+    ).astype(acc_ref.dtype)            # MXU still f32; bf16 rounds per step
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _flush():
-        out_ref[...] = acc_ref[...]
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret",
-                     "onehot"),
+                     "onehot", "accum"),
 )
 def matmul_padded(
     x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == pk % block_k == 0
@@ -76,9 +91,11 @@ def matmul_padded(
     block_k: int,
     interpret: bool,
     onehot: str = "f32",
+    accum: str = "f32",
 ) -> jnp.ndarray:
     """Core fused kernel over pre-blocked inputs -> (pm, pn) f32 (padded)."""
     check_onehot(onehot)
+    check_accum(accum)
     k = 32 // n_bits
     pm, pk = x.shape
     pn = codes.shape[0]
@@ -96,7 +113,8 @@ def matmul_padded(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_m, block_n),
+                                   accum_scratch_dtype(accum))],
         interpret=interpret,
     )(x, codes, bitmap, codebooks)
 
@@ -119,17 +137,17 @@ def _matmul_kernel_v2(x_ref, codes_ref, syms_ref, offs_ref, dbase_ref,
         x_ref[...].astype(jnp.float32), w,
         (((1,), (1,)), ((), ())),                              # x @ w.T
         preferred_element_type=jnp.float32,
-    )
+    ).astype(acc_ref.dtype)            # MXU still f32; bf16 rounds per step
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _flush():
-        out_ref[...] = acc_ref[...]
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "b", "block_m", "block_n", "interpret",
-                     "onehot"),
+                     "onehot", "accum"),
 )
 def matmul_padded_v2(
     x: jnp.ndarray,          # (pm, pk) f32, pm % block_m == 0
@@ -145,6 +163,7 @@ def matmul_padded_v2(
     block_n: int,
     interpret: bool,
     onehot: str = "f32",
+    accum: str = "f32",
 ) -> jnp.ndarray:
     """v2 fused core over pre-blocked inputs -> (pm, pn) f32 (padded).
 
@@ -153,6 +172,7 @@ def matmul_padded_v2(
     own tile of the gap stream in VMEM.
     """
     check_onehot(onehot)
+    check_accum(accum)
     k = 32 // n_bits
     pm, pk = x.shape
     pn = codes.shape[0]
@@ -175,7 +195,8 @@ def matmul_padded_v2(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_m, block_n),
+                                   accum_scratch_dtype(accum))],
         interpret=interpret,
     )(x, codes, syms, offs, dbase, codebooks)
 
@@ -196,12 +217,15 @@ def icq_matmul_v2(
     block_n: int = 128,
     interpret: Optional[bool] = None,
     onehot: Optional[str] = None,
+    accum: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly v2 wrapper -> (M, d_out) f32."""
     if interpret is None:
         interpret = default_interpret()
     if onehot is None:
         onehot = default_onehot_dtype()
+    if accum is None:
+        accum = default_accum_dtype()
     M = x.shape[0]
     d_out = codes.shape[0]
     k = 32 // n_bits
@@ -218,7 +242,7 @@ def icq_matmul_v2(
         _pad2(dbase, pn, dbase.shape[1]),
         _pad2(codebooks, pn, codebooks.shape[1]),
         n_bits=n_bits, b=b, block_m=bm, block_n=bn, interpret=interpret,
-        onehot=onehot,
+        onehot=onehot, accum=accum,
     )
     return out[:M, :d_out]
 
@@ -246,12 +270,15 @@ def icq_matmul(
     block_k: int = 512,
     interpret: Optional[bool] = None,
     onehot: Optional[str] = None,
+    accum: Optional[str] = None,
 ) -> jnp.ndarray:
     """Pad-on-the-fly wrapper -> (M, d_out) f32."""
     if interpret is None:
         interpret = default_interpret()
     if onehot is None:
         onehot = default_onehot_dtype()
+    if accum is None:
+        accum = default_accum_dtype()
     M = x.shape[0]
     d_out = codes.shape[0]
     k = 32 // n_bits
@@ -265,6 +292,6 @@ def icq_matmul(
     out = matmul_padded(
         x_p, codes_p, bitmap_p, cb_p,
         n_bits=n_bits, block_m=bm, block_n=bn, block_k=bk,
-        interpret=interpret, onehot=onehot,
+        interpret=interpret, onehot=onehot, accum=accum,
     )
     return out[:M, :d_out]

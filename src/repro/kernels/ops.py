@@ -162,7 +162,7 @@ def dequant(rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray
 
 def matmul(x, rt: Dict, interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
     if rt.get("fmt", "v1") == "v2":
-        _check_blocks(blocks, ("block_m", "block_n", "onehot"), "v2")
+        _check_blocks(blocks, ("block_m", "block_n", "onehot", "accum"), "v2")
         return icq_matmul_v2(
             x, rt["codes"], rt["syms"], rt["offs"], rt["dbase"],
             rt["codebooks"],

@@ -26,6 +26,16 @@ Central policy knob for every Pallas entry point in this package:
     autotuner can admit larger prefill blocks under ICQ_VMEM_BUDGET_MB;
     codebook levels round to bf16 — ~3 decimal digits).
     ``ICQ_ONEHOT_DTYPE=f32|bf16`` overrides.
+  * ``default_accum_dtype()`` — dtype of the fused matmul kernels'
+    VMEM accumulator scratch: 'f32' (default, exact) or 'bf16' (halves
+    the accumulator VMEM term; partial sums round to bf16 per K-step).
+    ``ICQ_ACCUM_DTYPE=f32|bf16`` overrides.
+  * ``default_paged_attn()`` — which arm serves paged-KV decode
+    attention: the Pallas paged-attention kernel ('pallas', default on
+    TPU — streams only live KV blocks through VMEM) or the XLA
+    gather-the-logical-view path ('xla', default elsewhere; also the
+    bitwise-exact fault-tolerance degrade target).
+    ``ICQ_PAGED_ATTN=pallas|xla`` overrides.
 """
 from __future__ import annotations
 
@@ -93,6 +103,30 @@ def default_onehot_dtype() -> str:
         raise ValueError(
             f"ICQ_ONEHOT_DTYPE must be 'f32' or 'bf16', got {env!r}")
     return env
+
+
+def default_accum_dtype() -> str:
+    """'f32' (exact) or 'bf16' (half-size matmul accumulator scratch)."""
+    env = os.environ.get("ICQ_ACCUM_DTYPE")
+    if not env:  # unset or set-but-empty
+        return "f32"
+    env = env.lower()
+    if env not in ("f32", "bf16"):
+        raise ValueError(
+            f"ICQ_ACCUM_DTYPE must be 'f32' or 'bf16', got {env!r}")
+    return env
+
+
+def default_paged_attn() -> str:
+    """'pallas' on TPU, 'xla' elsewhere; ICQ_PAGED_ATTN overrides."""
+    env = os.environ.get("ICQ_PAGED_ATTN")
+    if env:  # set-but-empty means unset
+        env = env.lower()
+        if env not in ("pallas", "xla"):
+            raise ValueError(
+                f"ICQ_PAGED_ATTN must be 'pallas' or 'xla', got {env!r}")
+        return env
+    return "pallas" if detected_platform() == "tpu" else "xla"
 
 
 def decode_m_threshold() -> int:

@@ -161,7 +161,8 @@ def main():
         kv_desc += (f": {engine.kv_blocks} blocks x "
                     f"{engine.kv_block_size} rows")
     print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
-          f"prefill_chunk={engine.prefill_chunk}, kv={kv_desc})")
+          f"prefill_chunk={engine.prefill_chunk}, "
+          f"fused_step={engine.fused_step}, kv={kv_desc})")
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -211,12 +212,19 @@ def main():
           f"ttft p50 {s['ttft_p50']:.3f}s, prompt split "
           f"{int(s['prefill_tokens'])} chunked / "
           f"{int(s['prompt_decode_tokens'])} walked)")
+    print(f"[serve] launches: {int(s['launches'])} "
+          f"({int(s['prefill_steps'])} chunk / "
+          f"{int(s['decode_steps'])} decode / "
+          f"{int(s['fused_steps'])} fused)")
     if engine.kv_layout == "paged":
         print(f"[serve] paged KV: cache {int(s['cache_bytes'])} bytes "
               f"({int(s['kv_blocks'])} x {int(s['kv_block_size'])} rows), "
               f"{int(s['preemptions'])} preemptions, block utilization "
               f"{s['mean_block_utilization']:.2f} mean / "
-              f"{int(s['peak_blocks_in_use'])} peak blocks")
+              f"{int(s['peak_blocks_in_use'])} peak blocks, "
+              f"decode attn bytes-read est "
+              f"{int(s['attn_live_bytes'])} live / "
+              f"{int(s['attn_logical_bytes'])} logical")
     counts = engine.metrics.status_counts()
     statuses = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
     print(f"[serve] statuses: {statuses or 'none'}")

@@ -211,6 +211,45 @@ def make_prefill_chunk_step(cfg):
     return prefill_chunk_step
 
 
+def make_fused_step(cfg):
+    """One launch for a mixed prefill+decode continuous-batching iteration.
+
+    ``(params, cache, tokens (B, S), start_pos (B,), seq_lens (B,),
+    pages) -> (logits (B, vocab), cache)``: each lane consumes its first
+    ``seq_lens[i]`` tokens of the (B, S) chunk — ``seq_lens[i] > 1`` for
+    lanes still admitting prompt, ``seq_lens[i] == 1`` for decoding
+    lanes whose next token sits in column 0, ``seq_lens[i] == 0`` for
+    idle lanes (fully write-masked). This folds what used to be two
+    device launches per mixed iteration (an S-token chunk pass plus a
+    1-token decode pass) into ONE program: the decode token rides the
+    chunk program's token axis, and the chunk matmuls keep their large
+    M = B*S dispatch arm.
+
+    Logits come back for every lane at its own last valid column
+    (``max(seq_lens - 1, 0)``) via ``lm_apply(logits_cols=...)``, so the
+    vocab projection bills B rows, not B*S. For a decode lane that is
+    exactly the new token's logits; for a prompt lane it is the logits
+    after its last admitted token — meaningful (and consumed by the
+    engine) only on the chunk that admits the final prompt token.
+    Lanes with ``seq_lens[i] == 0`` return garbage logits the engine
+    ignores. ``pages`` mirrors the paged-KV page table exactly as in
+    the chunk/decode steps (None for contiguous per-lane caches).
+    """
+
+    def fused_step(params, cache, tokens, start_pos, seq_lens, pages=None):
+        if pages is not None:
+            cache = sync_cache_pages(cache, pages)
+        cache = sync_cache_positions(cache, start_pos)
+        cols = jnp.maximum(seq_lens - 1, 0).astype(jnp.int32)
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, cache=cache, start_pos=start_pos,
+            seq_lens=seq_lens, logits_cols=cols,
+        )
+        return logits[:, 0], cache
+
+    return fused_step
+
+
 def make_decode_step(cfg):
     """One new token against an existing cache (the ``decode_*`` shapes).
 

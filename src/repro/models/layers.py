@@ -238,6 +238,35 @@ def _paged_gather(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     return out.reshape((B, n_pt * bs) + pool.shape[2:])
 
 
+def _paged_attn_arm(S: int, window: int, T: int) -> str:
+    """Which arm serves a paged-attention call: 'pallas' (the in-kernel
+    page-table walk, kernels/paged_attention.py) or 'xla' (gather the
+    logical view, the bitwise-authoritative fallback).
+
+    Trace-time decision, mirroring the matmul dispatch: the kernel only
+    serves S=1 decode without an active sliding window, and
+    ``backend.forced_backend('xla')`` — the fault-tolerance degrade
+    context — pins the XLA arm exactly as it does for the matmul
+    kernels. Otherwise ``ICQ_PAGED_ATTN`` picks (pallas on TPU, xla
+    elsewhere).
+    """
+    from repro.kernels import backend as _backend
+    from repro.kernels.platform import default_paged_attn
+    if S != 1 or (window and window < T):
+        return "xla"
+    if _backend._FORCED_BACKEND == "xla":
+        return "xla"
+    return default_paged_attn()
+
+
+def _paged_pages_per_step(*, G: int, d: int, dv: int, bs: int, n_pt: int,
+                          d2: int = 0, itemsize: int = 4) -> int:
+    """Autotune-cache-aware pages-per-grid-step pick (trace time)."""
+    from repro.kernels import autotune
+    return autotune.paged_attn_pages_per_step(
+        G=G, d=d, dv=dv, bs=bs, n_pt=n_pt, d2=d2, itemsize=itemsize)
+
+
 def gqa_apply(
     p: Params,
     x: jnp.ndarray,               # (B, S, d_model)
@@ -328,13 +357,32 @@ def gqa_apply(
         ck = _paged_scatter(cache["k"], pages, cols, k)
         cv = _paged_scatter(cache["v"], pages, cols, v)
         adv = S if seq_lens is None else seq_lens
-        pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-        k_valid = pos_k < (idx + adv)[:, None]
-        out = chunked_attention(
-            q, _paged_gather(ck, pages), _paged_gather(cv, pages),
-            positions, pos_k, k_valid,
-            causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk,
-        )
+        if _paged_attn_arm(S, cfg.sliding_window, T) == "pallas":
+            # stream only live blocks through VMEM; the kernel masks
+            # partial tails / unmapped pages in-kernel (same logical
+            # semantics as the gather arm below, parity-pinned in
+            # tests/test_paged_attention.py)
+            from repro.kernels.paged_attention import paged_attention
+            Hkv = cfg.n_kv_heads
+            G = cfg.n_heads // Hkv
+            bs = cache["k"].shape[1]
+            qk = (q[:, 0].astype(jnp.float32) * hd**-0.5
+                  ).reshape(B, Hkv, G, hd)
+            pps = _paged_pages_per_step(
+                G=G, d=hd, dv=hd, bs=bs, n_pt=pages.shape[1],
+                itemsize=ck.dtype.itemsize)
+            out = paged_attention(
+                qk, ck, cv, pages, idx + adv, pages_per_step=pps,
+            ).reshape(B, 1, cfg.n_heads, hd).astype(q.dtype)
+        else:
+            pos_k = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+            k_valid = pos_k < (idx + adv)[:, None]
+            out = chunked_attention(
+                q, _paged_gather(ck, pages), _paged_gather(cv, pages),
+                positions, pos_k, k_valid,
+                causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk,
+            )
         new_cache = dict(k=ck, v=cv, index=idx + adv, pages=pages)
     else:
         idx = cache["index"]  # int32 #tokens cached: scalar, or (B,) per-lane
@@ -508,8 +556,11 @@ def mla_apply(
         cols = _chunk_write_cols(idx, S, T, seq_lens)
         cc = _paged_scatter(cache["c_kv"], pages, cols, c_kv)
         cr = _paged_scatter(cache["k_rope"], pages, cols, k_rope[:, :, 0, :])
-        cc_log = _paged_gather(cc, pages)
-        cr_log = _paged_gather(cr, pages)
+        if _paged_attn_arm(S, 0, T) == "pallas":
+            cc_log = cr_log = None      # in-kernel page walk, no gather
+        else:
+            cc_log = _paged_gather(cc, pages)
+            cr_log = _paged_gather(cr, pages)
     elif idx.ndim:
         rows = jnp.arange(B, dtype=jnp.int32)[:, None]
         cols = _chunk_write_cols(idx, S, cache["c_kv"].shape[1], seq_lens)
@@ -527,20 +578,39 @@ def mla_apply(
             (0, idx, 0),
         )
         cc_log, cr_log = cc, cr
-    T = cc_log.shape[1]
+    if pages is None:
+        T = cc_log.shape[1]
     adv = S if seq_lens is None else seq_lens       # per-lane tokens added
     w_uk = as_dense(p["w_uk"]).reshape(r, H, nd)
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)           # absorbed q
-    pos_k = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-    k_valid = pos_k < ((idx + adv)[:, None] if idx.ndim else idx + adv)
-    # treat latent dims + rope dims as one concatenated "head dim"
-    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,S,H,r+rd)
-    k_cat = jnp.concatenate(
-        [cc_log, cr_log], axis=-1)[:, :, None, :]                # (B,T,1,r+rd)
-    ctx = chunked_attention(
-        q_cat, k_cat, cc_log[:, :, None, :], positions, pos_k, k_valid,
-        causal=True, chunk=cfg.attn_chunk, scale=scale,
-    )                                                            # (B,S,H,r)
+    if pages is not None and cc_log is None:
+        # Pallas paged-attention arm over the latent cache: the c_kv
+        # pool doubles as K (latent half) and V; the rope side-channel
+        # rides the kernel's q2/k2 score pair (Hkv=1, G=H).
+        from repro.kernels.paged_attention import paged_attention
+        nb_, bs_ = cc.shape[0], cc.shape[1]
+        qm = (q_lat[:, 0].astype(jnp.float32) * scale).reshape(B, 1, H, r)
+        q2 = (q_rope[:, 0].astype(jnp.float32) * scale).reshape(B, 1, H, rd)
+        pps = _paged_pages_per_step(
+            G=H, d=r, dv=r, bs=bs_, n_pt=pages.shape[1], d2=rd,
+            itemsize=cc.dtype.itemsize)
+        ctx = paged_attention(
+            qm, cc.reshape(nb_, bs_, 1, r), cc.reshape(nb_, bs_, 1, r),
+            pages, idx + adv,
+            q2=q2, k2_pool=cr.reshape(nb_, bs_, 1, rd), pages_per_step=pps,
+        ).reshape(B, 1, H, r).astype(q_lat.dtype)                # (B,1,H,r)
+    else:
+        pos_k = jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        k_valid = pos_k < ((idx + adv)[:, None] if idx.ndim else idx + adv)
+        # treat latent dims + rope dims as one concatenated "head dim"
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)        # (B,S,H,r+rd)
+        k_cat = jnp.concatenate(
+            [cc_log, cr_log], axis=-1)[:, :, None, :]            # (B,T,1,r+rd)
+        ctx = chunked_attention(
+            q_cat, k_cat, cc_log[:, :, None, :], positions, pos_k, k_valid,
+            causal=True, chunk=cfg.attn_chunk, scale=scale,
+        )                                                        # (B,S,H,r)
     w_uv = as_dense(p["w_uv"]).reshape(r, H, vd)
     out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
     new_cache = dict(c_kv=cc, k_rope=cr, index=idx + adv)

@@ -297,6 +297,7 @@ def lm_apply(
     prefix_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) stub frontend
     seq_lens: Optional[jnp.ndarray] = None,       # (B,) chunk validity
     compute_logits: bool = True,
+    logits_cols: Optional[jnp.ndarray] = None,    # (B,) per-lane logits column
     reset: Optional[jnp.ndarray] = None,          # (B,) SSM lane-reset mask
 ) -> Tuple[Optional[jnp.ndarray], Optional[Params], jnp.ndarray]:
     """Returns (logits (B, S, vocab), new_cache, aux_loss).
@@ -315,6 +316,11 @@ def lm_apply(
     ``compute_logits=False`` skips the final norm + lm_head — a prefill
     chunk step only needs the cache side effect, not (B, S, vocab)
     logits (returns None in the logits slot).
+    ``logits_cols`` (B,) gathers one hidden column per lane before the
+    norm + lm_head, so a fused mixed prefill/decode step bills the
+    vocab projection for B rows instead of B*S: returns (B, 1, vocab)
+    — lane i's logits are for chunk column ``logits_cols[i]`` (the
+    decode token, or a prompt lane's last admitted token).
     """
     x = p["embed"][tokens]
     if prefix_embeds is not None:
@@ -342,7 +348,13 @@ def lm_apply(
     if cache is not None:
         new_cache["stack"] = c
 
-    logits = _lm_head(p, cfg, x) if compute_logits else None
+    if not compute_logits:
+        logits = None
+    else:
+        if logits_cols is not None:
+            cols = jnp.broadcast_to(logits_cols, (B,)).astype(jnp.int32)
+            x = jnp.take_along_axis(x, cols[:, None, None], axis=1)  # (B,1,d)
+        logits = _lm_head(p, cfg, x)
     return logits, (new_cache if cache is not None else None), aux_total
 
 

@@ -34,7 +34,24 @@ M = B*S lands on the dequant+MXU arm while the 1-token walk's M = B
 rides the fused kernel, whose different K-reduction order can differ in
 the last ulp — the compiled-TPU validation pass (ROADMAP) owns
 re-checking greedy stability there. ``ICQ_PREFILL_CHUNK`` sets the
-default chunk. Sampling
+default chunk.
+
+On top of chunking, the **fused step** (``fused_step=True`` whenever
+chunking is active; ``ICQ_FUSED_STEP=0`` restores the split structure)
+folds the decode token into the chunk program's token axis: a mixed
+prefill+decode iteration — some lanes admitting bulk prompt, others
+generating — runs as ONE device launch
+(``launch/steps.make_fused_step``) instead of a chunk pass followed by
+a decode pass. Each lane consumes ``min(S, prompt remaining)`` tokens
+(including its final prompt token) or exactly its decode token, and
+sampling happens in the same launch from each lane's own last valid
+column. Once every live lane is a decode lane the engine falls back to
+the plain 1-token decode program, so pure-decode steady state is
+untouched. Greedy fused output is token-identical to the split
+structure (same same-arm caveat as chunking; CI pins it); sampled
+streams differ because the fused engine draws one PRNG subkey per
+iteration where the split engine draws none on chunk-only iterations.
+Sampling
 (serving/sampling.py) is fused into the decode step: greedy by
 default, per-request temperature / top-k / top-p overrides, PRNG key
 threaded from the engine seed.
@@ -141,14 +158,15 @@ import numpy as np
 
 from repro.kernels.backend import forced_backend
 from repro.launch.steps import make_cache, make_decode_step, \
-    make_prefill_chunk_step, prepare_serving_params
+    make_fused_step, make_prefill_chunk_step, prepare_serving_params
 from repro.serving.faults import FaultInjected, FaultInjector
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import Request, SlotScheduler
 
-__all__ = ["GenerationEngine", "Request", "make_serving_step"]
+__all__ = ["GenerationEngine", "Request", "make_serving_step",
+           "make_fused_serving_step"]
 
 
 class _BadLogits(RuntimeError):
@@ -208,6 +226,63 @@ def make_serving_step(cfg, sample: bool = True, check: bool = False):
         return jnp.where(live, toks, 0), cache
 
     return step if sample else greedy_step
+
+
+def make_fused_serving_step(cfg, sample: bool = True, check: bool = False):
+    """Fused mixed prefill/decode iteration as a single jit-able program.
+
+    Same contract family as ``make_serving_step``, but over an S-token
+    chunk: (params, cache, tokens (B, S), pos (B,), seq_lens (B,), live
+    (B,), [temperature, top_k, top_p, key,] pages) -> (next (B,), cache
+    [, bad (B,)]). Each lane consumes its first ``seq_lens[i]`` chunk
+    tokens (``> 1``: bulk prompt admission, ``== 1``: the decode token
+    in column 0, ``== 0``: idle, fully write-masked) and the returned
+    token is sampled from that lane's logits at its own last valid
+    column — so one launch replaces the chunk-pass + decode-pass pair
+    of a mixed continuous-batching iteration. The engine ignores the
+    sampled token for lanes still inside their prompt (their logits are
+    real but mid-prompt); ``sample=False`` / ``check=True`` mirror the
+    decode program's greedy fast path and NaN health probe.
+    """
+    fused = make_fused_step(cfg)
+
+    def step(params, cache, tokens, pos, lens, live, temperature, top_k,
+             top_p, key, pages=None):
+        logits, cache = fused(params, cache, tokens, pos, lens, pages=pages)
+        toks = sample_tokens(logits, key, temperature, top_k, top_p,
+                             live=live)
+        if check:
+            bad = live & ~jnp.isfinite(logits).all(axis=-1)
+            return toks, cache, bad
+        return toks, cache
+
+    def greedy_step(params, cache, tokens, pos, lens, live, pages=None):
+        logits, cache = fused(params, cache, tokens, pos, lens, pages=pages)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if check:
+            bad = live & ~jnp.isfinite(logits).all(axis=-1)
+            return jnp.where(live, toks, 0), cache, bad
+        return jnp.where(live, toks, 0), cache
+
+    return step if sample else greedy_step
+
+
+def default_fused_step() -> bool:
+    """Engine default for ``fused_step`` (ICQ_FUSED_STEP, default on):
+    whether a chunked-prefill continuous engine folds the decode token
+    into the chunk program and runs mixed prefill+decode iterations as
+    ONE launch. Only consulted when chunked prefill is active
+    (``prefill_chunk > 1`` on the continuous engine); off = the split
+    two-launch chunk + decode structure."""
+    env = os.environ.get("ICQ_FUSED_STEP")
+    if not env:  # unset or set-but-empty
+        return True
+    low = env.lower()
+    if low in ("1", "true", "yes", "on"):
+        return True
+    if low in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"ICQ_FUSED_STEP must be a boolean flag, got {env!r}")
 
 
 def default_prefill_chunk() -> int:
@@ -324,7 +399,8 @@ class GenerationEngine:
                  max_queue: Optional[int] = None,
                  shed_policy: Optional[str] = None,
                  faults: Optional[FaultInjector] = None,
-                 degrade_steps: Optional[int] = None):
+                 degrade_steps: Optional[int] = None,
+                 fused_step: Optional[bool] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
@@ -413,16 +489,37 @@ class GenerationEngine:
             make_serving_step(cfg, sample=False, check=True))
         # recurrent mixers need the lane-reset mask on every decode launch
         self._needs_reset = cfg.family in ("ssm", "hybrid")
+        # chunked prefill's device programs. With fused_step (the default
+        # whenever chunking is active) the chunk and decode programs of a
+        # mixed iteration collapse into ONE fused program — the decode
+        # token rides the chunk's token axis and sampling happens in the
+        # same launch; the split chunk program is then never built. With
+        # fused_step=False (ICQ_FUSED_STEP=0) the PR-4 two-launch
+        # structure is kept bit-for-bit. chunk=1 keeps the PR-3
+        # single-program engine: neither program is built.
+        chunking = self.prefill_chunk > 1 and self.mode == "continuous"
+        if fused_step is None:
+            fused_step = default_fused_step()
+        self.fused_step = bool(fused_step) and chunking
+        self._fused = self._fused_greedy = None
+        self._fused_xla = self._fused_greedy_xla = None
+        if self.fused_step:
+            self._fused = jax.jit(make_fused_serving_step(cfg, check=True))
+            self._fused_greedy = jax.jit(
+                make_fused_serving_step(cfg, sample=False, check=True))
+            # degraded twins (same pattern as the decode programs above)
+            self._fused_xla = jax.jit(
+                make_fused_serving_step(cfg, check=True))
+            self._fused_greedy_xla = jax.jit(
+                make_fused_serving_step(cfg, sample=False, check=True))
         # second persistent jitted program: S-token prompt-chunk admission
-        # (chunk=1 keeps the PR-3 single-program engine bit-for-bit — the
-        # chunk program is never built, let alone launched)
         self._chunk_step = (
             jax.jit(make_prefill_chunk_step(cfg))
-            if self.prefill_chunk > 1 and self.mode == "continuous" else None)
+            if chunking and not self.fused_step else None)
         self._chunk_step_xla = (
             jax.jit(make_prefill_chunk_step(cfg))
             if self._chunk_step is not None else None)
-        if self._chunk_step is not None:
+        if chunking:
             from repro.kernels import autotune
 
             # chunk matmuls carry M = batch * chunk tokens: give the
@@ -433,6 +530,7 @@ class GenerationEngine:
         self._pool: Optional[KVBlockPool] = None    # built per run (paged)
         self._pages_dev = None    # device mirror of the pool's page table
         self._pages_ver = -1
+        self._row_bytes: Optional[float] = None  # KV bytes per cache row
         self._folded: Dict[int, int] = {}   # rid -> generated tokens already
         #                                     folded into the prompt (preempt)
         self._key = jax.random.PRNGKey(seed)
@@ -878,6 +976,160 @@ class GenerationEngine:
                 tokens[i, 0] = int(st.request.prompt[pos[i]])
         return cache, True
 
+    def _fused_lens(self, live: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """Per-lane token counts for one fused iteration: ``min(S,
+        prompt remaining)`` for lanes still admitting prompt (INCLUDING
+        the final prompt token — the fused program samples right after
+        it, exactly like the decode step would), 1 for decoding lanes,
+        0 for idle lanes. Paged lanes clip bulk to what the pool can
+        back right now; ``_ensure_decode_blocks`` already guaranteed
+        every live lane at least one backed position, so a clipped lane
+        still consumes >= 1 token (never preempt for prefill)."""
+        B = self.batch_size
+        S = self.prefill_chunk
+        lens = np.zeros((B,), np.int32)
+        for i in range(B):
+            if not live[i]:
+                continue
+            r = self._sched.slot(i).request
+            lens[i] = max(1, min(S, len(r.prompt) - int(pos[i])))
+            if lens[i] > 1 and self._pool is not None:
+                backed = self._pool.grow(i, int(pos[i]) + int(lens[i]))
+                lens[i] = min(int(lens[i]), max(1, backed - int(pos[i])))
+        return lens
+
+    def _fused_pass(self, cache, pos: np.ndarray, live: np.ndarray,
+                    tokens: np.ndarray, lens: np.ndarray, ctrl,
+                    greedy_only, sub, fault):
+        """One fused mixed prefill+decode launch + its bookkeeping.
+
+        The single-launch counterpart of the chunk-pass + decode-pass
+        pair: every live lane consumes its ``lens[i]`` chunk tokens and
+        the lanes whose consumption reaches past their prompt (decoding
+        lanes, and prompt lanes admitting their final token) emit one
+        generated token, sampled inside the launch. Fault handling is
+        identical to ``_decode_launch``: retry once on the bitwise-exact
+        XLA arm with the same inputs (and PRNG subkey), then
+        ``_ReplayNeeded``. Returns (cache, ctrl_dirty).
+        """
+        B = self.batch_size
+        sched = self._sched
+        ctoks = np.zeros((B, self.prefill_chunk), np.int32)
+        n_prompt = 0
+        for i in range(B):
+            if not live[i]:
+                continue
+            r = sched.slot(i).request
+            if pos[i] < len(r.prompt):   # prompt lane: feed prompt slice
+                ctoks[i, : lens[i]] = r.prompt[pos[i]: pos[i] + lens[i]]
+                n_prompt += int(lens[i])
+            else:                        # decode lane: last emitted token
+                ctoks[i, 0] = tokens[i, 0]
+        d_live, d_temp, d_topk, d_topp = ctrl
+        # .copy(): argument transfers are async and pos mutates below
+        t_dev = jnp.asarray(ctoks)
+        p_dev = jnp.asarray(pos.copy())
+        l_dev = jnp.asarray(lens)
+
+        def run(degraded: bool):
+            if greedy_only:
+                prog = (self._fused_greedy_xla if degraded
+                        else self._fused_greedy)
+                args = (self.params, cache, t_dev, p_dev, l_dev, d_live)
+            else:
+                prog = self._fused_xla if degraded else self._fused
+                args = (self.params, cache, t_dev, p_dev, l_dev, d_live,
+                        d_temp, d_topk, d_topp, sub)
+            ctx = (forced_backend("xla") if degraded
+                   else contextlib.nullcontext())
+            with ctx:
+                toks, cache2, bad = prog(*args, pages=self._pages_mirror())
+            if bool((np.asarray(bad) & live).any()):
+                raise _BadLogits("non-finite logits on a live lane")
+            return toks, cache2
+
+        degraded = self._degraded_left > 0
+        try:
+            if fault == "raise":
+                raise FaultInjected(
+                    f"injected 'raise' at launch {self._launch_no - 1}")
+            out = run(degraded)
+            if fault == "nan":
+                raise _BadLogits(
+                    f"injected 'nan' at launch {self._launch_no - 1}")
+        except RuntimeError as e:   # FaultInjected / _BadLogits / XLA
+            if fault is not None:
+                self.metrics.on_fault(fault)
+            else:
+                self.metrics.on_fault(
+                    "nan" if isinstance(e, _BadLogits) else "error")
+            self._degraded_left = self.degrade_steps
+            try:
+                out = run(True)   # retry once, bitwise-exact XLA arm
+            except RuntimeError:
+                raise _ReplayNeeded("fused launch failed twice")
+        if self._degraded_left > 0:
+            self._degraded_left -= 1
+            self.metrics.on_degraded_step()
+        toks, cache = out
+        nxt_tok = np.asarray(toks)
+        t_now = self._now()
+        self.metrics.on_step(
+            int(live.sum()), sched.queue_depth, t_now, kind="fused",
+            blocks_in_use=(None if self._pool is None
+                           else self._pool.used_blocks))
+        self._note_attn_bytes(live, pos + lens)
+        if n_prompt:
+            self.metrics.on_prompt_tokens(n_prompt, kind="prefill")
+
+        dirty = False
+        for i in range(B):
+            if not live[i]:
+                continue
+            st = sched.slot(i)
+            r = st.request
+            pos[i] += int(lens[i])
+            st.pos = int(pos[i])
+            if pos[i] < len(r.prompt):   # still admitting bulk prompt;
+                # keep the next-token slot current in case the next
+                # iteration falls through to the plain decode program
+                tokens[i, 0] = int(r.prompt[pos[i]])
+                continue
+            tok = int(nxt_tok[i])
+            if not r.generated:
+                self.metrics.on_first_token(r.rid, t_now)
+            r.generated.append(tok)
+            if r.on_token is not None:
+                r.on_token(r.rid, tok)
+            tokens[i, 0] = tok
+            if (
+                len(r.generated) >= r.max_new_tokens
+                or (r.eos_id is not None and tok == r.eos_id)
+                or pos[i] >= self.max_len - 1   # cache cap
+            ):
+                self._finish(i, t_now, live, pos, tokens)
+                dirty = True
+        return cache, dirty
+
+    def _note_attn_bytes(self, live: np.ndarray,
+                         kv_lens: np.ndarray) -> None:
+        """Accumulate the paged decode-attention bytes-read estimate for
+        one launch. ``kv_lens[i]`` is lane i's KV length after the
+        launch; 'logical' bills the full page-table span for every live
+        lane (what a contiguous gather streams through HBM), 'live'
+        only the blocks actually mapped (what the paged Pallas kernel
+        streams through VMEM). No-op for contiguous caches."""
+        if self._pool is None or self._row_bytes is None:
+            return
+        bs = self.kv_block_size
+        logical = live_rows = 0
+        for i in range(self.batch_size):
+            if live[i]:
+                logical += self._n_pt * bs
+                live_rows += -(-int(kv_lens[i]) // bs) * bs
+        self.metrics.on_attn_bytes(int(logical * self._row_bytes),
+                                   int(live_rows * self._row_bytes))
+
     def _pages_mirror(self):
         """Device mirror of the pool's page table, refreshed only when the
         allocator mutated it (same pattern as the ctrl arrays)."""
@@ -901,11 +1153,16 @@ class GenerationEngine:
         cache = make_cache(
             self.params, self.cfg, B, self.max_len, per_lane=True,
             paged=(self.kv_blocks, self.kv_block_size) if paged else None)
+        cache_bytes = sum(int(x.size) * x.dtype.itemsize
+                          for x in jax.tree.leaves(cache))
         self.metrics.set_kv_stats(
-            sum(int(x.size) * x.dtype.itemsize
-                for x in jax.tree.leaves(cache)),
+            cache_bytes,
             kv_blocks=self.kv_blocks if paged else None,
             kv_block_size=self.kv_block_size if paged else None)
+        # per-row KV bytes for the attention bytes-read estimate (coarse:
+        # the small index/pages leaves amortize over the pool rows)
+        self._row_bytes = (cache_bytes / (self.kv_blocks * self.kv_block_size)
+                           if paged else None)
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         live = np.zeros((B,), bool)
@@ -1009,16 +1266,35 @@ class GenerationEngine:
                 greedy_only = not (temp[live] > 0.0).any()
                 ctrl_dirty = False
 
-            # trailing step args shared by both step variants: page-table
-            # mirror (paged) and recurrent lane-reset mask (ssm/hybrid)
-            extra = dict(pages=self._pages_mirror())
-            if self._needs_reset:
-                extra["reset"] = jnp.asarray(reset.copy())
             sub = None
             if not greedy_only:   # greedy fast path: no sampler, no PRNG
                 # one split per iteration, shared by every retry of this
                 # launch — a degraded retry redraws identical samples
                 self._key, sub = jax.random.split(self._key)
+            if self.fused_step:
+                lens = self._fused_lens(live, pos)
+                if (lens > 1).any():
+                    # at least one lane still has bulk prompt: this whole
+                    # mixed iteration is ONE fused launch (chunk admission
+                    # + the decode token + sampling in the same program)
+                    try:
+                        cache, dirty = self._fused_pass(
+                            cache, pos, live, tokens, lens, ctrl,
+                            greedy_only, sub, fault)
+                    except _ReplayNeeded:
+                        self._replay_live_lanes(
+                            self._now(), live, pos, tokens)
+                        ctrl_dirty = True
+                        continue
+                    ctrl_dirty |= dirty
+                    continue
+                # every live lane is one token from emitting: fall through
+                # to the plain decode program (identical S=1 math)
+            # trailing step args shared by both step variants: page-table
+            # mirror (paged) and recurrent lane-reset mask (ssm/hybrid)
+            extra = dict(pages=self._pages_mirror())
+            if self._needs_reset:
+                extra["reset"] = jnp.asarray(reset.copy())
             try:
                 toks, cache = self._decode_launch(
                     cache, tokens, pos, ctrl, greedy_only, sub, extra,
@@ -1034,6 +1310,7 @@ class GenerationEngine:
                 int(live.sum()), sched.queue_depth, t_now,
                 blocks_in_use=(None if self._pool is None
                                else self._pool.used_blocks))
+            self._note_attn_bytes(live, pos + 1)
 
             n_prompt = 0
             for i in range(B):

@@ -10,8 +10,11 @@ numbers stay meaningful either way:
     and how many times the request was preempted and requeued;
   * per engine run: aggregate generated tokens/s over the active window,
     mean slot occupancy and queue depth sampled once per step, the
-    prefill-vs-decode token split, the paged-KV footprint (cache bytes,
-    pool geometry, preemptions, blocks-in-use), and the
+    prefill-vs-decode token split (plus fused prefill+decode launches
+    and the total launch count), the paged-KV footprint (cache bytes,
+    pool geometry, preemptions, blocks-in-use), the decode-attention
+    bytes-read estimate (logical full-table span vs live mapped
+    blocks), and the
     **fault-tolerance ledger**: timeouts / cancellations / expired /
     sheds / failed terminal counts, injected-or-detected fault count by
     kind, degraded-mode steps (launches retried or pinned to the
@@ -138,8 +141,15 @@ class MetricsCollector:
         # prefill-vs-decode split (chunked prefill observability)
         self.prefill_steps: int = 0          # chunk-program launches
         self.decode_steps: int = 0           # decode-program launches
+        self.fused_steps: int = 0            # fused prefill+decode launches
         self.prefill_tokens: int = 0         # prompt tokens via chunk program
         self.prompt_decode_tokens: int = 0   # prompt tokens walked 1/step
+        # paged-attention bytes-read estimate, accumulated per launch:
+        # 'logical' bills the full page-table span every lane (what a
+        # contiguous gather streams), 'live' only the blocks actually
+        # mapped to each live lane (what the paged kernel streams)
+        self.attn_logical_bytes: int = 0
+        self.attn_live_bytes: int = 0
         # paged-KV observability (kv_layout='paged')
         self.preemptions: int = 0            # preempt-and-requeue events
         self.blocks_in_use_samples: List[int] = []   # sampled once per step
@@ -191,6 +201,8 @@ class MetricsCollector:
             self.blocks_in_use_samples.append(blocks_in_use)
         if kind == "prefill":
             self.prefill_steps += 1
+        elif kind == "fused":
+            self.fused_steps += 1
         else:
             self.decode_steps += 1
 
@@ -220,6 +232,16 @@ class MetricsCollector:
         self.cache_bytes = int(cache_bytes)
         self.kv_blocks = kv_blocks
         self.kv_block_size = kv_block_size
+
+    def on_attn_bytes(self, logical: int, live: int):
+        """One launch's decode-attention KV bytes-read estimate:
+        ``logical`` = full page-table span per live lane (the contiguous
+        gather's streaming cost), ``live`` = only the blocks each lane
+        actually maps (what the paged Pallas kernel streams through
+        VMEM). The gap between the two running totals is the bandwidth
+        the paged kernel saves."""
+        self.attn_logical_bytes += int(logical)
+        self.attn_live_bytes += int(live)
 
     def on_prompt_tokens(self, n: int, kind: str = "decode"):
         """Prompt tokens consumed this step: ``kind='prefill'`` via the
@@ -268,8 +290,13 @@ class MetricsCollector:
             queue_wait_mean=(sum(waits) / len(waits)) if waits else 0.0,
             prefill_steps=float(self.prefill_steps),
             decode_steps=float(self.decode_steps),
+            fused_steps=float(self.fused_steps),
+            launches=float(self.prefill_steps + self.decode_steps
+                           + self.fused_steps),
             prefill_tokens=float(self.prefill_tokens),
             prompt_decode_tokens=float(self.prompt_decode_tokens),
+            attn_logical_bytes=float(self.attn_logical_bytes),
+            attn_live_bytes=float(self.attn_live_bytes),
             preemptions=float(self.preemptions),
             cache_bytes=(float(self.cache_bytes)
                          if self.cache_bytes is not None else float("nan")),

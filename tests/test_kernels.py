@@ -321,3 +321,71 @@ def test_onehot_qualifies_autotune_keys_and_rejects_bad_values(monkeypatch):
         ops.dequant(rt, onehot="fp8")
     with pytest.raises(ValueError, match="onehot"):
         ops.matmul(jnp.zeros((2, 96), jnp.float32), rt, onehot="f16")
+
+
+# ---------------------------------------------------------------------------
+# bf16 accumulator option (ICQ_ACCUM_DTYPE)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["v1", "v2"])
+@pytest.mark.parametrize("n_bits", [2, 4])
+def test_accum_bf16_parity_tolerance_both_formats(fmt, n_bits):
+    """accum='bf16' halves the fused matmul's VMEM accumulator scratch;
+    partial sums round to bf16 at every K step, so the result must agree
+    with the f32 accumulator to bf16 mantissa tolerance — and the f32
+    accumulator path must stay bitwise what it was (the default)."""
+    R, C = 48, 512
+    W = heavy_tailed_weights(R, C, seed=n_bits * 7)
+    pk = core.quantize(jnp.asarray(W), n_bits, gamma=0.05)
+    rt = ops.to_runtime(pk, fmt=fmt, **(dict(tile=256) if fmt == "v2" else {}))
+
+    x = jnp.asarray(
+        np.random.default_rng(5).standard_normal((8, C)), jnp.float32)
+    mkw = dict(block_m=8, block_n=16)
+    if fmt == "v1":
+        mkw["block_k"] = 256
+    y32 = np.asarray(ops.matmul(x, rt, accum="f32", **mkw))
+    ydef = np.asarray(ops.matmul(x, rt, **mkw))
+    np.testing.assert_array_equal(ydef, y32)    # f32 is the default
+    ybf = np.asarray(ops.matmul(x, rt, accum="bf16", **mkw))
+    np.testing.assert_allclose(ybf, y32, rtol=2e-2, atol=2e-2)
+    assert not np.array_equal(ybf, y32)         # bf16 rounding is real
+
+
+def test_accum_env_default_vmem_estimate_and_keys(monkeypatch):
+    from repro.kernels import autotune
+    from repro.kernels.platform import default_accum_dtype
+
+    monkeypatch.delenv("ICQ_ACCUM_DTYPE", raising=False)
+    assert default_accum_dtype() == "f32"
+    monkeypatch.setenv("ICQ_ACCUM_DTYPE", "bf16")
+    assert default_accum_dtype() == "bf16"
+    monkeypatch.setenv("ICQ_ACCUM_DTYPE", "fp8")
+    with pytest.raises(ValueError):
+        default_accum_dtype()
+    monkeypatch.delenv("ICQ_ACCUM_DTYPE", raising=False)
+
+    # the bf16 accumulator shaves the acc-scratch VMEM term
+    e32 = backend.vmem_bytes_estimate(128, 128, 512, n_bits=3, C=16,
+                                      accum="f32")
+    ebf = backend.vmem_bytes_estimate(128, 128, 512, n_bits=3, C=16,
+                                      accum="bf16")
+    assert ebf == e32 - 128 * 128 * 2
+
+    # accumulator width is part of the autotune key (block winners tuned
+    # under bf16 must not be replayed by f32 runs); f32 keeps the
+    # un-suffixed spelling so existing cache files stay valid
+    k_f32 = autotune.matmul_key(1, 16, 96, 4, "pallas", True)
+    k_bf16 = autotune.matmul_key(1, 16, 96, 4, "pallas", True,
+                                 accum="bf16")
+    assert k_f32 != k_bf16 and k_bf16.endswith("_acc-bf16")
+    assert "acc-" not in k_f32
+    monkeypatch.setenv("ICQ_ACCUM_DTYPE", "bf16")
+    assert autotune.matmul_key(1, 16, 96, 4, "pallas", True) == k_bf16
+    monkeypatch.delenv("ICQ_ACCUM_DTYPE", raising=False)
+
+    W = heavy_tailed_weights(16, 96, seed=0)
+    pk = core.quantize(jnp.asarray(W), 4, gamma=0.05)
+    rt = ops.to_runtime(pk)
+    with pytest.raises(ValueError, match="accum"):
+        ops.matmul(jnp.zeros((2, 96), jnp.float32), rt, accum="f16")

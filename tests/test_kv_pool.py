@@ -377,3 +377,121 @@ def test_engine_env_selects_paged(monkeypatch):
     assert eng.kv_layout == "paged" and eng.kv_block_size == 4
     # default pool = contiguous capacity in blocks
     assert eng.kv_blocks == 2 * (16 // 4)
+
+
+# ---------------------------------------------------------------------------
+# _paged_gather clamp contract: unmapped -1 entries read block 0, and
+# nothing downstream may depend on what block 0 holds
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           nb=st.integers(1, 8),
+           bs=st.integers(1, 4),
+           B=st.integers(1, 3),
+           n_pt=st.integers(1, 5))
+    def test_property_paged_gather_clamps_to_block0(seed, nb, bs, B, n_pt):
+        """Any page table over any pool: mapped entries gather their
+        block bitwise, every unmapped (-1) entry gathers block 0 —
+        that placeholder garbage is what the validity mask / in-kernel
+        length mask must hide, so the clamp target is pinned here."""
+        from repro.models.layers import _paged_gather
+
+        rng = np.random.default_rng(seed)
+        pool = rng.standard_normal((nb, bs, 2, 3)).astype(np.float32)
+        pages = rng.integers(-1, nb, (B, n_pt)).astype(np.int32)
+        out = np.asarray(_paged_gather(jnp.asarray(pool),
+                                       jnp.asarray(pages)))
+        assert out.shape == (B, n_pt * bs, 2, 3)
+        view = out.reshape(B, n_pt, bs, 2, 3)
+        for i in range(B):
+            for j in range(n_pt):
+                want = pool[max(int(pages[i, j]), 0)]
+                assert np.array_equal(view[i, j].view(np.uint8),
+                                      want.view(np.uint8))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_block0_garbage_never_reaches_logits(arch):
+    """End-to-end clamp-contract probe: map every live page to blocks
+    1..nb-1, then scramble block 0 of every pool leaf (the block all -1
+    entries clamp to) with huge finite garbage — decode logits must be
+    bitwise unchanged, on both the XLA gather arm and the Pallas
+    in-kernel walk."""
+    cfg, params = _setup(arch)
+    B, L, S, bs = 2, 16, 4, 4
+    n_pt = L // bs
+    nb = 12
+    rng = np.random.default_rng(7)
+    plens = [7, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    perm = rng.permutation(np.arange(1, nb))          # block 0 never mapped
+    pages = np.full((B, n_pt), -1, np.int32)
+    take = 0
+    for i in range(B):
+        need = -(-plens[i] // bs) + 1
+        pages[i, :need] = perm[take: take + need]
+        take += need
+    d_pages = jnp.asarray(pages)
+
+    cache = make_cache(params, cfg, B, L, per_lane=True, paged=(nb, bs))
+    consumed = np.zeros(B, np.int32)
+    for _ in range(2):
+        lens = np.asarray([min(S, p - c) for p, c in zip(plens, consumed)],
+                          np.int32).clip(0)
+        toks = np.zeros((B, S), np.int32)
+        for i in range(B):
+            if lens[i]:
+                toks[i, :lens[i]] = prompts[i][consumed[i]:
+                                               consumed[i] + lens[i]]
+        c = sync_cache_pages(
+            sync_cache_positions(cache, jnp.asarray(consumed.copy())),
+            d_pages)
+        _, cache, _ = lm_apply(params, cfg, jnp.asarray(toks), cache=c,
+                               start_pos=jnp.asarray(consumed.copy()),
+                               seq_lens=jnp.asarray(lens))
+        consumed += lens
+    assert list(consumed) == plens
+
+    def scramble_block0(cache):
+        def leaf(name, v):
+            if name == "index":
+                return v
+            return v.at[:, 0].set(jnp.full_like(v[:, 0], 1e9))
+        attn = {k: leaf(k, v) for k, v in cache["stack"]["attn"].items()}
+        return dict(cache, stack=dict(cache["stack"], attn=attn))
+
+    nxt = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
+    pos = np.asarray(plens, np.int32)
+
+    def logits(cache, arm):
+        import os
+        old = os.environ.get("ICQ_PAGED_ATTN")
+        os.environ["ICQ_PAGED_ATTN"] = arm
+        try:
+            c = sync_cache_pages(sync_cache_positions(
+                cache, jnp.asarray(pos)), d_pages)
+            return np.asarray(lm_apply(params, cfg, jnp.asarray(nxt),
+                                       cache=c,
+                                       start_pos=jnp.asarray(pos))[0])
+        finally:
+            if old is None:
+                del os.environ["ICQ_PAGED_ATTN"]
+            else:
+                os.environ["ICQ_PAGED_ATTN"] = old
+
+    poisoned = scramble_block0(cache)
+    for arm in ("xla", "pallas"):
+        clean = logits(cache, arm)
+        dirty = logits(poisoned, arm)
+        assert np.array_equal(clean.view(np.uint8), dirty.view(np.uint8)), (
+            f"{arm}: block-0 garbage leaked into decode logits")

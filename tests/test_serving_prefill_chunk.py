@@ -134,24 +134,28 @@ def _mixed_specs(cfg, n, seed=2, prompt_hi=25):
 
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
 def test_engine_chunked_greedy_token_identical(arch):
-    """wave == continuous chunk=1 == continuous chunk=4, per request,
-    with more requests than slots so lanes recycle while neighbors are
-    still mid-chunk."""
+    """wave == continuous chunk=1 == continuous chunk=4 (split two-launch
+    structure) == continuous chunk=4 fused (one launch per mixed
+    iteration), per request, with more requests than slots so lanes
+    recycle while neighbors are still mid-chunk."""
     cfg, params = _setup(arch)
     specs = _mixed_specs(cfg, 5)
     out, engines = {}, {}
     for label, kw in (("wave", dict(mode="wave")),
                       ("chunk1", dict(mode="continuous", prefill_chunk=1)),
-                      ("chunk4", dict(mode="continuous", prefill_chunk=4))):
+                      ("chunk4", dict(mode="continuous", prefill_chunk=4,
+                                      fused_step=False)),
+                      ("fused4", dict(mode="continuous", prefill_chunk=4))):
         eng = GenerationEngine(params, cfg, batch_size=2, max_len=40, **kw)
         for s in specs:
             eng.submit(Request(**s))
         out[label] = {rid: r.generated for rid, r in eng.run().items()}
         engines[label] = eng
-    assert out["chunk4"] == out["chunk1"] == out["wave"]
+    assert out["fused4"] == out["chunk4"] == out["chunk1"] == out["wave"]
 
     m1 = engines["chunk1"].metrics.summary()
     m4 = engines["chunk4"].metrics.summary()
+    mf = engines["fused4"].metrics.summary()
     assert m1["prefill_tokens"] == 0 and m1["prefill_steps"] == 0
     assert m4["prefill_tokens"] > 0 and m4["prefill_steps"] > 0
     # every bulk prompt token is accounted to exactly one program (the
@@ -164,18 +168,55 @@ def test_engine_chunked_greedy_token_identical(arch):
     assert m1["prompt_decode_tokens"] == total_bulk
     # draining bulk S-at-a-time must launch fewer programs overall
     assert m4["prefill_steps"] + m4["decode_steps"] < m1["decode_steps"]
+    # the fused engine never runs the split chunk program, consumes the
+    # whole prompt (final token included) through fused launches, and a
+    # mixed iteration costs ONE launch — strictly fewer than the split
+    # structure's chunk + decode pairs
+    assert mf["fused_steps"] > 0 and mf["prefill_steps"] == 0
+    # every prompt token flows through fused launches except final
+    # prompt tokens the plain-decode fallthrough happens to consume
+    # (at most one per request)
+    total_prompt = sum(len(s["prompt"]) for s in specs)
+    assert (total_prompt - len(specs) <= mf["prefill_tokens"]
+            <= total_prompt)
+    assert mf["prompt_decode_tokens"] == 0
+    assert mf["launches"] < m4["launches"] < m1["launches"]
 
 
 def test_chunk1_never_builds_the_chunk_program():
-    """prefill_chunk=1 must be the PR-3 engine bit-for-bit: the second
-    program is never traced, let alone launched."""
+    """prefill_chunk=1 must be the PR-3 engine bit-for-bit: neither the
+    chunk program nor the fused program is built, let alone launched.
+    With chunking, the default builds the fused program (one launch per
+    mixed iteration); fused_step=False restores the split chunk+decode
+    pair."""
     cfg, params = _setup("llama3.2-1b")
     eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
                            mode="continuous", prefill_chunk=1)
-    assert eng._chunk_step is None
+    assert eng._chunk_step is None and eng._fused is None
+    assert not eng.fused_step
     eng2 = GenerationEngine(params, cfg, batch_size=2, max_len=16,
                             mode="continuous", prefill_chunk=4)
-    assert eng2._chunk_step is not None
+    assert eng2.fused_step
+    assert eng2._fused is not None and eng2._chunk_step is None
+    eng3 = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                            mode="continuous", prefill_chunk=4,
+                            fused_step=False)
+    assert not eng3.fused_step
+    assert eng3._chunk_step is not None and eng3._fused is None
+
+
+def test_fused_step_env_default(monkeypatch):
+    from repro.serving.engine import default_fused_step
+
+    monkeypatch.delenv("ICQ_FUSED_STEP", raising=False)
+    assert default_fused_step() is True
+    monkeypatch.setenv("ICQ_FUSED_STEP", "0")
+    assert default_fused_step() is False
+    monkeypatch.setenv("ICQ_FUSED_STEP", "on")
+    assert default_fused_step() is True
+    monkeypatch.setenv("ICQ_FUSED_STEP", "banana")
+    with pytest.raises(ValueError):
+        default_fused_step()
 
 
 def test_prefill_chunk_env_default(monkeypatch):
