@@ -32,6 +32,14 @@ strictly fewer device launches with fusion, and that the decode
 attention bytes-read estimate shows the paged arm streaming strictly
 fewer live-block bytes than the logical full-table span.
 
+A fifth **multi-turn trace** (shared system prompt + 3-turn chats)
+replays identical per-turn prompts through a warm engine
+(``prefix_cache=True`` + sessions) and a cold one (plain paged prefill),
+asserting per-turn greedy parity, that the prefix cache actually hit
+(hit rate > 0, prefill tokens skipped > 0), and that warm turn-2+ TTFT
+p50 improves by at least 2x — reporting the TTFT delta, tokens skipped
+and the pool's cache-HBM ratio vs contiguous capacity.
+
 A fourth **fault-storm trace** replays the skewed workload through the
 paged engine under a deterministic fault plan (NaN logits, a raised
 launch, and an allocator-exhaustion drill) plus one request with
@@ -100,6 +108,26 @@ PAGED_PROMPT_SHORT = (2, 9)
 PAGED_NEW_SHORT = (2, 9)
 PAGED_PREFILL_CHUNK = 8         # exercise the paged chunk-write path
 PAGED_CONFIGS = ("prepared_v2", "dense")
+
+# multi-turn trace: MT_SESSIONS concurrent chats sharing one system
+# prompt, MT_TURNS turns each. The warm engine retains each finished
+# turn's chain under its session id (plus the hash cache for the
+# cross-session system prompt), so turn 2+ only prefills the new user
+# tokens; the cold engine re-prefills the whole history every turn.
+# The pool is sized below contiguous capacity so the cache-HBM ratio
+# is a real saving, with headroom for the retained session chains.
+MT_SESSIONS = 3
+MT_TURNS = 3
+MT_SHARED = 32                  # shared system-prompt tokens: sized so
+                                # cold re-pays several whole chunk
+                                # launches per turn that warm skips —
+                                # the 2x TTFT assertion must clear even
+                                # on a noisy 2-core CI runner
+MT_USER = (4, 9)                # fresh user tokens per turn
+MT_MAX_NEW = (4, 7)
+MT_MAX_LEN = 96
+MT_BLOCK_SIZE = 4
+MT_BLOCKS = 60                  # 240 pooled rows < 3 * 96 = 288 contiguous
 
 # fault-storm trace: the skewed paged workload with one of each fault
 # kind injected at fixed launch indices (all comfortably below the
@@ -271,6 +299,120 @@ def _run_fault_storm(params, cfg) -> dict:
     row["status_counts"] = eng.metrics.status_counts()
     row["fault_kinds"] = dict(eng.metrics.faults)
     row["ok_parity"] = True
+    return row
+
+
+def _run_multi_turn(params, cfg) -> dict:
+    """Warm (prefix cache + sessions) vs cold multi-turn serving on
+    identical per-turn prompts. Returns the bench row; raises
+    AssertionError if parity breaks or the cache fails to pay off."""
+    engine_kw = dict(
+        batch_size=MT_SESSIONS, max_len=MT_MAX_LEN,
+        weight_cache="prepared", runtime_fmt="v2", mode="continuous",
+        prefill_chunk=PAGED_PREFILL_CHUNK, kv_layout="paged",
+        kv_block_size=MT_BLOCK_SIZE, kv_blocks=MT_BLOCKS,
+    )
+    warm = GenerationEngine(params, cfg, prefix_cache=True, **engine_kw)
+    cold = GenerationEngine(params, cfg, prefix_cache=False, **engine_kw)
+
+    rng = np.random.default_rng(7)
+    # compile warm-up: one throwaway 2-turn session through each engine
+    # so the jit compiles (chunk / decode / fused programs plus the COW
+    # fork row-copy, which only triggers on a mid-block warm start) land
+    # outside the measured TTFTs. The warm cache is cleared afterwards;
+    # only the counter ledger keeps the warm-up's few lookups.
+    wh = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    for wturn in range(2):
+        wuser = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        wprompt = np.concatenate([wh, wuser])
+        wrid = 9000 + wturn
+        warm.submit(Request(wrid, wprompt.copy(), max_new_tokens=2,
+                            arrival_time=warm.now()), session="warmup")
+        dw = warm.run()
+        cold.submit(Request(wrid, wprompt.copy(), max_new_tokens=2,
+                            arrival_time=cold.now()))
+        cold.run()
+        wh = np.concatenate(
+            [wprompt, np.asarray(dw[wrid].generated, np.int32)])
+    warm.clear_prefix_cache()
+
+    system = rng.integers(0, cfg.vocab_size, MT_SHARED).astype(np.int32)
+    history = {sid: system.copy() for sid in range(MT_SESSIONS)}
+    ttfts = {"warm": [[] for _ in range(MT_TURNS)],
+             "cold": [[] for _ in range(MT_TURNS)]}
+    rid = 0
+    for turn in range(MT_TURNS):
+        turn_reqs = []
+        for sid in range(MT_SESSIONS):
+            user = rng.integers(
+                0, cfg.vocab_size, int(rng.integers(*MT_USER))
+            ).astype(np.int32)
+            prompt = np.concatenate([history[sid], user])
+            max_new = int(rng.integers(*MT_MAX_NEW))
+            turn_reqs.append((rid, sid, prompt, max_new))
+            rid += 1
+        # each engine is submitted-then-run by itself: arrival stamps
+        # come from its own clock right before its run, so neither
+        # engine's TTFT absorbs the other's wall time
+        for r, sid, prompt, max_new in turn_reqs:
+            warm.submit(Request(r, prompt.copy(), max_new_tokens=max_new,
+                                arrival_time=warm.now()),
+                        session=f"s{sid}")
+        done_w = warm.run()
+        for r, sid, prompt, max_new in turn_reqs:
+            cold.submit(Request(r, prompt.copy(), max_new_tokens=max_new,
+                                arrival_time=cold.now()))
+        done_c = cold.run()
+        for r, sid, prompt, _ in turn_reqs:
+            if done_w[r].generated != done_c[r].generated:
+                raise AssertionError(
+                    f"multi_turn: warm vs cold greedy streams diverge on "
+                    f"session {sid} turn {turn} "
+                    f"({done_w[r].generated} vs {done_c[r].generated})")
+            history[sid] = np.concatenate(
+                [prompt, np.asarray(done_w[r].generated, np.int32)])
+            ttfts["warm"][turn].append(warm.metrics.requests[r].ttft)
+            ttfts["cold"][turn].append(cold.metrics.requests[r].ttft)
+    warm.check_shutdown_invariants()
+    cold.check_shutdown_invariants()
+
+    sw = warm.metrics.summary()
+    sc = cold.metrics.summary()
+    if not sw["prefix_hit_rate"] > 0:
+        raise AssertionError("multi_turn: warm engine never hit the "
+                             "prefix cache")
+    if not sw["prefix_tokens_skipped"] > 0:
+        raise AssertionError("multi_turn: warm engine skipped no prefill "
+                             "tokens")
+    if sw["session_hits"] < 1:
+        raise AssertionError("multi_turn: no turn warm-started from a "
+                             "retained session chain")
+    # the headline claim: once a session's history is resident, TTFT is
+    # the delta prefill, not the whole history — p50 over turn-2+
+    # requests must improve at least 2x
+    late_w = sorted(t for turn in ttfts["warm"][1:] for t in turn)
+    late_c = sorted(t for turn in ttfts["cold"][1:] for t in turn)
+    warm_p50 = late_w[len(late_w) // 2]
+    cold_p50 = late_c[len(late_c) // 2]
+    if not warm_p50 * 2 <= cold_p50:
+        raise AssertionError(
+            f"multi_turn: warm turn-2+ TTFT p50 {warm_p50:.4f}s not 2x "
+            f"better than cold {cold_p50:.4f}s")
+
+    contiguous_rows = MT_SESSIONS * MT_MAX_LEN
+    paged_rows = MT_BLOCKS * MT_BLOCK_SIZE
+    row = dict(
+        sessions=MT_SESSIONS, turns=MT_TURNS, shared_prefix=MT_SHARED,
+        block_size=MT_BLOCK_SIZE, kv_blocks=MT_BLOCKS,
+        warm={k: (round(v, 4) if v == v else None) for k, v in sw.items()},
+        cold={k: (round(v, 4) if v == v else None) for k, v in sc.items()},
+        greedy_parity=True,
+        ttft_p50_turn2plus_warm_s=round(warm_p50, 4),
+        ttft_p50_turn2plus_cold_s=round(cold_p50, 4),
+        ttft_speedup_turn2plus=round(cold_p50 / warm_p50, 3),
+        prefill_tokens_skipped=int(sw["prefix_tokens_skipped"]),
+        cache_hbm_ratio=round(paged_rows / contiguous_rows, 3),
+    )
     return row
 
 
@@ -474,6 +616,22 @@ def run() -> dict:
             f"launches={int(fused_l)}vs{int(split_l)};"
             f"parity={row['greedy_parity']}",
         )
+
+    # ---- multi-turn trace: warm sessions vs cold re-prefill -----------
+    mt = _run_multi_turn(qparams, cfg)
+    out["multi_turn"] = mt
+    emit(
+        "serving/multi_turn_warm",
+        mt["warm"]["wall_s"] * 1e6,
+        f"ttft_p50_turn2plus={mt['ttft_p50_turn2plus_warm_s']}"
+        f"vs{mt['ttft_p50_turn2plus_cold_s']};"
+        f"speedup={mt['ttft_speedup_turn2plus']}x;"
+        f"hit_rate={mt['warm']['prefix_hit_rate']};"
+        f"tokens_skipped={mt['prefill_tokens_skipped']};"
+        f"cow_forks={int(mt['warm']['cow_forks'])};"
+        f"cache_hbm_ratio={mt['cache_hbm_ratio']};"
+        f"parity={mt['greedy_parity']}",
+    )
 
     # ---- fault-storm trace: typed termination + recovery parity -------
     storm = _run_fault_storm(qparams, cfg)

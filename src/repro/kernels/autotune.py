@@ -488,3 +488,77 @@ def autotune_arms(
             int(m), d_out, d_in, n_bits,
             interpret=interpret, iters=iters, fmt=fmt)
     return out
+
+
+def kv_block_size_key(max_len: int) -> str:
+    """Cache key for the paged-KV block-size sweep. Keyed on the engine
+    cache cap only: the tradeoff below is a pure function of sequence
+    lengths relative to max_len, independent of model geometry (every
+    layer pays the same per-row bytes) and batch (both costs scale
+    linearly with lane count)."""
+    return f"kv_block/maxlen{int(max_len)}"
+
+
+def kv_block_size_for(max_len: int) -> Optional[int]:
+    """The cached block-size winner for this cache cap, or None (the
+    engine's ``kv_block_size='auto'`` consults this and falls back to
+    the static default on a miss)."""
+    hit = lookup(kv_block_size_key(max_len))
+    return int(hit[0]) if hit else None
+
+
+KV_BLOCK_CANDIDATES: Tuple[int, ...] = (4, 8, 16, 32, 64)
+
+
+def autotune_kv_block_size(
+    seq_lens: Sequence[int],
+    max_len: int,
+    *,
+    row_bytes: float = 4096.0,
+    table_entry_bytes: float = 8.0,
+    block_touch_bytes: float = 256.0,
+    candidates: Optional[Sequence[int]] = None,
+) -> Dict[str, object]:
+    """Pick the paged-KV block size for a traffic trace by cost model
+    and record it in the shared JSON cache.
+
+    Block size trades two overheads (both in byte-equivalents so they
+    compare on one axis):
+
+      * **fragmentation** — the last block of every sequence is on
+        average half empty: larger blocks waste more pool HBM rows
+        (``row_bytes`` per wasted row, i.e. KV bytes across all layers);
+      * **page-table + walk overhead** — smaller blocks mean more
+        page-table entries shipped per version bump
+        (``table_entry_bytes`` each, host int32 + device mirror) and
+        more per-block walk/DMA setup in the paged-attention kernel
+        (``block_touch_bytes`` per block actually touched).
+
+    Unlike the kernel sweeps this is a closed-form model, not a timing
+    loop — allocator cost is host bookkeeping and the dominant terms
+    (wasted HBM rows vs table entries) are exactly countable from the
+    trace. Returns {"block_size", "cost_bytes", "cached"}.
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    lens = [min(int(n), int(max_len)) for n in seq_lens]
+    if not lens or min(lens) < 1:
+        raise ValueError("seq_lens must be non-empty positive lengths")
+    key = kv_block_size_key(max_len)
+    hit = lookup(key)
+    if hit is not None:
+        return dict(block_size=int(hit[0]), cost_bytes=None, cached=True)
+
+    best, best_cost = None, float("inf")
+    for bs in (candidates or KV_BLOCK_CANDIDATES):
+        bs = min(int(bs), int(max_len))
+        n_pt = -(-max_len // bs)
+        frag_rows = sum(-(-n // bs) * bs - n for n in lens)
+        blocks_touched = sum(-(-n // bs) for n in lens)
+        cost = (frag_rows * row_bytes
+                + len(lens) * n_pt * table_entry_bytes
+                + blocks_touched * block_touch_bytes)
+        if cost < best_cost:
+            best, best_cost = bs, cost
+    record(key, [best])
+    return dict(block_size=best, cost_bytes=best_cost, cached=False)

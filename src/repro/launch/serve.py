@@ -64,9 +64,10 @@ def main():
                          "under pressure; greedy output is token-identical "
                          "either way). Default follows ICQ_KV_LAYOUT "
                          "(contiguous)")
-    ap.add_argument("--kv-block-size", type=int, default=None,
-                    help="paged KV: cache rows per block (default "
-                         "ICQ_KV_BLOCK_SIZE / 16)")
+    ap.add_argument("--kv-block-size", default=None,
+                    help="paged KV: cache rows per block, or 'auto' to "
+                         "use the block-size sweep winner from the shared "
+                         "autotune cache (default ICQ_KV_BLOCK_SIZE / 16)")
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="paged KV: physical blocks in the pool (default "
                          "batch * ceil(max_len / block_size) = contiguous "
@@ -105,6 +106,27 @@ def main():
                          "to the bitwise-exact XLA arm before returning "
                          "to the fast path (default ICQ_DEGRADE_STEPS "
                          "/ 8)")
+    ap.add_argument("--prefix-cache", action="store_true", default=None,
+                    help="share identical prompt prefixes copy-on-write "
+                         "across requests and retain finished chains for "
+                         "reuse (paged KV only; default ICQ_PREFIX_CACHE "
+                         "/ off). Implies --kv-layout paged when the "
+                         "layout is unset")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="run a multi-turn chat workload instead of the "
+                         "independent-request one: this many concurrent "
+                         "sessions sharing one system prompt, each turn "
+                         "extending its own history (requires/implies "
+                         "--prefix-cache; turn 2+ prompts warm-start from "
+                         "the previous turn's retained blocks)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per session for --sessions (default 3)")
+    ap.add_argument("--session-ttl", type=float, default=None,
+                    help="idle seconds before a session's retained blocks "
+                         "are dropped (default ICQ_SESSION_TTL / 300)")
+    ap.add_argument("--shared-prefix", type=int, default=12,
+                    help="shared system-prompt length in tokens for the "
+                         "--sessions workload (default 12)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -122,6 +144,13 @@ def main():
                          "or 'v1' dense selector bitmap (~1 b/w); default "
                          "follows ICQ_RUNTIME_FMT / platform policy")
     args = ap.parse_args()
+    if args.kv_block_size is not None and args.kv_block_size != "auto":
+        args.kv_block_size = int(args.kv_block_size)
+    if args.sessions and args.prefix_cache is None:
+        print("[serve] --sessions implies --prefix-cache; enabling it")
+        args.prefix_cache = True
+    if args.prefix_cache and args.kv_layout is None:
+        args.kv_layout = "paged"
 
     cfg = smoke_variant(get_config(args.arch))
     if cfg.is_encdec or cfg.frontend != "none":
@@ -155,55 +184,106 @@ def main():
                               max_queue=args.max_queue,
                               shed_policy=args.shed_policy,
                               faults=faults,
-                              degrade_steps=args.degrade_steps)
+                              degrade_steps=args.degrade_steps,
+                              prefix_cache=args.prefix_cache,
+                              session_ttl=args.session_ttl)
     kv_desc = engine.kv_layout
     if engine.kv_layout == "paged":
         kv_desc += (f": {engine.kv_blocks} blocks x "
                     f"{engine.kv_block_size} rows")
+        if engine.prefix_cache:
+            kv_desc += ", prefix-cache on"
     print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
           f"prefill_chunk={engine.prefill_chunk}, "
           f"fused_step={engine.fused_step}, kv={kv_desc})")
 
     rng = np.random.default_rng(args.seed)
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-        prompt = prompt.astype(np.int32)
-        max_new = args.max_new
-        budget = len(prompt) + max_new
-        if len(prompt) >= args.max_len:
-            print(f"[serve] REJECT req {rid}: prompt length {len(prompt)} "
-                  f">= max_len {args.max_len}")
-            continue
-        if budget > args.max_len:
-            if args.strict_len:
-                print(f"[serve] REJECT req {rid}: prompt {len(prompt)} + "
-                      f"max_new {max_new} = {budget} > max_len "
-                      f"{args.max_len} (--strict-len)")
+    if args.sessions:
+        # Multi-turn chat workload: every session shares one system
+        # prompt; each turn appends fresh user tokens to the session's
+        # full history (prior prompt + generated reply). Turn 1 shares
+        # the system prompt across sessions through the hash cache;
+        # turn 2+ warm-starts from the session's retained chain, so
+        # only the delta past the previous turn is prefilled.
+        system = rng.integers(0, cfg.vocab_size,
+                              size=args.shared_prefix).astype(np.int32)
+        history = {sid: system.copy() for sid in range(args.sessions)}
+        rid = 0
+        for turn in range(args.turns):
+            turn_rids = {}
+            for sid in range(args.sessions):
+                user = rng.integers(
+                    0, cfg.vocab_size,
+                    size=int(rng.integers(4, 9))).astype(np.int32)
+                prompt = np.concatenate([history[sid], user])
+                max_new = min(args.max_new, args.max_len - len(prompt))
+                if len(prompt) >= args.max_len or max_new < 1:
+                    print(f"[serve] session {sid} turn {turn}: history "
+                          f"{len(prompt)} tokens overflows max_len "
+                          f"{args.max_len}; skipping turn")
+                    continue
+                req = Request(rid, prompt, max_new_tokens=max_new,
+                              deadline_s=args.deadline,
+                              max_queue_wait_s=args.max_queue_wait,
+                              arrival_time=engine.now())
+                try:
+                    if engine.submit(req, session=f"s{sid}"):
+                        turn_rids[rid] = sid
+                    else:
+                        print(f"[serve] SHED session {sid} turn {turn}")
+                except ValueError as e:
+                    print(f"[serve] REJECT session {sid} turn {turn}: {e}")
+                rid += 1
+            done = engine.run()
+            for r_id, sid in sorted(turn_rids.items()):
+                r = done[r_id]
+                print(f"[serve] session {sid} turn {turn}: "
+                      f"prompt_len={len(r.prompt)} "
+                      f"generated={r.generated} status={r.status}")
+                if r.status == "ok":
+                    history[sid] = np.concatenate(
+                        [r.prompt, np.asarray(r.generated, np.int32)])
+    else:
+        for rid in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=rng.integers(4, 12))
+            prompt = prompt.astype(np.int32)
+            max_new = args.max_new
+            budget = len(prompt) + max_new
+            if len(prompt) >= args.max_len:
+                print(f"[serve] REJECT req {rid}: prompt length "
+                      f"{len(prompt)} >= max_len {args.max_len}")
                 continue
-            max_new = args.max_len - len(prompt)
-            print(f"[serve] WARN req {rid}: prompt {len(prompt)} + "
-                  f"max_new {args.max_new} exceeds max_len "
-                  f"{args.max_len}; truncating budget to {max_new} "
-                  f"new tokens")
-        try:
-            accepted = engine.submit(
-                Request(rid, prompt, max_new_tokens=max_new,
-                        deadline_s=args.deadline,
-                        max_queue_wait_s=args.max_queue_wait))
-            if not accepted:
-                print(f"[serve] SHED req {rid}: queue full "
-                      f"(max_queue={engine.max_queue}, "
-                      f"policy={engine.shed_policy})")
-        except ValueError as e:
-            # e.g. a paged pool too small to ever serve this request:
-            # mirror the max_len policy above — reject, don't crash
-            print(f"[serve] REJECT req {rid}: {e}")
+            if budget > args.max_len:
+                if args.strict_len:
+                    print(f"[serve] REJECT req {rid}: prompt "
+                          f"{len(prompt)} + max_new {max_new} = {budget} "
+                          f"> max_len {args.max_len} (--strict-len)")
+                    continue
+                max_new = args.max_len - len(prompt)
+                print(f"[serve] WARN req {rid}: prompt {len(prompt)} + "
+                      f"max_new {args.max_new} exceeds max_len "
+                      f"{args.max_len}; truncating budget to {max_new} "
+                      f"new tokens")
+            try:
+                accepted = engine.submit(
+                    Request(rid, prompt, max_new_tokens=max_new,
+                            deadline_s=args.deadline,
+                            max_queue_wait_s=args.max_queue_wait))
+                if not accepted:
+                    print(f"[serve] SHED req {rid}: queue full "
+                          f"(max_queue={engine.max_queue}, "
+                          f"policy={engine.shed_policy})")
+            except ValueError as e:
+                # e.g. a paged pool too small to ever serve this request:
+                # mirror the max_len policy above — reject, don't crash
+                print(f"[serve] REJECT req {rid}: {e}")
 
-    done = engine.run()
-    for rid in sorted(done):
-        r = done[rid]
-        print(f"[serve] req {rid}: prompt_len={len(r.prompt)} "
-              f"generated={r.generated} status={r.status}")
+        done = engine.run()
+        for rid in sorted(done):
+            r = done[rid]
+            print(f"[serve] req {rid}: prompt_len={len(r.prompt)} "
+                  f"generated={r.generated} status={r.status}")
     s = engine.metrics.summary()
     print(f"[serve] {int(s['completed'])}/{int(s['requests'])} requests, "
           f"{int(s['generated_tokens'])} tokens in {s['wall_s']:.2f}s "
@@ -225,6 +305,21 @@ def main():
               f"decode attn bytes-read est "
               f"{int(s['attn_live_bytes'])} live / "
               f"{int(s['attn_logical_bytes'])} logical")
+    if engine.kv_layout == "paged" and engine.prefix_cache:
+        rate = s["prefix_hit_rate"]
+        rate_str = f"{rate:.3f}" if rate == rate else "n/a"
+        print(f"[serve] prefix cache: {int(s['prefix_hits'])}/"
+              f"{int(s['prefix_lookups'])} hits (hit rate {rate_str}), "
+              f"{int(s['prefix_tokens_skipped'])} prefill tokens "
+              f"skipped, {int(s['cow_forks'])} cow forks, "
+              f"{int(s['prefix_inserts'])} chain inserts, "
+              f"{int(s['prefix_evictions'])} evictions")
+        print(f"[serve] sessions: {int(s['session_hits'])} warm hits, "
+              f"{int(s['sessions_active'])} active at exit, "
+              f"{int(s['session_expiries'])} expiries, "
+              f"{int(s['session_evictions'])} evictions, shared blocks "
+              f"mean {s['mean_shared_blocks']:.1f} / peak "
+              f"{s['peak_shared_blocks']:.0f}")
     counts = engine.metrics.status_counts()
     statuses = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
     print(f"[serve] statuses: {statuses or 'none'}")

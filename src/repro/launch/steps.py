@@ -177,6 +177,32 @@ def sync_cache_pages(cache, pages):
     return cache
 
 
+def fork_cache_block(cache, src, dst):
+    """Copy one physical KV block's rows, pool block ``src`` -> ``dst``
+    (copy-on-write fork; see serving/prefix_cache.py).
+
+    A paged cache subtree is recognized by its ``pages`` leaf; its
+    sibling pool leaves — ``k``/``v`` (GQA) or ``c_kv``/``k_rope``
+    (MLA), with any leading layer-stack axes — get row ``dst`` on the
+    block axis overwritten with row ``src``. ``index``/``pages`` leaves
+    are per-lane bookkeeping, not pool storage, and pass through
+    untouched. ``src``/``dst`` may be traced scalars, so the engine can
+    jit this once and fork arbitrary block pairs without retracing.
+    """
+    if isinstance(cache, dict):
+        if "pages" in cache:
+            # pages is (..., B, n_pt); the pool leaves share its leading
+            # layer-stack axes, then (num_blocks, block_size, ...)
+            lead = (slice(None),) * (cache["pages"].ndim - 2)
+            return {
+                k: (v if k in ("index", "pages")
+                    else v.at[lead + (dst,)].set(v[lead + (src,)]))
+                for k, v in cache.items()
+            }
+        return {k: fork_cache_block(v, src, dst) for k, v in cache.items()}
+    return cache
+
+
 def make_prefill_chunk_step(cfg):
     """S-token prompt-chunk admission step for the continuous engine.
 

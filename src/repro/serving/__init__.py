@@ -53,12 +53,33 @@ visible in ``metrics.summary()``.
 With injection disabled (the default) greedy continuous serving is
 token-identical to the pre-fault-tolerance engine, contiguous and
 paged alike.
+
+Prefix cache + sessions
+-----------------------
+
+``prefix_cache=True`` (``ICQ_PREFIX_CACHE``; paged layout only) shares
+identical prompt prefixes **copy-on-write** across requests: finished
+chains are indexed by rolling per-block chain hashes
+(``prefix_cache.block_hashes``), matched blocks are mapped — never
+copied, never written — into the new lane's page table with a pool
+reference each, and only the delta past the match is prefilled. A
+divergence inside a block COW-forks it (one device row-copy). Cached
+chains are LRU-evicted **only under pool pressure** and always before
+any running lane is preempted. ``engine.submit(req, session=sid)``
+additionally retains the finished turn's exact chain (partial tail
+block included) under ``sid`` — TTL-bounded via ``ICQ_SESSION_TTL`` —
+so the next turn of a chat warm-starts mid-block. Warm greedy output is
+token-identical to cold-prefill serving (same same-arm caveat as
+chunked prefill; CI pins it, preemption and fault storms included):
+cached rows are bitwise the rows cold prefill would have written.
 """
 from repro.serving.engine import GenerationEngine, make_serving_step
 from repro.serving.faults import FaultInjected, FaultInjector, parse_fault_plan
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import (MetricsCollector, RequestMetrics,
                                    StepTimeWatchdog)
+from repro.serving.prefix_cache import (PrefixCache, SessionStore,
+                                        block_hashes)
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import STATUSES, Request, Slot, SlotScheduler
 
@@ -69,13 +90,16 @@ __all__ = [
     "FaultInjector",
     "KVBlockPool",
     "MetricsCollector",
+    "PrefixCache",
     "Request",
     "RequestMetrics",
     "STATUSES",
+    "SessionStore",
     "SamplingParams",
     "Slot",
     "SlotScheduler",
     "StepTimeWatchdog",
+    "block_hashes",
     "make_serving_step",
     "parse_fault_plan",
     "sample_tokens",

@@ -157,11 +157,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.backend import forced_backend
-from repro.launch.steps import make_cache, make_decode_step, \
-    make_fused_step, make_prefill_chunk_step, prepare_serving_params
+from repro.launch.steps import fork_cache_block, make_cache, \
+    make_decode_step, make_fused_step, make_prefill_chunk_step, \
+    prepare_serving_params
 from repro.serving.faults import FaultInjected, FaultInjector
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector
+from repro.serving.prefix_cache import PrefixCache, SessionStore, \
+    block_hashes
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import Request, SlotScheduler
 
@@ -315,19 +318,59 @@ def default_kv_layout() -> str:
     return env
 
 
-def default_kv_block_size() -> int:
-    """Paged-KV block size default (ICQ_KV_BLOCK_SIZE, default 16 rows)."""
+def default_kv_block_size():
+    """Paged-KV block size default (ICQ_KV_BLOCK_SIZE, default 16 rows).
+    ``'auto'`` consults the shared JSON autotune cache for a block size
+    recorded by ``kernels.autotune.autotune_kv_block_size`` (the
+    fragmentation-vs-table-overhead sweep), falling back to 16 on a
+    cache miss — the engine resolves it against its ``max_len``."""
     env = os.environ.get("ICQ_KV_BLOCK_SIZE")
     if not env:
         return 16
+    if env == "auto":
+        return "auto"
     try:
         bs = int(env)
     except ValueError:
         raise ValueError(
-            f"ICQ_KV_BLOCK_SIZE must be an integer, got {env!r}")
+            f"ICQ_KV_BLOCK_SIZE must be an integer or 'auto', got {env!r}")
     if bs < 1:
         raise ValueError(f"ICQ_KV_BLOCK_SIZE must be >= 1, got {bs}")
     return bs
+
+
+def default_prefix_cache() -> bool:
+    """Engine default for ``prefix_cache`` (ICQ_PREFIX_CACHE, default
+    off — the PR-7 engine bit-for-bit). On, the paged continuous engine
+    shares identical prompt prefixes copy-on-write and retains session
+    chains (serving/prefix_cache.py); requires ``kv_layout='paged'``."""
+    env = os.environ.get("ICQ_PREFIX_CACHE")
+    if not env:  # unset or set-but-empty
+        return False
+    low = env.lower()
+    if low in ("1", "true", "yes", "on"):
+        return True
+    if low in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"ICQ_PREFIX_CACHE must be a boolean flag, got {env!r}")
+
+
+def default_session_ttl() -> float:
+    """Session idle TTL default in seconds on the engine clock
+    (ICQ_SESSION_TTL, default 300): a session whose last turn finished
+    longer ago than this is dropped by the lifecycle pass and its
+    retained blocks unpinned. 0 expires sessions at the next sweep —
+    the deterministic testing hook, mirroring ``max_queue_wait_s=0``."""
+    env = os.environ.get("ICQ_SESSION_TTL")
+    if not env:
+        return 300.0
+    try:
+        ttl = float(env)
+    except ValueError:
+        raise ValueError(f"ICQ_SESSION_TTL must be a number, got {env!r}")
+    if ttl < 0:
+        raise ValueError(f"ICQ_SESSION_TTL must be >= 0, got {ttl}")
+    return ttl
 
 
 def default_max_queue() -> Optional[int]:
@@ -400,7 +443,9 @@ class GenerationEngine:
                  shed_policy: Optional[str] = None,
                  faults: Optional[FaultInjector] = None,
                  degrade_steps: Optional[int] = None,
-                 fused_step: Optional[bool] = None):
+                 fused_step: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
+                 session_ttl: Optional[float] = None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
@@ -457,8 +502,15 @@ class GenerationEngine:
                     "kv_layout='paged' needs an attention KV cache; the "
                     "'ssm' mixer carries recurrent state only")
         self.kv_layout = kv_layout
-        self.kv_block_size = (default_kv_block_size()
-                              if kv_block_size is None else int(kv_block_size))
+        if kv_block_size is None:
+            kv_block_size = default_kv_block_size()
+        if kv_block_size == "auto":
+            # block-size sweep winner for this cache cap (the shared
+            # JSON autotune cache); static default on a miss
+            from repro.kernels import autotune
+
+            kv_block_size = autotune.kv_block_size_for(max_len) or 16
+        self.kv_block_size = int(kv_block_size)
         if self.kv_block_size < 1:
             raise ValueError(
                 f"kv_block_size must be >= 1, got {self.kv_block_size}")
@@ -472,6 +524,35 @@ class GenerationEngine:
         self.kv_blocks = int(kv_blocks)
         if self.kv_layout == "paged" and self.kv_blocks < 1:
             raise ValueError(f"kv_blocks must be >= 1, got {self.kv_blocks}")
+
+        # ---- prefix cache + sessions (serving/prefix_cache.py)
+        if prefix_cache is None:
+            prefix_cache = default_prefix_cache()
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "prefix_cache=True requires kv_layout='paged' (prefix "
+                    "sharing maps physical blocks through page tables)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise NotImplementedError(
+                    f"prefix_cache is not supported for the {cfg.family!r} "
+                    f"mixer: recurrent state has no per-position rows to "
+                    f"share, so a warm start past position 0 cannot be "
+                    f"reconstructed from cached blocks")
+        self.session_ttl = (default_session_ttl() if session_ttl is None
+                            else float(session_ttl))
+        if self.session_ttl < 0:
+            raise ValueError(
+                f"session_ttl must be >= 0, got {self.session_ttl}")
+        self._prefix = PrefixCache() if self.prefix_cache else None
+        self._sessions = SessionStore() if self.prefix_cache else None
+        self._session_rid: Dict[str, int] = {}   # in-flight request per sid
+        self._pending_match: Dict[int, tuple] = {}  # rid -> pinned match
+        self._cache = None   # persistent device cache (prefix-cache runs)
+        # COW tail fork as ONE jitted program (src/dst are traced scalars,
+        # so every fork reuses the same trace); built lazily on first use
+        self._fork_block = None
 
         self._decode = jax.jit(make_decode_step(cfg))       # wave path
         # continuous path: checked variants (tokens identical to the
@@ -567,7 +648,7 @@ class GenerationEngine:
         self._replay_cap = 2
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request, session: Optional[str] = None) -> bool:
         """Enqueue a request; returns False when backpressure shed it.
 
         Invalid requests (empty prompt, prompt that cannot fit,
@@ -575,7 +656,26 @@ class GenerationEngine:
         bugs, not load. A shed request terminates immediately with
         status ``'rejected'`` and appears in ``run()``'s results like
         every other submission, so callers never lose track of a rid.
+
+        ``session`` (or ``req.session``) names a multi-turn session on a
+        prefix-cache engine: the finished turn's KV blocks stay pinned
+        under that id (TTL/LRU-bounded) and the next turn's prompt
+        warm-starts past the longest shared prefix — only the delta is
+        prefilled. One request per session may be in flight at a time.
         """
+        if session is not None:
+            req.session = session
+        if req.session is not None:
+            if self._sessions is None:
+                raise ValueError(
+                    f"request {req.rid}: session={req.session!r} requires "
+                    f"an engine built with prefix_cache=True "
+                    f"(kv_layout='paged')")
+            other = self._session_rid.get(req.session)
+            if other is not None:
+                raise ValueError(
+                    f"request {req.rid}: session {req.session!r} already "
+                    f"has request {other} in flight (one turn at a time)")
         n = len(req.prompt)
         if n == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
@@ -620,6 +720,8 @@ class GenerationEngine:
                 self._terminal_queued(victim, req.arrival_time, "rejected")
         self.metrics.on_submit(req.rid, req.arrival_time, n)
         self._sched.submit(req)
+        if req.session is not None:
+            self._session_rid[req.session] = req.rid
         return True
 
     def cancel(self, rid: int) -> bool:
@@ -663,7 +765,14 @@ class GenerationEngine:
                 status: str = "ok") -> None:
         req = self._sched.release(slot)
         if self._pool is not None:
-            self._pool.release(slot)   # blocks reclaimed the same step
+            if status == "ok" and self.prefix_cache:
+                # index the finished chain / retain the session chain
+                # BEFORE the lane's references drop, so shared blocks
+                # never transit refcount 0 on their way into the cache
+                self._retain_prefix(slot, req, int(pos[slot]), t)
+            self._pool.release(slot)   # lane references dropped same step
+        if req.session is not None:
+            self._session_rid.pop(req.session, None)
         self._folded.pop(req.rid, None)
         self._replayed.pop(req.rid, None)
         self._cancel_pending.discard(req.rid)
@@ -678,6 +787,8 @@ class GenerationEngine:
         """Terminal path for a request that never occupies a slot again
         (queued expiry/cancellation, backpressure shed). Partial output
         from a pre-preemption life is kept on the request."""
+        if req.session is not None:
+            self._session_rid.pop(req.session, None)
         self._folded.pop(req.rid, None)
         self._replayed.pop(req.rid, None)
         self._cancel_pending.discard(req.rid)
@@ -727,6 +838,15 @@ class GenerationEngine:
                   and now - req.arrival_time >= req.deadline_s):
                 self._finish(i, now, live, pos, tokens, status="timeout")
                 changed = True
+        if self._sessions is not None and len(self._sessions):
+            # TTL sweep: idle sessions past ICQ_SESSION_TTL drop their
+            # retained chains (in-flight sessions are exempt — their
+            # next retention refreshes the stamp anyway)
+            expired = self._sessions.expire(
+                now, self.session_ttl, self._pool,
+                protect=self._session_rid.keys())
+            if expired:
+                self.metrics.on_session_expired(len(expired))
         return changed
 
     # -- paged-KV admission / preemption -------------------------------
@@ -743,7 +863,164 @@ class GenerationEngine:
 
     def _admit_gate(self, req: Request) -> bool:
         pool = self._pool
-        return pool.free_blocks >= pool.blocks_for(self._admit_tokens(req))
+        if not self.prefix_cache:
+            return pool.free_blocks >= pool.blocks_for(
+                self._admit_tokens(req))
+        # prefix-aware gate: only the blocks NOT covered by the matched
+        # prefix must come from the free list. The match is pinned
+        # (temporary increfs) before any eviction runs, so LRU pressure
+        # can never free the very blocks this admission is about to
+        # share — and the pinned ids stay valid even if their cache
+        # entries are evicted between gate and attach.
+        m, shared, fork_src, via_session = self._match_for(req)
+        need = pool.blocks_for(self._admit_tokens(req)) - len(shared)
+        if pool.free_blocks < need and not self._evict_for(need):
+            for b in shared:
+                pool.decref(b)
+            if fork_src is not None:
+                pool.decref(fork_src)
+            return False
+        self._pending_match[req.rid] = (m, shared, fork_src, via_session)
+        return True
+
+    def _match_for(self, req: Request):
+        """Longest warm prefix available for ``req``: the session chain
+        (exact tokens, can warm-start mid-block) vs the hash cache
+        (full blocks only), whichever matches more. Matched blocks are
+        pinned with temporary increfs; the caller owns dropping them
+        (after ``share`` re-references them lane-side, or on gate
+        failure). Returns (m, shared_full_blocks, fork_src, via_session)
+        where ``fork_src`` is the partially-matched block to COW-fork
+        (None on a block-aligned match)."""
+        pool = self._pool
+        bs = pool.block_size
+        L = len(req.prompt)
+        now = self._now()
+        m, chain, via_session = 0, [], False
+        if req.session is not None:
+            m, chain = self._sessions.match(req.session, req.prompt, now)
+            m = min(m, L - 1)   # the decode step must consume >= 1 token
+            via_session = m > 0
+        hits = self._prefix.match(
+            block_hashes(req.prompt, bs, n_blocks=(L - 1) // bs), now)
+        if len(hits) * bs > m:
+            m, chain, via_session = len(hits) * bs, hits, False
+        nfull = m // bs
+        shared = chain[:nfull]
+        fork_src = chain[nfull] if m % bs else None
+        for b in shared:
+            pool.incref(b)
+        if fork_src is not None:
+            pool.incref(fork_src)
+        return m, shared, fork_src, via_session
+
+    def _evict_for(self, min_free: int) -> bool:
+        """Pool-pressure gate for the caches: evict hash-cache entries
+        (LRU leaves first), then idle sessions (LRU first), until the
+        free list covers ``min_free`` blocks. True iff the target is met.
+
+        Only sessions whose turn currently occupies a *slot* are
+        protected. Protecting every submitted session would deadlock:
+        with more queued sessions than the pool can pin, admission could
+        never free enough blocks for anyone. A merely-queued session
+        losing its chain costs a cold prefill, nothing more — and a
+        running session's chain is mostly lane-shared anyway, so
+        evicting it would barely free blocks while its retain-at-finish
+        is imminent."""
+        pool = self._pool
+        if pool.free_blocks >= min_free:
+            return True
+        if self._prefix is not None:
+            n = self._prefix.evict_until(pool, min_free)
+            if n:
+                self.metrics.on_prefix_evictions(n)
+        if pool.free_blocks < min_free and self._sessions is not None:
+            running = {s.request.rid
+                       for s in self._sched.occupied().values()}
+            n = self._sessions.evict_until(
+                pool, min_free,
+                protect=(sid for sid, rid in self._session_rid.items()
+                         if rid in running))
+            if n:
+                self.metrics.on_session_evicted(n)
+        return pool.free_blocks >= min_free
+
+    def _attach_prefix(self, slot: int, req: Request, cache,
+                       pos: np.ndarray, tokens: np.ndarray):
+        """Admission-time warm start: map the matched blocks into the
+        lane's page table, COW-fork the partially-matched tail block (if
+        any), and advance the lane's position past the matched prefix —
+        the existing chunked-prefill / teacher-forcing path then walks
+        only the delta. Returns the (possibly fork-copied) cache."""
+        pool = self._pool
+        m, shared, fork_src, via_session = self._pending_match.pop(req.rid)
+        forked = False
+        if fork_src is not None:
+            pool.share(slot, [*shared, fork_src])
+            dst = pool.fork(slot, len(shared))
+            if dst is None:
+                # pool dry (cannot happen after a passed gate, but stay
+                # safe): degrade to the block-aligned prefix
+                pool.pop_last(slot)
+                m = len(shared) * pool.block_size
+            else:
+                if self._fork_block is None:
+                    self._fork_block = jax.jit(fork_cache_block)
+                cache = self._fork_block(cache, jnp.int32(fork_src),
+                                         jnp.int32(dst))
+                forked = True
+        elif shared:
+            pool.share(slot, shared)
+        # drop the temporary match pins: the lane now holds its own refs
+        for b in shared:
+            pool.decref(b)
+        if fork_src is not None:
+            pool.decref(fork_src)
+        if m > 0:
+            pos[slot] = m
+            tokens[slot, 0] = int(req.prompt[m])
+            self._sched.slot(slot).pos = m
+        self.metrics.on_prefix_attach(m, forked=forked,
+                                      via_session=via_session)
+        return cache
+
+    def _retain_prefix(self, slot: int, req: Request, nrows: int,
+                       t: float) -> None:
+        """Finish-time retention: index the lane's full blocks in the
+        hash cache and (for session requests) pin the exact consumed
+        chain under the session id. ``nrows`` is the lane's final
+        position = tokens consumed; the last generated token was emitted
+        but never consumed, so it is not part of the chain."""
+        pool = self._pool
+        if nrows < 1:
+            return
+        # tokens the lane consumed this life: the (possibly replay-
+        # folded) prompt, then the generated tokens fed back after it
+        folded = self._folded.get(req.rid, 0)
+        seq = np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.generated[folded:], np.int32),
+        ])[:nrows]
+        chain = pool.lane_chain(slot)[: pool.blocks_for(len(seq))]
+        hashes = block_hashes(seq, pool.block_size)
+        created = self._prefix.insert(hashes, chain[: len(hashes)], pool, t)
+        if created:
+            self.metrics.on_prefix_insert(created)
+        if req.session is not None:
+            self._sessions.retain(req.session, seq, chain, pool, t)
+
+    def _grow_evicting(self, lane: int, n_tokens: int) -> int:
+        """``pool.grow`` that spends cached chains before letting a lane
+        clip its chunk: under pool pressure, LRU cache entries and idle
+        sessions give their pinned blocks back first."""
+        pool = self._pool
+        if self.prefix_cache:
+            cap = pool.max_blocks_per_lane * pool.block_size
+            need = (pool.blocks_for(min(n_tokens, cap))
+                    - pool.lane_blocks(lane))
+            if need > pool.free_blocks:
+                self._evict_for(need)
+        return pool.grow(lane, n_tokens)
 
     def _preempt(self, slot: int, t: float, live: np.ndarray,
                  pos: np.ndarray, tokens: np.ndarray) -> None:
@@ -803,6 +1080,11 @@ class GenerationEngine:
                        key=lambda i: sched.slot(i).seq)
         for i in order:
             while live[i] and not pool.ensure(i, int(pos[i]) + 1):
+                # cached chains give their blocks back before any lane
+                # is preempted: cache pressure must never cost running
+                # work (the caches only hold HBM nobody else wanted)
+                if self.prefix_cache and self._evict_for(1):
+                    continue
                 # youngest live lane overall — possibly the requester
                 # itself (then the loop exits via live[i] going False and
                 # the requeued request later gets the pool to itself)
@@ -918,7 +1200,8 @@ class GenerationEngine:
                     # right now (never preempt for prefill — a clipped
                     # lane just chunks less this launch, and the decode
                     # pass owns last-resort preemption)
-                    backed = self._pool.grow(i, int(pos[i]) + int(lens[i]))
+                    backed = self._grow_evicting(
+                        i, int(pos[i]) + int(lens[i]))
                     lens[i] = min(lens[i], max(0, backed - int(pos[i])))
         if not lens.any():
             return cache, False
@@ -964,7 +1247,9 @@ class GenerationEngine:
         self.metrics.on_step(
             int(live.sum()), sched.queue_depth, t_now, kind="prefill",
             blocks_in_use=(None if self._pool is None
-                           else self._pool.used_blocks))
+                           else self._pool.used_blocks),
+            shared_blocks=(self._pool.shared_blocks()
+                           if self.prefix_cache else None))
         self.metrics.on_prompt_tokens(int(lens.sum()), kind="prefill")
         for i in range(B):
             if lens[i]:
@@ -994,7 +1279,7 @@ class GenerationEngine:
             r = self._sched.slot(i).request
             lens[i] = max(1, min(S, len(r.prompt) - int(pos[i])))
             if lens[i] > 1 and self._pool is not None:
-                backed = self._pool.grow(i, int(pos[i]) + int(lens[i]))
+                backed = self._grow_evicting(i, int(pos[i]) + int(lens[i]))
                 lens[i] = min(int(lens[i]), max(1, backed - int(pos[i])))
         return lens
 
@@ -1077,7 +1362,9 @@ class GenerationEngine:
         self.metrics.on_step(
             int(live.sum()), sched.queue_depth, t_now, kind="fused",
             blocks_in_use=(None if self._pool is None
-                           else self._pool.used_blocks))
+                           else self._pool.used_blocks),
+            shared_blocks=(self._pool.shared_blocks()
+                           if self.prefix_cache else None))
         self._note_attn_bytes(live, pos + lens)
         if n_prompt:
             self.metrics.on_prompt_tokens(n_prompt, kind="prefill")
@@ -1146,13 +1433,20 @@ class GenerationEngine:
         B = self.batch_size
         sched = self._sched
         paged = self.kv_layout == "paged"
-        self._pool = (KVBlockPool(self.kv_blocks, self.kv_block_size, B,
-                                  self._n_pt) if paged else None)
-        self._pages_dev = None
-        self._pages_ver = -1
-        cache = make_cache(
-            self.params, self.cfg, B, self.max_len, per_lane=True,
-            paged=(self.kv_blocks, self.kv_block_size) if paged else None)
+        # prefix-cache runs keep pool + device cache alive across run()
+        # calls: retained session chains and hash-cache entries point
+        # into them, which is what makes the next turn's submit->run
+        # warm. Every other configuration rebuilds per run, exactly as
+        # before.
+        if not (self.prefix_cache and self._pool is not None):
+            self._pool = (KVBlockPool(self.kv_blocks, self.kv_block_size, B,
+                                      self._n_pt) if paged else None)
+            self._pages_dev = None
+            self._pages_ver = -1
+            self._cache = make_cache(
+                self.params, self.cfg, B, self.max_len, per_lane=True,
+                paged=(self.kv_blocks, self.kv_block_size) if paged else None)
+        cache = self._cache
         cache_bytes = sum(int(x.size) * x.dtype.itemsize
                           for x in jax.tree.leaves(cache))
         self.metrics.set_kv_stats(
@@ -1200,8 +1494,14 @@ class GenerationEngine:
                         sp.temperature, sp.top_k, sp.top_p)
                     ctrl_dirty = True
                     self.metrics.on_admit(req.rid, now)
-                    if paged:   # reserve prompt + minimum decode budget
-                        self._pool.grow(slot, self._admit_tokens(req))
+                    if paged:
+                        if self.prefix_cache:
+                            # warm start: map matched blocks, COW-fork
+                            # the tail, advance pos past the prefix
+                            cache = self._attach_prefix(
+                                slot, req, cache, pos, tokens)
+                        # reserve prompt + minimum decode budget
+                        self._grow_evicting(slot, self._admit_tokens(req))
                 if not paged:
                     break
             if not live.any():
@@ -1309,7 +1609,9 @@ class GenerationEngine:
             self.metrics.on_step(
                 int(live.sum()), sched.queue_depth, t_now,
                 blocks_in_use=(None if self._pool is None
-                               else self._pool.used_blocks))
+                               else self._pool.used_blocks),
+                shared_blocks=(self._pool.shared_blocks()
+                               if self.prefix_cache else None))
             self._note_attn_bytes(live, pos + 1)
 
             n_prompt = 0
@@ -1340,6 +1642,11 @@ class GenerationEngine:
                     ctrl_dirty = True
             if n_prompt:
                 self.metrics.on_prompt_tokens(n_prompt)
+        if self.prefix_cache:
+            self._cache = cache   # retained chains point into it
+            self.metrics.set_session_stats(len(self._sessions))
+        else:
+            self._cache = None    # per-run cache, freed as before
         return self.completed
 
     # ------------------------------------------------------------------
@@ -1420,9 +1727,14 @@ class GenerationEngine:
 
           * the scheduler is fully drained — no occupied slots, no
             queued requests;
-          * the paged block pool (if any) has every block back on the
-            free list, no block both owned and free, and page tables
-            consistent (``KVBlockPool.check_invariants``);
+          * the paged block pool (if any) has refcounts exactly
+            explained by the page tables plus the prefix-cache /
+            session holdings, refcount==0 ⇔ on the free list, and
+            conservation holds (``KVBlockPool.check_invariants``);
+          * with no prefix cache, every block is back on the free list;
+            with one, every used block is accounted to a cached chain
+            or retained session (no leaked shared blocks) and no
+            session still claims an in-flight request;
           * every submitted rid is in ``completed`` exactly once, each
             with a typed terminal status.
 
@@ -1434,10 +1746,22 @@ class GenerationEngine:
         assert sched.queue_depth == 0, (
             f"{sched.queue_depth} request(s) still queued after run()")
         if self._pool is not None:
-            self._pool.check_invariants()
-            assert self._pool.used_blocks == 0, (
-                f"{self._pool.used_blocks} KV block(s) not reclaimed "
-                f"after run()")
+            ext: Dict[int, int] = {}
+            for holder in (self._prefix, self._sessions):
+                if holder is not None:
+                    for b, n in holder.holdings().items():
+                        ext[b] = ext.get(b, 0) + n
+            self._pool.check_invariants(external=ext)
+            assert self._pool.used_blocks == len(ext), (
+                f"{self._pool.used_blocks} KV block(s) in use after run() "
+                f"but only {len(ext)} accounted to cached chains / "
+                f"retained sessions")
+            assert not self._pending_match, (
+                f"pinned prefix matches never attached: "
+                f"{sorted(self._pending_match)}")
+            assert not self._session_rid, (
+                f"sessions still claim in-flight requests: "
+                f"{sorted(self._session_rid)}")
         submitted = set(self.metrics.requests)
         finished = set(self.completed)
         assert submitted == finished, (
@@ -1451,6 +1775,28 @@ class GenerationEngine:
                 f"({r.status!r})")
         assert not self._cancel_pending, (
             f"cancellations never resolved: {sorted(self._cancel_pending)}")
+
+    def now(self) -> float:
+        """Current time on the engine clock (what ``arrival_time``,
+        deadlines and session TTLs are measured against). Multi-turn
+        drivers stamp follow-up submissions with this so queue-wait and
+        TTFT stay meaningful across run() calls."""
+        return self._now()
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every cached chain and retained session, returning their
+        pinned blocks to the pool. Returns the number of blocks freed.
+        After this (and outside a run), a prefix-cache engine's pool is
+        fully free — the teardown counterpart of
+        ``check_shutdown_invariants``."""
+        if self._pool is None:
+            return 0
+        before = self._pool.free_blocks
+        if self._prefix is not None:
+            self._prefix.clear(self._pool)
+        if self._sessions is not None:
+            self._sessions.clear(self._pool)
+        return self._pool.free_blocks - before
 
     def run(self) -> Dict[int, Request]:
         if self.mode == "continuous":

@@ -156,6 +156,18 @@ class MetricsCollector:
         self.cache_bytes: Optional[int] = None       # device KV cache bytes
         self.kv_blocks: Optional[int] = None         # pool size (blocks)
         self.kv_block_size: Optional[int] = None     # rows per block
+        # prefix-cache / session observability (serving/prefix_cache.py)
+        self.prefix_lookups: int = 0         # admissions that consulted it
+        self.prefix_hits: int = 0            # admissions with matched > 0
+        self.prefix_tokens_skipped: int = 0  # prompt tokens never prefilled
+        self.prefix_inserts: int = 0         # new hash-cache entries
+        self.prefix_evictions: int = 0       # hash-cache entries evicted
+        self.cow_forks: int = 0              # partial tail blocks COW-forked
+        self.session_hits: int = 0           # hits matched via a session chain
+        self.session_expiries: int = 0       # sessions dropped by TTL
+        self.session_evictions: int = 0      # sessions dropped by pool pressure
+        self.sessions_active: int = 0        # retained sessions at run end
+        self.shared_blocks_samples: List[int] = []  # sampled once per step
         # fault-tolerance ledger
         self.timeouts: int = 0               # running lanes past deadline_s
         self.expired: int = 0                # queued requests past their wait
@@ -189,7 +201,8 @@ class MetricsCollector:
             setattr(self, counter, getattr(self, counter) + 1)
 
     def on_step(self, occupancy: int, queue_depth: int, t: float,
-                kind: str = "decode", blocks_in_use: Optional[int] = None):
+                kind: str = "decode", blocks_in_use: Optional[int] = None,
+                shared_blocks: Optional[int] = None):
         if self.start_time is None:
             self.start_time = t
         elif self.end_time is not None:
@@ -199,6 +212,8 @@ class MetricsCollector:
         self.queue_depth_samples.append(queue_depth)
         if blocks_in_use is not None:
             self.blocks_in_use_samples.append(blocks_in_use)
+        if shared_blocks is not None:
+            self.shared_blocks_samples.append(shared_blocks)
         if kind == "prefill":
             self.prefill_steps += 1
         elif kind == "fused":
@@ -223,6 +238,42 @@ class MetricsCollector:
     def on_replay(self):
         """Recovery preempted the live lanes and requeued them for replay."""
         self.replays += 1
+
+    def on_prefix_attach(self, matched_tokens: int, forked: bool = False,
+                         via_session: bool = False):
+        """One prefix-cache consultation at admission: ``matched_tokens``
+        prompt tokens were warm-started from shared blocks (0 = miss),
+        ``forked`` when the partial tail block was COW-forked,
+        ``via_session`` when the winning match came from a session chain
+        rather than the hash cache."""
+        self.prefix_lookups += 1
+        if matched_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_tokens_skipped += int(matched_tokens)
+            if via_session:
+                self.session_hits += 1
+        if forked:
+            self.cow_forks += 1
+
+    def on_prefix_insert(self, n_entries: int):
+        """New hash-cache entries indexed from a finished chain."""
+        self.prefix_inserts += int(n_entries)
+
+    def on_prefix_evictions(self, n_entries: int):
+        """Hash-cache entries evicted under pool pressure."""
+        self.prefix_evictions += int(n_entries)
+
+    def on_session_expired(self, n: int):
+        """Sessions dropped by the TTL sweep (``ICQ_SESSION_TTL``)."""
+        self.session_expiries += int(n)
+
+    def on_session_evicted(self, n: int):
+        """Sessions dropped LRU-first under pool pressure."""
+        self.session_evictions += int(n)
+
+    def set_session_stats(self, active: int):
+        """Retained sessions at run end (set by the engine per run)."""
+        self.sessions_active = int(active)
 
     def set_kv_stats(self, cache_bytes: int,
                      kv_blocks: Optional[int] = None,
@@ -274,6 +325,7 @@ class MetricsCollector:
         occ = self.occupancy_samples
         qd = self.queue_depth_samples
         bu = self.blocks_in_use_samples
+        sb = self.shared_blocks_samples
         wd = self.watchdog
         return dict(
             requests=float(len(self.requests)),
@@ -310,6 +362,21 @@ class MetricsCollector:
             mean_block_utilization=(
                 (sum(bu) / len(bu)) / self.kv_blocks
                 if bu and self.kv_blocks else float("nan")),
+            # prefix-cache / session ledger
+            prefix_lookups=float(self.prefix_lookups),
+            prefix_hits=float(self.prefix_hits),
+            prefix_hit_rate=(self.prefix_hits / self.prefix_lookups
+                             if self.prefix_lookups else float("nan")),
+            prefix_tokens_skipped=float(self.prefix_tokens_skipped),
+            prefix_inserts=float(self.prefix_inserts),
+            prefix_evictions=float(self.prefix_evictions),
+            cow_forks=float(self.cow_forks),
+            session_hits=float(self.session_hits),
+            session_expiries=float(self.session_expiries),
+            session_evictions=float(self.session_evictions),
+            sessions_active=float(self.sessions_active),
+            mean_shared_blocks=((sum(sb) / len(sb)) if sb else float("nan")),
+            peak_shared_blocks=(float(max(sb)) if sb else float("nan")),
             # fault-tolerance ledger
             timeouts=float(self.timeouts),
             expired=float(self.expired),

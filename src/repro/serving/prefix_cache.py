@@ -1,0 +1,286 @@
+"""Prefix cache + multi-turn sessions over the paged KV block pool.
+
+Production traffic is dominated by shared system prompts and multi-turn
+chats; with the paged layout (serving/kv_pool.py) the KV rows for a
+repeated prompt prefix already exist in the pool when the next request
+arrives — re-prefilling them is pure waste. This module is the host-side
+bookkeeping that turns the refcounted pool into a **prefix cache**:
+
+``block_hashes``
+    Rolling per-block chain hash of a token sequence at ``block_size``
+    granularity. Block ``j``'s digest commits to every token in blocks
+    ``0..j`` (each digest hashes the parent digest + the block's
+    tokens), so a single digest identifies an entire prefix — two
+    prompts share block ``j`` iff their first ``(j+1)*block_size``
+    tokens agree. Only *full* blocks are hashed: a partial tail block
+    can still be receiving writes and is never shared through the hash
+    index (sessions share it via COW fork instead).
+
+``PrefixCache``
+    Digest -> physical-block index over *finished* chains. Insertion
+    happens only at request finish (``engine._finish``), so every
+    indexed block is fully written and read-only forever after — the
+    write-discipline half of the COW safety argument (see
+    kv_pool.py's module docstring for the other half). Each entry pins
+    its block with one pool reference; eviction is leaf-first LRU
+    (children hold their parents reachable) and only runs under pool
+    pressure — a cached block costs nothing until someone needs the
+    HBM back.
+
+``SessionStore``
+    Session id -> the exact token chain (including the partial tail
+    block) of the session's last finished turn. The next turn matches
+    by token comparison, not hashes, so it can warm-start mid-block:
+    the engine maps the shared full blocks, COW-forks the partial tail
+    block, and starts prefill at the first divergent token. Sessions
+    are TTL-expired on the engine clock (``ICQ_SESSION_TTL``) and
+    LRU-evicted under pool pressure, idle sessions first.
+
+Both structures are pure host bookkeeping: they hold block *ids* and
+pool references, never device arrays. Correctness does not depend on
+them — evicting everything merely makes the next request prefill cold.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+__all__ = ["block_hashes", "PrefixCache", "SessionStore"]
+
+
+def block_hashes(tokens: Sequence[int], block_size: int,
+                 n_blocks: Optional[int] = None) -> List[bytes]:
+    """Chain digests for the full ``block_size``-token blocks of
+    ``tokens`` (optionally only the first ``n_blocks``). Digest ``j``
+    commits to tokens ``[0, (j+1)*block_size)`` — equality of digests
+    is equality of whole prefixes (modulo hash collisions; blake2b-16
+    makes that negligible)."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    toks = np.asarray(tokens, np.int32)
+    total = len(toks) // block_size
+    if n_blocks is not None:
+        total = min(total, max(0, n_blocks))
+    out: List[bytes] = []
+    parent = b""
+    for j in range(total):
+        h = hashlib.blake2b(digest_size=16)
+        h.update(parent)
+        h.update(toks[j * block_size:(j + 1) * block_size].tobytes())
+        parent = h.digest()
+        out.append(parent)
+    return out
+
+
+@dataclass
+class _Entry:
+    block: int
+    parent: Optional[bytes]
+    last_used: float
+    children: int = 0
+
+
+class PrefixCache:
+    """LRU cache of finished prefix chains: digest -> pinned block."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[bytes, _Entry] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def blocks_pinned(self) -> int:
+        return len(self._entries)
+
+    def match(self, hashes: Sequence[bytes], now: float) -> List[int]:
+        """Longest cached prefix of ``hashes``: block ids for the
+        leading run of digests present in the cache. Touches every
+        matched entry's LRU stamp."""
+        out: List[int] = []
+        for h in hashes:
+            e = self._entries.get(h)
+            if e is None:
+                break
+            e.last_used = now
+            out.append(e.block)
+        return out
+
+    def insert(self, hashes: Sequence[bytes], blocks: Sequence[int],
+               pool, now: float) -> int:
+        """Index a finished chain. Digests already present are refreshed
+        (their existing block stays — same content by construction);
+        new digests pin their block with one pool reference. Returns
+        how many new entries were created."""
+        if len(hashes) != len(blocks):
+            raise ValueError("hashes and blocks length mismatch")
+        created = 0
+        parent: Optional[bytes] = None
+        for h, b in zip(hashes, blocks):
+            e = self._entries.get(h)
+            if e is not None:
+                e.last_used = now
+            else:
+                self._entries[h] = _Entry(b, parent, now)
+                pool.incref(b)
+                if parent is not None:
+                    self._entries[parent].children += 1
+                created += 1
+            parent = h
+        return created
+
+    def _evict_one(self, pool, protect: Set[int]) -> Optional[int]:
+        """Evict the least-recently-used *leaf* entry whose block is not
+        protected. Returns the block id dereferenced, or None if nothing
+        is evictable."""
+        victim: Optional[bytes] = None
+        best = float("inf")
+        for h, e in self._entries.items():
+            if e.children == 0 and e.block not in protect and \
+                    e.last_used < best:
+                best = e.last_used
+                victim = h
+        if victim is None:
+            return None
+        e = self._entries.pop(victim)
+        if e.parent is not None and e.parent in self._entries:
+            self._entries[e.parent].children -= 1
+        pool.decref(e.block)
+        return e.block
+
+    def evict_until(self, pool, min_free: int,
+                    protect: Iterable[int] = ()) -> int:
+        """Evict LRU leaves until ``pool.free_blocks >= min_free`` or
+        nothing more can be evicted. Returns the number of entries
+        evicted (pool pressure gate: callers only invoke this when an
+        allocation would otherwise fail)."""
+        prot = set(protect)
+        evicted = 0
+        while pool.free_blocks < min_free:
+            if self._evict_one(pool, prot) is None:
+                break
+            evicted += 1
+        return evicted
+
+    def clear(self, pool) -> int:
+        """Drop every entry (engine teardown). Returns entries dropped."""
+        n = len(self._entries)
+        for e in self._entries.values():
+            pool.decref(e.block)
+        self._entries.clear()
+        return n
+
+    def holdings(self) -> Dict[int, int]:
+        """block id -> number of pins held by this cache (for
+        ``KVBlockPool.check_invariants(external=...)``)."""
+        out: Dict[int, int] = {}
+        for e in self._entries.values():
+            out[e.block] = out.get(e.block, 0) + 1
+        return out
+
+
+@dataclass
+class _Session:
+    tokens: np.ndarray          # exact consumed token chain, int32
+    blocks: List[int] = field(default_factory=list)
+    last_used: float = 0.0
+
+
+class SessionStore:
+    """Per-session retained chains for multi-turn warm starts."""
+
+    def __init__(self) -> None:
+        self._sessions: Dict[str, _Session] = {}
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._sessions
+
+    def ids(self) -> List[str]:
+        return list(self._sessions)
+
+    def retain(self, sid: str, tokens: np.ndarray, blocks: Sequence[int],
+               pool, now: float) -> None:
+        """Replace the session's retained chain with the just-finished
+        turn's. New blocks are pinned before old pins drop so a block
+        shared between consecutive turns never transits refcount 0."""
+        for b in blocks:
+            pool.incref(b)
+        old = self._sessions.get(sid)
+        if old is not None:
+            for b in old.blocks:
+                pool.decref(b)
+        self._sessions[sid] = _Session(
+            np.asarray(tokens, np.int32).copy(), list(blocks), now)
+
+    def match(self, sid: str, prompt: Sequence[int],
+              now: float) -> Tuple[int, List[int]]:
+        """Longest common prefix (in tokens) between ``prompt`` and the
+        session's retained chain, with the retained blocks backing it.
+        Returns ``(0, [])`` for an unknown session."""
+        s = self._sessions.get(sid)
+        if s is None:
+            return 0, []
+        p = np.asarray(prompt, np.int32)
+        n = min(len(p), len(s.tokens))
+        neq = np.nonzero(p[:n] != s.tokens[:n])[0]
+        m = int(neq[0]) if len(neq) else n
+        s.last_used = now
+        return m, list(s.blocks)
+
+    def drop(self, sid: str, pool) -> int:
+        """Forget a session, dropping its pins. Returns blocks unpinned."""
+        s = self._sessions.pop(sid, None)
+        if s is None:
+            return 0
+        for b in s.blocks:
+            pool.decref(b)
+        return len(s.blocks)
+
+    def expire(self, now: float, ttl: float, pool,
+               protect: Iterable[str] = ()) -> List[str]:
+        """Drop every session idle longer than ``ttl`` seconds (engine
+        clock), except protected (in-flight) ones."""
+        prot = set(protect)
+        stale = [sid for sid, s in self._sessions.items()
+                 if sid not in prot and now - s.last_used >= ttl]
+        for sid in stale:
+            self.drop(sid, pool)
+        return stale
+
+    def evict_until(self, pool, min_free: int,
+                    protect: Iterable[str] = ()) -> int:
+        """Evict idle sessions, LRU first, until ``pool.free_blocks >=
+        min_free`` or none remain. Returns sessions evicted."""
+        prot = set(protect)
+        evicted = 0
+        while pool.free_blocks < min_free:
+            victim, best = None, float("inf")
+            for sid, s in self._sessions.items():
+                if sid not in prot and s.last_used < best:
+                    best = s.last_used
+                    victim = sid
+            if victim is None:
+                break
+            self.drop(victim, pool)
+            evicted += 1
+        return evicted
+
+    def clear(self, pool) -> int:
+        n = len(self._sessions)
+        for sid in list(self._sessions):
+            self.drop(sid, pool)
+        return n
+
+    def holdings(self) -> Dict[int, int]:
+        """block id -> pins held by retained session chains."""
+        out: Dict[int, int] = {}
+        for s in self._sessions.values():
+            for b in s.blocks:
+                out[b] = out.get(b, 0) + 1
+        return out

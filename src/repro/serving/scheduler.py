@@ -58,6 +58,12 @@ class Request:
     wait alone — a request still queued that long after arrival
     finishes with status ``'expired'``. ``status`` is None while the
     request is pending and one of ``STATUSES`` once terminal.
+
+    ``session`` names a multi-turn session (``engine.submit(req,
+    session=sid)`` sets it): on a prefix-cache engine the finished
+    turn's KV blocks stay pinned under that id so the next turn only
+    prefills its delta (serving/prefix_cache.py). At most one request
+    per session may be in flight.
     """
 
     rid: int
@@ -69,6 +75,7 @@ class Request:
     on_token: Optional[Callable[[int, int], None]] = None
     deadline_s: Optional[float] = None
     max_queue_wait_s: Optional[float] = None
+    session: Optional[str] = None      # multi-turn session id (or None)
     generated: List[int] = dataclasses.field(default_factory=list)
     status: Optional[str] = None       # terminal status (see STATUSES)
 

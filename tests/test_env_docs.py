@@ -46,5 +46,6 @@ def test_known_knobs_present():
     drop them while keeping the greps symmetric."""
     doc = _vars_documented()
     for var in ("ICQ_PAGED_ATTN", "ICQ_ACCUM_DTYPE", "ICQ_FUSED_STEP",
-                "ICQ_PREFILL_CHUNK", "ICQ_KV_LAYOUT", "ICQ_FAULT_PLAN"):
+                "ICQ_PREFILL_CHUNK", "ICQ_KV_LAYOUT", "ICQ_FAULT_PLAN",
+                "ICQ_PREFIX_CACHE", "ICQ_SESSION_TTL"):
         assert var in doc

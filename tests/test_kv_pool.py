@@ -110,6 +110,149 @@ def test_pool_rejects_bad_shapes():
 
 
 # ---------------------------------------------------------------------------
+# allocator: refcounted sharing (prefix cache / sessions, ISSUE-8)
+# ---------------------------------------------------------------------------
+
+def _pin_and_release(pool, lane):
+    """The engine's retain-at-finish ritual: pin the lane's chain with
+    one external reference each, *then* release the lane — so the blocks
+    stay live through the hand-off (never transiting refcount 0)."""
+    chain = pool.lane_chain(lane)
+    for b in chain:
+        pool.incref(b)
+    pool.release(lane)
+    return chain
+
+
+def test_pool_external_pin_survives_release():
+    pool = KVBlockPool(num_blocks=8, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    pool.grow(0, 8)                       # 2 blocks
+    chain = _pin_and_release(pool, 0)
+    ext = {b: 1 for b in chain}
+    pool.check_invariants(external=ext)
+    assert pool.used_blocks == len(chain)  # pins alone keep them live
+    # a later lane maps the pinned chain without copying: ref -> 2
+    pool.share(1, chain)
+    assert pool.shared_blocks() == len(chain)
+    pool.check_invariants(external=ext)
+    pool.release(1)
+    pool.check_invariants(external=ext)
+    for b in chain:                       # cache eviction analog
+        pool.decref(b)
+    pool.check_invariants()
+    assert pool.free_blocks == 8
+
+
+def test_pool_cow_fork_remaps_and_preserves_source():
+    pool = KVBlockPool(num_blocks=6, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    pool.grow(0, 8)
+    chain = _pin_and_release(pool, 0)
+    pool.share(1, chain)
+    v = pool.version
+    dst = pool.fork(1, 1)
+    assert dst is not None and dst not in chain
+    assert pool.version > v
+    assert pool.lane_chain(1) == [chain[0], dst]
+    assert pool.table[1, 1] == dst
+    assert pool.refcount(chain[1]) == 1   # only the external pin remains
+    assert pool.refcount(dst) == 1        # lane-private, writable
+    pool.check_invariants(external={b: 1 for b in chain})
+
+
+def test_pool_fork_dry_pool_degrades_via_pop_last():
+    pool = KVBlockPool(num_blocks=2, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=2)
+    pool.grow(0, 8)
+    chain = _pin_and_release(pool, 0)
+    pool.share(1, chain)
+    assert pool.fork(1, 1) is None        # nothing left to fork into
+    assert pool.pop_last(1) == chain[1]   # degrade: drop the tail mapping
+    assert pool.lane_chain(1) == [chain[0]]
+    pool.check_invariants(external={b: 1 for b in chain})
+
+
+def test_pool_refcount_guards():
+    pool = KVBlockPool(num_blocks=4, block_size=2, n_lanes=2,
+                       max_blocks_per_lane=2)
+    with pytest.raises(ValueError):
+        pool.incref(0)                    # pinning a free block = garbage
+    with pytest.raises(ValueError):
+        pool.decref(0)
+    with pytest.raises(ValueError):
+        pool.incref(99)
+    pool.grow(0, 2)
+    b = pool.lane_chain(0)[0]
+    pool.incref(b)
+    assert not pool.decref(b)             # still lane-mapped: not freed
+    assert pool.release(0) == 1
+    assert pool.free_blocks == 4
+    with pytest.raises(ValueError):
+        pool.share(1, [b])                # sharing a freed block
+    pool.grow(0, 2)
+    with pytest.raises(ValueError):
+        pool.share(0, pool.lane_chain(0))  # share into a non-empty lane
+
+
+def _random_share_schedule(pool, rng, steps):
+    """Random grow/release/retain/share/fork/evict schedule mirroring the
+    engine's prefix-cache lifecycle; invariants checked every step."""
+    bs = pool.block_size
+    tokens = [0] * pool.n_lanes
+    external = {}
+    retained = []
+
+    def unpin(chain):
+        for b in reversed(chain):
+            external[b] -= 1
+            if external[b] == 0:
+                del external[b]
+            pool.decref(b)
+
+    for _ in range(steps):
+        op = rng.random()
+        lane = int(rng.integers(pool.n_lanes))
+        if op < 0.25:                              # finish: maybe retain
+            chain = pool.lane_chain(lane)
+            if chain and rng.random() < 0.5:
+                for b in chain:
+                    pool.incref(b)
+                    external[b] = external.get(b, 0) + 1
+                retained.append(chain)
+            pool.release(lane)
+            tokens[lane] = 0
+        elif op < 0.5 and retained and pool.lane_blocks(lane) == 0:
+            chain = retained[int(rng.integers(len(retained)))]
+            k = int(rng.integers(1, len(chain) + 1))
+            k = min(k, pool.max_blocks_per_lane)
+            pool.share(lane, chain[:k])            # warm start
+            tokens[lane] = k * bs
+            if rng.random() < 0.5:                 # mid-block divergence
+                pool.fork(lane, k - 1)
+        elif op < 0.65 and retained:               # eviction analog
+            unpin(retained.pop(int(rng.integers(len(retained)))))
+        else:
+            want = tokens[lane] + int(rng.integers(1, 2 * bs + 1))
+            tokens[lane] = min(want, pool.grow(lane, want))
+        pool.check_invariants(external=external)
+        assert pool.free_blocks + pool.used_blocks == pool.num_blocks
+    for lane in range(pool.n_lanes):
+        pool.release(lane)
+    while retained:
+        unpin(retained.pop())
+    pool.check_invariants()
+    assert pool.free_blocks == pool.num_blocks
+
+
+def test_pool_refcount_invariants_random_share_schedule():
+    rng = np.random.default_rng(3)
+    pool = KVBlockPool(num_blocks=16, block_size=4, n_lanes=4,
+                       max_blocks_per_lane=4)
+    _random_share_schedule(pool, rng, 400)
+
+
+# ---------------------------------------------------------------------------
 # layer-level: paged cache == contiguous cache, bitwise (gqa + mla)
 # ---------------------------------------------------------------------------
 
@@ -392,6 +535,23 @@ except ImportError:                                   # pragma: no cover
 
 
 if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           nb=st.integers(2, 24),
+           bs=st.integers(1, 8),
+           lanes=st.integers(1, 4),
+           width=st.integers(1, 6))
+    def test_property_pool_refcount_conservation(seed, nb, bs, lanes,
+                                                 width):
+        """Any pool geometry, any share/fork/retain/evict schedule:
+        refcounts stay exactly (page-table occurrences + external pins),
+        free-list conservation holds every step, and full unpin + release
+        returns every block."""
+        rng = np.random.default_rng(seed)
+        pool = KVBlockPool(num_blocks=nb, block_size=bs, n_lanes=lanes,
+                           max_blocks_per_lane=width)
+        _random_share_schedule(pool, rng, 120)
+
     @settings(max_examples=30, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1),
            nb=st.integers(1, 8),

@@ -1,0 +1,446 @@
+"""Prefix-cache + multi-turn session subsystem (ISSUE-8): chain-hash
+properties, PrefixCache / SessionStore bookkeeping against a real block
+pool, and the engine-level contract — warm (prefix-cache / session)
+greedy serving is token-identical to cold prefill, through COW forks,
+LRU eviction under pool pressure, preemption, fault recovery, the
+split-step arm and both paged-attention arms.
+
+The contract under test: the caches change *which rows get written*
+(matched prefixes are mapped, never recomputed), but every row a lane
+reads is bitwise the row cold prefill would have produced — so no
+sampled token can tell warm from cold.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import init_model
+from repro.serving import (GenerationEngine, KVBlockPool, PrefixCache,
+                           Request, SessionStore, block_hashes)
+
+ARCH = "llama3.2-1b"
+
+
+def _setup(arch=ARCH):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# chain hashes (no model)
+# ---------------------------------------------------------------------------
+
+def test_block_hashes_commit_to_whole_prefix():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1000, 20).astype(np.int32)
+    b = a.copy()
+    ha, hb = block_hashes(a, 4), block_hashes(b, 4)
+    assert ha == hb and len(ha) == 5          # partial tails never hashed
+    # diverge inside block 2: digests 0-1 unchanged, 2+ all differ (each
+    # digest chains its parent, so one flipped token poisons the suffix)
+    b[9] += 1
+    hb = block_hashes(b, 4)
+    assert hb[:2] == ha[:2]
+    assert all(x != y for x, y in zip(hb[2:], ha[2:]))
+    # same tokens at a different block size share nothing
+    assert set(block_hashes(a, 5)).isdisjoint(ha)
+    # a longer sequence's chain extends its prefix's chain exactly
+    assert block_hashes(a[:12], 4) == ha[:3]
+    assert block_hashes(a, 4, n_blocks=2) == ha[:2]
+    assert block_hashes(a[:3], 4) == []       # no full block yet
+    with pytest.raises(ValueError):
+        block_hashes(a, 0)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache / SessionStore bookkeeping (real pool, no model)
+# ---------------------------------------------------------------------------
+
+def _grown_chain(pool, lane, n_tokens):
+    pool.grow(lane, n_tokens)
+    chain = pool.lane_chain(lane)
+    for b in chain:                 # retain-at-finish: pin THEN release
+        pool.incref(b)
+    pool.release(lane)
+    return chain
+
+
+def test_prefix_cache_insert_match_dedupe_evict():
+    pool = KVBlockPool(num_blocks=12, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    cache = PrefixCache()
+    toks = np.arange(16, dtype=np.int32)
+    hashes = block_hashes(toks, 4)
+    chain = _grown_chain(pool, 0, 16)
+    assert cache.insert(hashes, chain, pool, now=1.0) == 4
+    for b in chain:                 # hand-off pins drop; cache pins stay
+        pool.decref(b)
+    pool.check_invariants(external=cache.holdings())
+    # re-inserting the same chain (another request, same prefix) is a
+    # refresh, not a double-pin
+    chain2 = _grown_chain(pool, 1, 16)
+    assert cache.insert(hashes, chain2, pool, now=2.0) == 0
+    for b in chain2:                # second copy's pins drop; first stays
+        pool.decref(b)
+    assert cache.match(hashes, now=3.0) == chain
+    assert cache.match(block_hashes(toks[:9], 4), now=3.0) == chain[:2]
+    miss = block_hashes(toks + 1, 4)
+    assert cache.match(miss, now=3.0) == []
+    # leaf-first LRU: eviction removes from the tail inward, and a
+    # protected block is skipped
+    freed_before = pool.free_blocks
+    assert cache.evict_until(pool, min_free=freed_before + 2,
+                             protect=(chain[0],)) == 2
+    assert len(cache) == 2
+    assert cache.match(hashes, now=4.0) == chain[:2]
+    assert cache.clear(pool) == 2
+    pool.check_invariants()
+    assert pool.free_blocks == 12
+
+
+def test_session_store_retain_match_expire_evict():
+    pool = KVBlockPool(num_blocks=12, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    store = SessionStore()
+    t1 = np.arange(10, dtype=np.int32)
+    c1 = _grown_chain(pool, 0, 10)
+    store.retain("a", t1, c1, pool, now=1.0)
+    for b in c1:                    # the engine's temporary pins drop
+        pool.decref(b)
+    pool.check_invariants(external=store.holdings())
+    # next turn extends the history: common prefix is the whole chain
+    prompt = np.concatenate([t1, np.array([7, 8, 9], np.int32)])
+    m, blocks = store.match("a", prompt, now=2.0)
+    assert m == 10 and blocks == c1
+    # a diverging prompt matches only up to the first different token
+    bad = prompt.copy()
+    bad[4] = 999
+    m, _ = store.match("a", bad, now=2.0)
+    assert m == 4
+    assert store.match("ghost", prompt, now=2.0) == (0, [])
+    # re-retaining an overlapping chain never lets shared blocks transit
+    # refcount 0 (pin-new-before-unpin-old)
+    c2 = list(c1)                   # same physical blocks, turn 2
+    for b in c2:
+        pool.incref(b)
+    store.retain("a", prompt, c2, pool, now=3.0)
+    for b in c2:
+        pool.decref(b)
+    pool.check_invariants(external=store.holdings())
+    # TTL expiry honors protection (in-flight sessions)
+    c3 = _grown_chain(pool, 1, 8)
+    store.retain("b", np.arange(8, dtype=np.int32), c3, pool, now=4.0)
+    for b in c3:
+        pool.decref(b)
+    assert store.expire(now=100.0, ttl=50.0, pool=pool,
+                        protect=("a",)) == ["b"]
+    assert "a" in store and "b" not in store
+    # LRU eviction under pressure
+    assert store.evict_until(pool, min_free=pool.num_blocks) == 1
+    assert len(store) == 0
+    pool.check_invariants()
+    assert pool.free_blocks == 12
+
+
+# ---------------------------------------------------------------------------
+# engine-level: warm == cold, token for token
+# ---------------------------------------------------------------------------
+
+def _mixed_after_system(cfg, n, system_len=12, seed=0):
+    """n requests sharing one system prompt, each with a distinct tail."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size, system_len).astype(np.int32)
+    specs = []
+    for rid in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(2, 7))).astype(np.int32)
+        specs.append(dict(rid=rid,
+                          prompt=np.concatenate([system, tail]),
+                          max_new_tokens=int(rng.integers(2, 6))))
+    return specs
+
+
+def _run(params, cfg, specs, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("kv_block_size", 4)
+    eng = GenerationEngine(params, cfg, mode="continuous", **kw)
+    for s in specs:
+        eng.submit(Request(**{k: (v.copy() if k == "prompt" else v)
+                              for k, v in s.items()}))
+    out = {rid: r.generated for rid, r in eng.run().items()}
+    return out, eng
+
+
+def test_engine_cross_request_prefix_parity():
+    """More requests than lanes, all sharing a system prompt: later
+    admissions must hit the chains earlier finishers inserted — and emit
+    exactly the tokens a cold engine emits."""
+    cfg, params = _setup()
+    specs = _mixed_after_system(cfg, 6)
+    out_cold, _ = _run(params, cfg, specs, prefix_cache=False)
+    out_warm, eng = _run(params, cfg, specs, prefix_cache=True)
+    assert out_warm == out_cold
+    s = eng.metrics.summary()
+    assert s["prefix_hits"] >= 1 and s["prefix_hit_rate"] > 0
+    assert s["prefix_tokens_skipped"] > 0
+    eng.check_shutdown_invariants()
+    # cached chains still pin blocks after the run; clearing returns the
+    # pool to fully free
+    assert eng._pool.free_blocks < eng._pool.num_blocks
+    assert eng.clear_prefix_cache() > 0
+    assert eng._pool.free_blocks == eng._pool.num_blocks
+    eng._pool.check_invariants()
+
+
+def test_engine_session_multiturn_parity_and_cow_fork():
+    """2 sessions x 3 turns: turn 2+ warm-starts mid-block from the
+    retained chain (a COW fork), and every turn's greedy output matches
+    a cold engine fed the identical prompt."""
+    cfg, params = _setup()
+    kw = dict(batch_size=2, max_len=64, mode="continuous",
+              kv_layout="paged", kv_block_size=4, prefill_chunk=8)
+    warm = GenerationEngine(params, cfg, prefix_cache=True, **kw)
+    cold = GenerationEngine(params, cfg, prefix_cache=False, **kw)
+    rng = np.random.default_rng(5)
+    system = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    history = {sid: system.copy() for sid in range(2)}
+    rid = 0
+    for turn in range(3):
+        reqs = []
+        for sid in range(2):
+            user = rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(3, 7))).astype(np.int32)
+            prompt = np.concatenate([history[sid], user])
+            reqs.append((rid, sid, prompt))
+            rid += 1
+        for r, sid, prompt in reqs:
+            warm.submit(Request(r, prompt.copy(), max_new_tokens=4,
+                                arrival_time=warm.now()),
+                        session=f"s{sid}")
+            cold.submit(Request(r, prompt.copy(), max_new_tokens=4,
+                                arrival_time=cold.now()))
+        dw, dc = warm.run(), cold.run()
+        for r, sid, prompt in reqs:
+            assert dw[r].generated == dc[r].generated, (
+                f"warm vs cold diverged: session {sid} turn {turn}")
+            history[sid] = np.concatenate(
+                [prompt, np.asarray(dw[r].generated, np.int32)])
+    s = warm.metrics.summary()
+    assert s["session_hits"] >= 2          # every turn-2+ warm-started
+    assert s["cow_forks"] >= 1             # histories are not block-aligned
+    assert s["prefix_tokens_skipped"] > 0
+    assert s["sessions_active"] == 2
+    warm.check_shutdown_invariants()
+    assert warm.clear_prefix_cache() > 0
+    assert warm._pool.free_blocks == warm._pool.num_blocks
+
+
+def test_engine_prefix_parity_under_preemption():
+    """A pool too small for both long-running lanes: preemption +
+    prefix reuse together must still reproduce the contiguous stream."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    specs = [dict(rid=r,
+                  prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                  max_new_tokens=16) for r in range(2)]
+    out_c, _ = _run(params, cfg, specs, kv_layout="contiguous")
+    out_p, eng = _run(params, cfg, specs, prefix_cache=True, kv_blocks=6)
+    assert eng.metrics.preemptions >= 1, \
+        "pool was large enough that nothing was preempted — bad fixture"
+    assert out_p == out_c
+    eng.check_shutdown_invariants()
+
+
+def test_engine_prefix_eviction_under_pool_pressure():
+    """Retained chains fill the pool; admitting fresh distinct prompts
+    must evict cached chains (never preempt a running lane for them) and
+    still serve every request with cold-identical tokens."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(9)
+    specs = [dict(rid=r,
+                  prompt=rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(8, 13))
+                                      ).astype(np.int32),
+                  max_new_tokens=4) for r in range(6)]
+    out_cold, _ = _run(params, cfg, specs, prefix_cache=False,
+                       kv_blocks=10)
+    out_warm, eng = _run(params, cfg, specs, prefix_cache=True,
+                         kv_blocks=10)
+    assert out_warm == out_cold
+    s = eng.metrics.summary()
+    assert s["prefix_evictions"] >= 1, \
+        "pool pressure never evicted a cached chain — bad fixture"
+    eng.check_shutdown_invariants()
+
+
+def test_engine_prefix_parity_split_step_and_faults():
+    """Warm serving with the split (unfused) step under a fault plan:
+    ok-status streams still match the cold no-fault run."""
+    from repro.serving.faults import FaultInjector, parse_fault_plan
+
+    cfg, params = _setup()
+    specs = _mixed_after_system(cfg, 4, seed=2)
+    out_cold, _ = _run(params, cfg, specs, prefix_cache=False,
+                       prefill_chunk=4)
+    out_warm, eng = _run(params, cfg, specs, prefix_cache=True,
+                         prefill_chunk=4, fused_step=False,
+                         faults=FaultInjector(parse_fault_plan("2:nan")))
+    done = {rid: r for rid, r in eng.completed.items()}
+    for rid, r in done.items():
+        if r.status == "ok":
+            assert out_warm[rid] == out_cold[rid]
+    assert eng.metrics.summary()["degraded_steps"] >= 1
+    eng.check_shutdown_invariants()
+
+
+@pytest.mark.parametrize("arm", ["xla", "pallas"])
+def test_engine_prefix_parity_both_paged_attn_arms(arm, monkeypatch):
+    """Warm == cold on each paged-attention arm (the Pallas in-kernel
+    page-table walk runs in interpret mode on CPU)."""
+    monkeypatch.setenv("ICQ_PAGED_ATTN", arm)
+    cfg, params = _setup()
+    specs = _mixed_after_system(cfg, 3, system_len=8, seed=3)
+    out_cold, _ = _run(params, cfg, specs, prefix_cache=False)
+    out_warm, eng = _run(params, cfg, specs, prefix_cache=True)
+    assert out_warm == out_cold
+    assert eng.metrics.summary()["prefix_hits"] >= 1
+    eng.check_shutdown_invariants()
+
+
+def test_engine_session_ttl_expiry():
+    """session_ttl=0 deterministically expires an idle session at the
+    next lifecycle pass; its blocks return to the pool."""
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", kv_layout="paged",
+                           kv_block_size=4, prefix_cache=True,
+                           session_ttl=0.0)
+    rng = np.random.default_rng(4)
+    p1 = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng.submit(Request(0, p1, max_new_tokens=3), session="chat")
+    eng.run()
+    assert len(eng._sessions) == 1
+    # any later run's lifecycle pass sweeps the now-idle session
+    p2 = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    eng.submit(Request(1, p2, max_new_tokens=3))
+    eng.run()
+    assert len(eng._sessions) == 0
+    assert eng.metrics.summary()["session_expiries"] >= 1
+    eng.check_shutdown_invariants()
+    eng.clear_prefix_cache()
+    assert eng._pool.free_blocks == eng._pool.num_blocks
+
+
+def test_engine_session_api_validation():
+    cfg, params = _setup()
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", kv_layout="paged",
+                           kv_block_size=4, prefix_cache=False)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        eng.submit(Request(0, np.zeros(4, np.int32), max_new_tokens=2),
+                   session="chat")
+    warm = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                            mode="continuous", kv_layout="paged",
+                            kv_block_size=4, prefix_cache=True)
+    warm.submit(Request(0, np.zeros(4, np.int32), max_new_tokens=2),
+                session="chat")
+    with pytest.raises(ValueError, match="in flight"):
+        warm.submit(Request(1, np.zeros(4, np.int32), max_new_tokens=2),
+                    session="chat")
+
+
+def test_engine_prefix_cache_gating():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="continuous", kv_layout="contiguous",
+                         prefix_cache=True)
+    ssm_cfg, ssm_params = _setup("mamba2-130m")
+    with pytest.raises((NotImplementedError, ValueError)):
+        GenerationEngine(ssm_params, ssm_cfg, batch_size=2, max_len=16,
+                         mode="continuous", kv_layout="paged",
+                         prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# env knobs + block-size autotune
+# ---------------------------------------------------------------------------
+
+def test_prefix_env_knob_parsing(monkeypatch):
+    from repro.serving.engine import (default_kv_block_size,
+                                      default_prefix_cache,
+                                      default_session_ttl)
+
+    monkeypatch.delenv("ICQ_PREFIX_CACHE", raising=False)
+    monkeypatch.delenv("ICQ_SESSION_TTL", raising=False)
+    assert default_prefix_cache() is False
+    assert default_session_ttl() == 300.0
+    monkeypatch.setenv("ICQ_PREFIX_CACHE", "1")
+    assert default_prefix_cache() is True
+    monkeypatch.setenv("ICQ_PREFIX_CACHE", "off")
+    assert default_prefix_cache() is False
+    monkeypatch.setenv("ICQ_PREFIX_CACHE", "")    # empty = unset
+    assert default_prefix_cache() is False
+    monkeypatch.setenv("ICQ_PREFIX_CACHE", "banana")
+    with pytest.raises(ValueError):
+        default_prefix_cache()
+    monkeypatch.setenv("ICQ_SESSION_TTL", "0")
+    assert default_session_ttl() == 0.0
+    monkeypatch.setenv("ICQ_SESSION_TTL", "2.5")
+    assert default_session_ttl() == 2.5
+    monkeypatch.setenv("ICQ_SESSION_TTL", "-1")
+    with pytest.raises(ValueError):
+        default_session_ttl()
+    monkeypatch.setenv("ICQ_SESSION_TTL", "soon")
+    with pytest.raises(ValueError):
+        default_session_ttl()
+    monkeypatch.setenv("ICQ_KV_BLOCK_SIZE", "auto")
+    assert default_kv_block_size() == "auto"
+
+
+def test_kv_block_size_autotune_roundtrip(tmp_path, monkeypatch):
+    from repro.kernels.autotune import (autotune_kv_block_size,
+                                        kv_block_size_for)
+
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    assert kv_block_size_for(64) is None        # cold cache
+    # block-multiple lengths at a long cap: large blocks win (table
+    # overhead dominates, zero fragmentation)
+    res = autotune_kv_block_size([512] * 8, 512)
+    assert res["block_size"] in (32, 64) and res["cached"] is False
+    assert kv_block_size_for(512) == res["block_size"]
+    again = autotune_kv_block_size([512] * 8, 512)
+    assert again["cached"] is True
+    assert again["block_size"] == res["block_size"]
+    # short ragged lengths at the same cap would fragment big blocks;
+    # a different cap gets its own cache key
+    res16 = autotune_kv_block_size([3, 5, 2, 7], 64)
+    assert res16["block_size"] <= 8
+    assert kv_block_size_for(64) == res16["block_size"]
+    with pytest.raises(ValueError):
+        autotune_kv_block_size([], 64)
+    with pytest.raises(ValueError):
+        autotune_kv_block_size([4], 0)
+
+
+def test_engine_resolves_auto_block_size(tmp_path, monkeypatch):
+    from repro.kernels.autotune import autotune_kv_block_size
+
+    monkeypatch.setenv("ICQ_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg, params = _setup()
+    # a miss falls back to the static default
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                           mode="continuous", kv_layout="paged",
+                           kv_block_size="auto")
+    assert eng.kv_block_size == 16
+    res = autotune_kv_block_size([8, 12, 6, 9], 32)
+    eng2 = GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                            mode="continuous", kv_layout="paged",
+                            kv_block_size="auto")
+    assert eng2.kv_block_size == res["block_size"]
