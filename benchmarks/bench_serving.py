@@ -51,9 +51,23 @@ a no-fault run of the same workload, recovery actually engaged
 (``degraded_steps >= 1``) and the engine shuts down with its pool and
 scheduler invariants intact.
 
+A sixth **replica-failover trace** runs the service layer itself: two
+supervised ``EngineReplica`` workers behind a ``ReplicaRouter`` with a
+WAL attached, one replica hard-killed mid-decode by a token-stream
+chaos trigger. It asserts the service contract: every request
+terminates exactly once with a typed status, failover actually engaged
+(``failovers >= 1``, ``replica_restarts >= 1``,
+``duplicate_terminals == 0``), every surviving greedy stream is
+token-identical to a single-engine no-failure run, and the reopened
+journal shows no pending requests.
+
 Structured result lands in BENCH_serving.json via ``benchmarks/run.py``.
 """
 from __future__ import annotations
+
+import os
+import tempfile
+import time
 
 import jax
 import numpy as np
@@ -62,7 +76,8 @@ from benchmarks.common import emit
 from repro.configs import get_config, smoke_variant
 from repro.launch.quantize import quantize_tree
 from repro.models import init_model
-from repro.serving import GenerationEngine, Request
+from repro.serving import (EngineReplica, GenerationEngine, ReplicaRouter,
+                           Request, RequestWAL, ServiceMetrics)
 from repro.serving.faults import FaultInjector, parse_fault_plan
 from repro.serving.scheduler import STATUSES
 
@@ -136,6 +151,17 @@ MT_BLOCKS = 60                  # 240 pooled rows < 3 * 96 = 288 contiguous
 FAULT_STORM_PLAN = "3:nan,7:raise,15:alloc"
 FAULT_CANCEL_RID = 3            # a long request: cancelled mid-decode
 FAULT_CANCEL_AFTER = 3          # ...after it has streamed this many tokens
+
+# replica-failover trace: the service layer (router + supervised
+# replica workers + WAL) with one replica hard-killed mid-decode. Small
+# on purpose — every replica engine (and each restart) pays a fresh
+# jit compile, so the trace demonstrates the failover contract rather
+# than throughput.
+FAILOVER_REPLICAS = 2
+FAILOVER_BATCH = 2
+FAILOVER_N_REQUESTS = 6
+FAILOVER_MAX_NEW = 6
+FAILOVER_KILL_AFTER = 5         # streamed tokens before r0 is killed
 
 
 def _workload(cfg, seed: int = 0):
@@ -299,6 +325,117 @@ def _run_fault_storm(params, cfg) -> dict:
     row["status_counts"] = eng.metrics.status_counts()
     row["fault_kinds"] = dict(eng.metrics.faults)
     row["ok_parity"] = True
+    return row
+
+
+def _run_replica_failover(params, cfg) -> dict:
+    """Single-engine no-failure baseline, then the same workload through
+    two supervised replicas with r0 hard-killed mid-decode. Returns the
+    bench row; raises AssertionError if the service contract breaks."""
+    rng = np.random.default_rng(5)
+    specs = [dict(
+        rid=rid,
+        prompt=rng.integers(
+            0, cfg.vocab_size, int(rng.integers(4, 9))).astype(np.int32),
+        max_new_tokens=FAILOVER_MAX_NEW,
+    ) for rid in range(FAILOVER_N_REQUESTS)]
+
+    def factory():
+        return GenerationEngine(
+            params, cfg, batch_size=FAILOVER_BATCH, max_len=MAX_LEN,
+            weight_cache="prepared", runtime_fmt="v2", mode="continuous")
+
+    base_eng = factory()
+    for s in specs:
+        base_eng.submit(Request(arrival_time=0.0, **s))
+    base = base_eng.run()
+    base_eng.check_shutdown_invariants()
+    base_tokens = {rid: r.generated for rid, r in base.items()}
+
+    metrics = ServiceMetrics()
+    wal_path = os.path.join(
+        tempfile.mkdtemp(prefix="icq-bench-wal-"), "requests.wal")
+    wal = RequestWAL(wal_path)
+    replicas = [EngineReplica(f"r{i}", factory, heartbeat_s=0.05)
+                for i in range(FAILOVER_REPLICAS)]
+    router = ReplicaRouter(replicas, wal=wal, metrics=metrics)
+    chaos = {"streamed": 0, "killed": False}
+
+    def kill_mid_decode(rid, tok):
+        chaos["streamed"] += 1
+        if chaos["streamed"] == FAILOVER_KILL_AFTER and not chaos["killed"]:
+            chaos["killed"] = True
+            router.kill("r0")
+
+    router.token_observer = kill_mid_decode
+    t0 = time.perf_counter()
+    router.start()
+    for s in specs:
+        router.submit(Request(arrival_time=0.0, **s))
+    give_up = time.monotonic() + 600.0
+    while router.pending and time.monotonic() < give_up:
+        router.supervise()
+        time.sleep(0.02)
+    router.supervise()
+    wall = time.perf_counter() - t0
+    done = router.results()
+    router.stop()
+    router.check_shutdown_invariants()
+    wal.close()
+
+    all_rids = {s["rid"] for s in specs}
+    if set(done) != all_rids:
+        raise AssertionError(
+            f"replica_failover: requests lost "
+            f"({sorted(all_rids - set(done))}) or invented "
+            f"({sorted(set(done) - all_rids)})")
+    if not chaos["killed"]:
+        raise AssertionError(
+            "replica_failover: chaos trigger never fired — the trace "
+            "is not exercising the kill path")
+    bad = {rid: st for rid, (st, _) in done.items() if st != "ok"}
+    if bad:
+        raise AssertionError(
+            f"replica_failover: non-ok terminal statuses {bad}")
+    # failover replays must continue the greedy streams token-exactly:
+    # fold-into-prompt recovery that changes tokens is corruption
+    mismatched = [rid for rid, (st, toks) in done.items()
+                  if toks != base_tokens[rid]]
+    if mismatched:
+        raise AssertionError(
+            f"replica_failover: ok-status streams diverged from the "
+            f"no-failure run for rids {mismatched}")
+    if metrics.failovers < 1 or metrics.replica_restarts < 1:
+        raise AssertionError(
+            f"replica_failover: kill did not engage recovery "
+            f"(failovers={metrics.failovers}, "
+            f"restarts={metrics.replica_restarts})")
+    if metrics.duplicate_terminals:
+        raise AssertionError(
+            f"replica_failover: {metrics.duplicate_terminals} duplicate "
+            f"terminal(s) — exactly-once broken")
+    reopened = RequestWAL(wal_path)
+    wal_pending_after = len(reopened.pending)
+    wal_completed = len(reopened.completed)
+    reopened.close()
+    if wal_pending_after:
+        raise AssertionError(
+            f"replica_failover: reopened WAL still has "
+            f"{wal_pending_after} pending request(s)")
+    if set(reopened.completed) != all_rids:
+        raise AssertionError(
+            "replica_failover: WAL terminal records do not cover the "
+            "workload")
+
+    row = {k: (round(v, 4) if v == v else None)
+           for k, v in metrics.summary().items()}
+    row.update(
+        wall_s=round(wall, 4), requests=FAILOVER_N_REQUESTS,
+        replicas=FAILOVER_REPLICAS, kill_after=FAILOVER_KILL_AFTER,
+        status_counts=dict(metrics.status_counts),
+        ok_parity=True, wal_pending_after=wal_pending_after,
+        wal_completed=wal_completed,
+    )
     return row
 
 
@@ -647,6 +784,24 @@ def run() -> dict:
         f"degraded_steps={int(storm['degraded_steps'])};"
         f"replays={int(storm['replays'])};"
         f"ok_parity={storm['ok_parity']}",
+    )
+
+    # ---- replica-failover trace: router + supervised replicas ---------
+    fo = _run_replica_failover(qparams, cfg)
+    out["replica_failover"] = dict(
+        replicas=FAILOVER_REPLICAS, requests=FAILOVER_N_REQUESTS,
+        kill_after=FAILOVER_KILL_AFTER, row=fo,
+    )
+    emit(
+        "serving/replica_failover",
+        fo["wall_s"] * 1e6,
+        f"failovers={int(fo['failovers'])};"
+        f"restarts={int(fo['replica_restarts'])};"
+        f"kills={int(fo['replica_kills'])};"
+        f"dup_terminals={int(fo['duplicate_terminals'])};"
+        f"statuses={fo['status_counts']};"
+        f"ok_parity={fo['ok_parity']};"
+        f"wal_pending_after={fo['wal_pending_after']}",
     )
     return out
 

@@ -12,6 +12,7 @@ warning (``--strict-len`` rejects those too instead of truncating).
 from __future__ import annotations
 
 import argparse
+import signal
 
 import numpy as np
 
@@ -20,6 +21,186 @@ from repro.launch.quantize import quantize_tree
 from repro.launch.train import train
 from repro.serving import GenerationEngine, Request, SamplingParams
 from repro.serving.faults import FaultInjector, parse_fault_plan
+
+
+def _install_engine_signals(engine) -> None:
+    """Graceful drain on SIGINT/SIGTERM (in-process engine path): the
+    first signal refuses new admissions and lets in-flight lanes finish
+    with their usual typed statuses; a second signal cancels everything
+    still pending (typed 'cancelled'). Either way the final
+    status-count ledger prints with exactly one status per rid."""
+    state = {"n": 0}
+
+    def handler(signum, frame):
+        state["n"] += 1
+        if state["n"] == 1:
+            print(f"[serve] signal {signum}: draining (no new admissions; "
+                  f"in-flight lanes finish)", flush=True)
+            engine.request_drain()
+        else:
+            print(f"[serve] signal {signum}: cancelling pending requests",
+                  flush=True)
+            for rid in list(engine.metrics.requests):
+                if rid not in engine.completed:
+                    try:
+                        engine.cancel(rid)
+                    except KeyError:
+                        pass
+
+    signal.signal(signal.SIGINT, handler)
+    signal.signal(signal.SIGTERM, handler)
+
+
+def _install_service_signals(svc) -> None:
+    """Same drain contract for the replica service: first signal drains
+    (frontend refuses submits, replicas finish in-flight work, WAL
+    records go terminal), second cancels everything still pending."""
+    state = {"n": 0}
+
+    def handler(signum, frame):
+        state["n"] += 1
+        if state["n"] == 1:
+            print(f"[serve] signal {signum}: draining (no new admissions; "
+                  f"in-flight lanes finish)", flush=True)
+            svc.begin_drain()
+        else:
+            print(f"[serve] signal {signum}: cancelling pending requests",
+                  flush=True)
+            for rid, (status, _) in svc.router.results().items():
+                if status is None:
+                    try:
+                        svc.router.cancel(rid)
+                    except KeyError:
+                        pass
+
+    signal.signal(signal.SIGINT, handler)
+    signal.signal(signal.SIGTERM, handler)
+
+
+def _serve_replicas(args, params, cfg, sampling):
+    """Replica-service path (--replicas N): WAL + N supervised engine
+    replicas + router + TCP frontend, driven through the retrying
+    client — the full resilient-serving stack end to end."""
+    from repro.serving import (FrontendUnavailable, RequestRejected,
+                               ServingClient, ServingService)
+    from repro.serving.wal import default_wal_path
+
+    if args.sessions:
+        raise SystemExit("[serve] the --sessions workload is in-process "
+                         "only; drop --replicas")
+    if args.mode == "wave":
+        raise SystemExit("[serve] --replicas requires the continuous "
+                         "engine; drop --mode wave")
+    if args.temperature > 0:
+        raise SystemExit("[serve] the TCP frontend serves greedy requests; "
+                         "drop --temperature")
+
+    def factory():
+        faults = None
+        if args.fault_plan is not None or args.fault_rate is not None:
+            # one injector per engine: a restarted replica gets a fresh
+            # (deterministic) schedule, not a half-consumed one
+            faults = FaultInjector(
+                parse_fault_plan(args.fault_plan) if args.fault_plan
+                else None,
+                seed=args.fault_seed if args.fault_seed is not None else 0,
+                rate=args.fault_rate if args.fault_rate is not None else 0.0)
+        return GenerationEngine(
+            params, cfg, batch_size=args.batch, max_len=args.max_len,
+            weight_cache=args.weight_cache, runtime_fmt=args.runtime_fmt,
+            mode="continuous", sampling=sampling, seed=args.seed,
+            prefill_chunk=args.prefill_chunk, kv_layout=args.kv_layout,
+            kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks,
+            max_queue=args.max_queue, shed_policy=args.shed_policy,
+            faults=faults, degrade_steps=args.degrade_steps,
+            prefix_cache=args.prefix_cache, session_ttl=args.session_ttl)
+
+    wal_path = args.wal if args.wal is not None else default_wal_path()
+    svc = ServingService(factory, n_replicas=args.replicas,
+                         wal_path=wal_path, max_pending=args.max_pending,
+                         supervise_s=0.05)
+    host, port = svc.start()
+    _install_service_signals(svc)
+    print(f"[serve] frontend: {args.replicas} replicas on {host}:{port}"
+          + (f", wal={wal_path}" if wal_path else ""))
+    if svc.replayed:
+        print(f"[serve] WAL replay: {svc.replayed} unfinished request(s) "
+              f"resubmitted")
+
+    if args.kill_replica:
+        idx, after = args.kill_replica.split(":")
+        name, threshold = f"r{int(idx)}", int(after)
+        fired = [False]
+
+        def trigger(rid, tok):
+            if not fired[0] and svc.metrics.tokens_streamed >= threshold:
+                fired[0] = True
+                print(f"[serve] KILL {name} after {threshold} streamed "
+                      f"tokens (mid-decode)", flush=True)
+                svc.router.kill(name)
+
+        svc.router.token_observer = trigger
+
+    cli = ServingClient(host, port)
+    cli.metrics = svc.metrics     # client retries land in the ledger
+    rng = np.random.default_rng(args.seed)
+    rids, prompt_lens = [], {}
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(4, 12)).astype(np.int32)
+        max_new = args.max_new
+        budget = len(prompt) + max_new
+        if len(prompt) >= args.max_len:
+            print(f"[serve] REJECT req {i}: prompt length {len(prompt)} "
+                  f">= max_len {args.max_len}")
+            continue
+        if budget > args.max_len:
+            if args.strict_len:
+                print(f"[serve] REJECT req {i}: over budget (--strict-len)")
+                continue
+            max_new = args.max_len - len(prompt)
+        try:
+            rid = cli.submit([int(t) for t in prompt],
+                             max_new_tokens=max_new,
+                             deadline_s=args.deadline,
+                             max_queue_wait_s=args.max_queue_wait)
+            rids.append(rid)
+            prompt_lens[rid] = len(prompt)
+        except RequestRejected as e:
+            print(f"[serve] REJECT req {i}: {e}")
+        except FrontendUnavailable as e:
+            print(f"[serve] SHED req {i}: {e}")
+
+    results = {}
+    for rid in rids:
+        try:
+            results[rid] = cli.wait(rid, timeout=600.0)
+        except TimeoutError as e:
+            results[rid] = ("failed", [])
+            print(f"[serve] TIMEOUT waiting on req {rid}: {e}")
+    for rid in sorted(results):
+        status, tokens = results[rid]
+        print(f"[serve] req {rid}: prompt_len={prompt_lens.get(rid)} "
+              f"generated={tokens} status={status}")
+
+    svc.begin_drain()
+    svc.shutdown()
+    svc.check_shutdown_invariants()
+    m = svc.metrics.summary()
+    print(f"[serve] service: {args.replicas} replicas, "
+          f"failovers={int(m['failovers'])}, "
+          f"restarts={int(m['replica_restarts'])}, "
+          f"kills={int(m['replica_kills'])}, "
+          f"retries={int(m['retries'])}, "
+          f"sheds={int(m['frontend_sheds'])}, "
+          f"duplicate_terminals={int(m['duplicate_terminals'])}, "
+          f"wal_replayed={int(m['wal_replayed'])}, "
+          f"heartbeat age max {m['heartbeat_age_max']:.2f}s, "
+          f"peak pending {int(m['peak_pending'])}")
+    counts = {k[len("status_"):]: int(v) for k, v in m.items()
+              if k.startswith("status_")}
+    statuses = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[serve] statuses: {statuses or 'none'}")
 
 
 def main():
@@ -127,6 +308,27 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=12,
                     help="shared system-prompt length in tokens for the "
                          "--sessions workload (default 12)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through the resilient service layer: this "
+                         "many supervised engine replicas behind the TCP "
+                         "frontend + router (WAL-journaled, failover on "
+                         "replica death), driven by the retrying client. "
+                         "0 (default) = the in-process engine path, "
+                         "bit-for-bit the pre-service behavior")
+    ap.add_argument("--wal", default=None,
+                    help="request-journal path for --replicas (default "
+                         "ICQ_WAL_PATH / no journal); an existing journal "
+                         "is recovered and its unfinished requests "
+                         "replayed before new traffic")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="frontend backpressure bound for --replicas: shed "
+                         "submits (retryable) beyond this many pending "
+                         "requests (default: unbounded)")
+    ap.add_argument("--kill-replica", default=None, metavar="I:N",
+                    help="chaos drill for --replicas: hard-kill replica I "
+                         "once N tokens have streamed service-wide "
+                         "(mid-decode); supervision must fail its "
+                         "requests over and restart it")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -165,6 +367,8 @@ def main():
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
+    if args.replicas:
+        return _serve_replicas(args, params, cfg, sampling)
     faults = None
     if args.fault_plan is not None or args.fault_rate is not None:
         faults = FaultInjector(
@@ -196,6 +400,7 @@ def main():
     print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
           f"prefill_chunk={engine.prefill_chunk}, "
           f"fused_step={engine.fused_step}, kv={kv_desc})")
+    _install_engine_signals(engine)
 
     rng = np.random.default_rng(args.seed)
     if args.sessions:

@@ -72,28 +72,71 @@ so the next turn of a chat warm-starts mid-block. Warm greedy output is
 token-identical to cold-prefill serving (same same-arm caveat as
 chunked prefill; CI pins it, preemption and fault storms included):
 cached rows are bitwise the rows cold prefill would have written.
+
+Service layer (frontend -> router -> replicas)
+----------------------------------------------
+
+Above the engine sits a crash-survivable service (``docs/SERVING.md``):
+``wal.RequestWAL`` journals every accepted submit and terminal
+transition (JSONL + per-record crc32, torn-tail tolerant) so a cold
+restart replays exactly the unfinished requests; ``replica.
+EngineReplica`` runs each engine in a supervised worker thread with
+heartbeats and watchdog-driven hang detection, and can be hard-killed
+and restarted with a fresh engine; ``router.ReplicaRouter`` routes
+least-loaded with session affinity and **fails over** a dead replica's
+in-flight requests by folding their streamed tokens into the prompt
+(greedy continuation token-identical, same guarantee as
+preempt-and-requeue), keeping the exactly-once typed-status contract
+service-wide; ``frontend.ServingFrontend`` is an asyncio TCP surface
+(submit/poll/stream/cancel/health/drain, newline-delimited JSON) with
+bounded-queue backpressure and deadline propagation, and
+``frontend.ServingClient`` retries retryable conditions (shed, replica
+down) with capped exponential backoff while surfacing terminal ones
+(rejected, draining) immediately. ``ServiceMetrics`` ledgers
+failovers/restarts/retries/sheds/heartbeat age. The hooks the service
+uses (``engine.on_iteration``, ``engine.request_drain()``) are inert by
+default: an engine used directly behaves bit-for-bit as before.
 """
 from repro.serving.engine import GenerationEngine, make_serving_step
 from repro.serving.faults import FaultInjected, FaultInjector, parse_fault_plan
+from repro.serving.frontend import (ClientError, FrontendUnavailable,
+                                    RequestRejected, ServingClient,
+                                    ServingFrontend, ServingService)
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import (MetricsCollector, RequestMetrics,
-                                   StepTimeWatchdog)
+                                   ServiceMetrics, StepTimeWatchdog)
 from repro.serving.prefix_cache import (PrefixCache, SessionStore,
                                         block_hashes)
+from repro.serving.replica import EngineReplica, ReplicaDead, ReplicaKilled
+from repro.serving.router import NoReplicaAvailable, ReplicaRouter
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import STATUSES, Request, Slot, SlotScheduler
+from repro.serving.wal import RequestWAL
 
 __all__ = [
     "GenerationEngine",
     "GREEDY",
+    "ClientError",
+    "EngineReplica",
     "FaultInjected",
     "FaultInjector",
+    "FrontendUnavailable",
     "KVBlockPool",
     "MetricsCollector",
+    "NoReplicaAvailable",
     "PrefixCache",
+    "ReplicaDead",
+    "ReplicaKilled",
+    "ReplicaRouter",
     "Request",
     "RequestMetrics",
+    "RequestRejected",
+    "RequestWAL",
     "STATUSES",
+    "ServiceMetrics",
+    "ServingClient",
+    "ServingFrontend",
+    "ServingService",
     "SessionStore",
     "SamplingParams",
     "Slot",

@@ -647,6 +647,16 @@ class GenerationEngine:
         self._replayed: Dict[int, int] = {}  # rid -> replay count (cap 2)
         self._replay_cap = 2
 
+        # ---- service-layer hooks (serving/replica.py) — both inert by
+        # default, so an engine used directly is bit-for-bit the PR-8
+        # engine. ``on_iteration`` is called at the top of every
+        # continuous-mode iteration (before the lifecycle pass): the
+        # replica supervisor uses it to drain its inbox mid-run, beat
+        # its heartbeat and raise to simulate a hard crash. A hook that
+        # submits or cancels takes effect the same iteration.
+        self.on_iteration: Optional[Callable[[], None]] = None
+        self._draining = False
+
     # ------------------------------------------------------------------
     def submit(self, req: Request, session: Optional[str] = None) -> bool:
         """Enqueue a request; returns False when backpressure shed it.
@@ -707,6 +717,14 @@ class GenerationEngine:
             warnings.warn(
                 f"request {req.rid}: per-request sampling parameters are "
                 f"ignored by the greedy-only wave engine", stacklevel=2)
+        if self._draining:
+            # drain refuses new admissions exactly like a backpressure
+            # shed: the request still terminates (status 'rejected'),
+            # preserving the exactly-once typed-status guarantee while
+            # in-flight and already-queued work runs to completion
+            self.metrics.on_submit(req.rid, req.arrival_time, n)
+            self._terminal_queued(req, req.arrival_time, "rejected")
+            return False
         if (self.max_queue is not None
                 and self._sched.queue_depth >= self.max_queue):
             if self.shed_policy == "reject":
@@ -739,6 +757,24 @@ class GenerationEngine:
             return False
         self._cancel_pending.add(rid)
         return True
+
+    def request_drain(self) -> None:
+        """Refuse new submissions from now on (graceful drain).
+
+        Already-queued and running requests finish normally; subsequent
+        ``submit()`` calls terminate immediately with status
+        ``'rejected'``. Sticky for the engine's lifetime — a drained
+        replica is replaced by a fresh engine, never re-opened.
+        """
+        self._draining = True
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def has_work(self) -> bool:
+        """True while any request is queued or running (scheduler view)."""
+        return self._sched.has_work()
 
     def _now(self) -> float:
         raw = time.monotonic() if self._real_clock else self._clock()
@@ -1469,6 +1505,13 @@ class GenerationEngine:
         greedy_only = True  # no live lane samples; refreshed with ctrl
 
         while sched.has_work():
+            if self.on_iteration is not None:
+                # service-layer hook (replica inbox drain / heartbeat /
+                # kill). It may submit, cancel or raise; a raise
+                # abandons the run — the supervisor discards the engine.
+                self.on_iteration()
+                if not sched.has_work():
+                    break
             now = self._now()
             if self._lifecycle_pass(now, live, pos, tokens):
                 ctrl_dirty = True

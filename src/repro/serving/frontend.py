@@ -1,0 +1,510 @@
+"""Asyncio serving frontend + retrying client (stdlib only).
+
+``ServingFrontend`` puts a network surface in front of a
+``ReplicaRouter``: a TCP server speaking newline-delimited JSON, one
+request object per line, exposing
+
+  ``submit``  {"op":"submit","prompt":[...],"max_new_tokens":N,
+               "eos_id":E,"deadline_s":D,"max_queue_wait_s":W,
+               "session":S}            -> {"ok":true,"rid":R}
+  ``poll``    {"op":"poll","rid":R}    -> {"ok":true,"done":...,
+                                           "status":...,"tokens":[...]}
+  ``stream``  {"op":"stream","rid":R}  -> history + {"tokens_delta":
+                                           [...]} lines, then a final
+                                           {"done":true,...} line
+  ``cancel``  {"op":"cancel","rid":R}  -> {"ok":true,"cancelled":...}
+  ``health``  {"op":"health"}          -> replica states, loads,
+                                           heartbeat ages, pending
+  ``metrics`` {"op":"metrics"}         -> the ServiceMetrics summary
+  ``drain``   {"op":"drain"}           -> refuse new admissions;
+                                           in-flight work finishes
+
+Error responses are ``{"ok":false,"error":...,"retryable":...}``:
+**retryable** errors are load/liveness conditions (``shed`` from the
+bounded frontend queue, ``unavailable`` when every replica is down) —
+the client backs off and retries; **terminal** errors are decisions
+(``rejected`` validation failures, ``draining``, ``unknown-rid``) — the
+client surfaces them immediately. Deadlines propagate: ``deadline_s``
+rides the Request into the engine (and, minus wall time already spent,
+through router failover).
+
+The event loop runs in a dedicated thread (``start()`` returns the
+bound address) and never blocks on engine work: submits are queue
+handoffs, streaming polls router snapshots, and the built-in
+supervision task runs ``router.supervise()`` in an executor so replica
+restarts (engine rebuilds) cannot stall the loop.
+
+``ServingClient`` is the matching synchronous client with capped
+exponential backoff (``ICQ_RETRY_MAX`` attempts, ``ICQ_RETRY_BASE_S``
+doubling up to ``ICQ_RETRY_CAP_S``) on retryable errors and connection
+failures. ``ServingService`` bundles WAL + replicas + router + frontend
+into the one object ``launch/serve.py`` and the chaos drills drive.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import socket
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.metrics import ServiceMetrics
+from repro.serving.replica import EngineReplica
+from repro.serving.router import NoReplicaAvailable, ReplicaRouter
+from repro.serving.scheduler import Request
+from repro.serving.wal import RequestWAL
+
+
+def default_retry_max() -> int:
+    """``ICQ_RETRY_MAX`` env knob: client retry attempts after the
+    first try (default 5)."""
+    v = os.environ.get("ICQ_RETRY_MAX", "")
+    if not v:
+        return 5
+    out = int(v)
+    if out < 0:
+        raise ValueError(f"ICQ_RETRY_MAX must be >= 0, got {v!r}")
+    return out
+
+
+def default_retry_base_s() -> float:
+    """``ICQ_RETRY_BASE_S`` env knob: first retry backoff in seconds,
+    doubled per attempt (default 0.05)."""
+    v = os.environ.get("ICQ_RETRY_BASE_S", "")
+    if not v:
+        return 0.05
+    out = float(v)
+    if out <= 0:
+        raise ValueError(f"ICQ_RETRY_BASE_S must be > 0, got {v!r}")
+    return out
+
+
+def default_retry_cap_s() -> float:
+    """``ICQ_RETRY_CAP_S`` env knob: backoff ceiling in seconds
+    (default 2.0)."""
+    v = os.environ.get("ICQ_RETRY_CAP_S", "")
+    if not v:
+        return 2.0
+    out = float(v)
+    if out <= 0:
+        raise ValueError(f"ICQ_RETRY_CAP_S must be > 0, got {v!r}")
+    return out
+
+
+def backoff_s(attempt: int, base: float, cap: float) -> float:
+    """Capped exponential backoff: ``min(cap, base * 2**attempt)``."""
+    return min(cap, base * (2.0 ** attempt))
+
+
+class ServingFrontend:
+    """TCP frontend over one router (see module doc)."""
+
+    def __init__(self, router: ReplicaRouter,
+                 max_pending: Optional[int] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 supervise_s: float = 0.1,
+                 stream_poll_s: float = 0.02):
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.router = router
+        self.metrics = router.metrics
+        self.max_pending = max_pending
+        self.host = host
+        self.port = port
+        self.supervise_s = supervise_s
+        self.stream_poll_s = stream_poll_s
+        self.draining = False
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._stop: Optional[asyncio.Event] = None
+        self._thread: Optional[threading.Thread] = None
+        self._started = threading.Event()
+        self._start_err: Optional[BaseException] = None
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        """Run the event loop in a dedicated thread; returns the bound
+        (host, port) once the server is accepting connections."""
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._amain()),
+            name="serving-frontend", daemon=True)
+        self._thread.start()
+        self._started.wait(timeout=30.0)
+        if self._start_err is not None:
+            raise RuntimeError("frontend failed to start") \
+                from self._start_err
+        if not self._started.is_set():
+            raise RuntimeError("frontend did not start within 30s")
+        return self.host, self.port
+
+    def stop(self) -> None:
+        if self._loop is not None and self._stop is not None:
+            self._loop.call_soon_threadsafe(self._stop.set)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+
+    def begin_drain(self) -> None:
+        """Refuse new submissions here and on every replica; queued and
+        running requests finish with their usual typed statuses."""
+        self.draining = True
+        self.router.drain()
+
+    async def _amain(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._stop = asyncio.Event()
+        try:
+            server = await asyncio.start_server(
+                self._handle_conn, self.host, self.port)
+        except BaseException as e:
+            self._start_err = e
+            self._started.set()
+            return
+        self.host, self.port = server.sockets[0].getsockname()[:2]
+        self._started.set()
+        sup = asyncio.ensure_future(self._supervisor())
+        try:
+            await self._stop.wait()
+        finally:
+            sup.cancel()
+            server.close()
+            await server.wait_closed()
+
+    async def _supervisor(self) -> None:
+        """Periodic supervision: hung/dead replica detection + restart.
+        Runs in an executor thread — a restart rebuilds an engine (jit
+        setup), which must never block the accept loop."""
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(self.supervise_s)
+            try:
+                await loop.run_in_executor(None, self.router.supervise)
+            except Exception:
+                pass   # supervision must never kill the frontend
+
+    # -- protocol -------------------------------------------------------
+    @staticmethod
+    def _send(writer: asyncio.StreamWriter, obj: dict) -> None:
+        writer.write((json.dumps(obj) + "\n").encode("utf-8"))
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = json.loads(line)
+                    op = msg.get("op")
+                except (json.JSONDecodeError, UnicodeDecodeError,
+                        AttributeError):
+                    msg, op = {}, None
+                if op == "stream":
+                    await self._op_stream(msg, writer)
+                else:
+                    self._send(writer, self._dispatch(op, msg))
+                await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    def _dispatch(self, op: Optional[str], msg: dict) -> dict:
+        try:
+            if op == "submit":
+                return self._op_submit(msg)
+            if op == "poll":
+                return self._op_poll(msg)
+            if op == "cancel":
+                return self._op_cancel(msg)
+            if op == "health":
+                h = self.router.health()
+                h.update(ok=True, draining=self.draining)
+                return h
+            if op == "metrics":
+                return dict(ok=True, metrics=self.metrics.summary())
+            if op == "drain":
+                self.begin_drain()
+                return dict(ok=True, pending=self.router.pending)
+            return dict(ok=False, error=f"unknown-op:{op}",
+                        retryable=False)
+        except KeyError:
+            return dict(ok=False, error="unknown-rid", retryable=False)
+        except Exception as e:
+            return dict(ok=False, error=f"internal:{e}", retryable=False)
+
+    def _op_submit(self, msg: dict) -> dict:
+        if self.draining:
+            return dict(ok=False, error="draining", retryable=False)
+        if (self.max_pending is not None
+                and self.router.pending >= self.max_pending):
+            # bounded-queue backpressure at the service edge: shed now,
+            # before the request is journaled or routed — the client
+            # backs off and retries
+            self.metrics.on_shed()
+            return dict(ok=False, error="shed", retryable=True)
+        prompt = msg.get("prompt")
+        if not isinstance(prompt, list) or not prompt:
+            return dict(ok=False, error="rejected:empty-prompt",
+                        retryable=False)
+        req = Request(
+            rid=self.router.allocate_rid(),
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=int(msg.get("max_new_tokens", 16)),
+            eos_id=msg.get("eos_id"),
+            deadline_s=msg.get("deadline_s"),
+            max_queue_wait_s=msg.get("max_queue_wait_s"),
+        )
+        try:
+            rid = self.router.submit(req, session=msg.get("session"))
+        except NoReplicaAvailable:
+            return dict(ok=False, error="unavailable", retryable=True)
+        except ValueError as e:
+            return dict(ok=False, error=f"rejected:{e}", retryable=False)
+        return dict(ok=True, rid=rid)
+
+    def _op_poll(self, msg: dict) -> dict:
+        done, status, tokens = self.router.result(int(msg["rid"]))
+        return dict(ok=True, rid=int(msg["rid"]), done=done,
+                    status=status, tokens=tokens)
+
+    def _op_cancel(self, msg: dict) -> dict:
+        return dict(ok=True,
+                    cancelled=self.router.cancel(int(msg["rid"])))
+
+    async def _op_stream(self, msg: dict,
+                         writer: asyncio.StreamWriter) -> None:
+        try:
+            rid = int(msg["rid"])
+            done, status, tokens = self.router.result(rid)
+        except (KeyError, ValueError, TypeError):
+            self._send(writer, dict(ok=False, error="unknown-rid",
+                                    retryable=False))
+            return
+        self._send(writer, dict(ok=True, rid=rid))
+        sent = 0
+        while True:
+            done, status, tokens = self.router.result(rid)
+            if len(tokens) > sent:
+                self._send(writer, dict(tokens_delta=tokens[sent:]))
+                sent = len(tokens)
+                await writer.drain()
+            if done:
+                self._send(writer, dict(done=True, status=status,
+                                        tokens=tokens))
+                await writer.drain()
+                return
+            await asyncio.sleep(self.stream_poll_s)
+
+
+# ----------------------------------------------------------------------
+class ClientError(RuntimeError):
+    """Base class for client-side failures."""
+
+
+class RequestRejected(ClientError):
+    """The frontend returned a terminal (non-retryable) error."""
+
+
+class FrontendUnavailable(ClientError):
+    """Retries exhausted against a retryable condition."""
+
+
+class ServingClient:
+    """Synchronous client with capped exponential retry/backoff.
+
+    Connection failures and retryable responses (``shed``,
+    ``unavailable``) back off ``base * 2**attempt`` seconds (capped)
+    for up to ``retry_max`` retries, then raise
+    ``FrontendUnavailable``. Terminal responses (``rejected``,
+    ``draining``, ``unknown-rid``) raise ``RequestRejected``
+    immediately — retrying a decision would never change it.
+    ``self.retries`` counts retry attempts (the serve ledger reports
+    it).
+    """
+
+    def __init__(self, host: str, port: int,
+                 retry_max: Optional[int] = None,
+                 retry_base_s: Optional[float] = None,
+                 retry_cap_s: Optional[float] = None,
+                 timeout_s: float = 30.0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.host = host
+        self.port = port
+        self.retry_max = (default_retry_max() if retry_max is None
+                          else int(retry_max))
+        self.retry_base_s = (default_retry_base_s()
+                             if retry_base_s is None else float(retry_base_s))
+        self.retry_cap_s = (default_retry_cap_s()
+                            if retry_cap_s is None else float(retry_cap_s))
+        self.timeout_s = timeout_s
+        self._sleep = sleep
+        self.retries = 0
+        self.metrics: Optional[ServiceMetrics] = None  # optional mirror
+
+    # -- transport ------------------------------------------------------
+    def _rpc(self, payload: dict) -> dict:
+        with socket.create_connection((self.host, self.port),
+                                      timeout=self.timeout_s) as s:
+            f = s.makefile("rwb")
+            f.write((json.dumps(payload) + "\n").encode("utf-8"))
+            f.flush()
+            line = f.readline()
+        if not line:
+            raise ConnectionError("frontend closed the connection")
+        return json.loads(line)
+
+    def _rpc_retry(self, payload: dict) -> dict:
+        attempt = 0
+        while True:
+            try:
+                resp = self._rpc(payload)
+            except (OSError, json.JSONDecodeError) as e:
+                resp = dict(ok=False, error=f"transport:{e}",
+                            retryable=True)
+            if resp.get("ok"):
+                return resp
+            if not resp.get("retryable"):
+                raise RequestRejected(str(resp.get("error")))
+            if attempt >= self.retry_max:
+                raise FrontendUnavailable(
+                    f"retries exhausted ({self.retry_max}): "
+                    f"{resp.get('error')}")
+            self.retries += 1
+            if self.metrics is not None:
+                self.metrics.on_retry()
+            self._sleep(backoff_s(attempt, self.retry_base_s,
+                                  self.retry_cap_s))
+            attempt += 1
+
+    # -- API ------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               max_queue_wait_s: Optional[float] = None,
+               session: Optional[str] = None) -> int:
+        resp = self._rpc_retry(dict(
+            op="submit", prompt=[int(t) for t in prompt],
+            max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+            deadline_s=deadline_s, max_queue_wait_s=max_queue_wait_s,
+            session=session))
+        return int(resp["rid"])
+
+    def poll(self, rid: int) -> dict:
+        return self._rpc_retry(dict(op="poll", rid=rid))
+
+    def wait(self, rid: int, timeout: float = 120.0,
+             poll_s: float = 0.02) -> Tuple[str, List[int]]:
+        """Poll until terminal; returns (status, tokens)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            resp = self.poll(rid)
+            if resp["done"]:
+                return resp["status"], resp["tokens"]
+            if time.monotonic() >= deadline:
+                raise TimeoutError(f"rid {rid} not terminal in {timeout}s")
+            self._sleep(poll_s)
+
+    def stream(self, rid: int):
+        """Yield tokens as the server streams them (one dedicated
+        connection); raises ``RequestRejected`` on a terminal error."""
+        with socket.create_connection((self.host, self.port),
+                                      timeout=self.timeout_s) as s:
+            f = s.makefile("rwb")
+            f.write((json.dumps(dict(op="stream", rid=rid)) + "\n")
+                    .encode("utf-8"))
+            f.flush()
+            head = json.loads(f.readline())
+            if not head.get("ok"):
+                raise RequestRejected(str(head.get("error")))
+            for line in f:
+                msg = json.loads(line)
+                for t in msg.get("tokens_delta", []):
+                    yield int(t)
+                if msg.get("done"):
+                    return
+
+    def cancel(self, rid: int) -> bool:
+        return bool(self._rpc_retry(dict(op="cancel", rid=rid))["cancelled"])
+
+    def health(self) -> dict:
+        return self._rpc_retry(dict(op="health"))
+
+    def service_metrics(self) -> dict:
+        return self._rpc_retry(dict(op="metrics"))["metrics"]
+
+    def drain(self) -> dict:
+        return self._rpc_retry(dict(op="drain"))
+
+
+# ----------------------------------------------------------------------
+class ServingService:
+    """WAL + N supervised replicas + router + TCP frontend in one box.
+
+    ``engine_factory`` must build a fresh continuous-mode engine per
+    call (each replica gets its own; restarts get fresh ones). Share
+    the *prepared* weight tree across factory calls — preparation is
+    the expensive part and is read-only at serve time.
+    """
+
+    def __init__(self, engine_factory: Callable[[], "object"],
+                 n_replicas: int = 1,
+                 wal_path: Optional[str] = None,
+                 max_pending: Optional[int] = None,
+                 heartbeat_s: Optional[float] = None,
+                 stall_steps: Optional[int] = None,
+                 hang_after_s: Optional[float] = None,
+                 supervise_s: float = 0.1,
+                 host: str = "127.0.0.1", port: int = 0):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.metrics = ServiceMetrics()
+        self.wal = RequestWAL(wal_path) if wal_path else None
+        self.replicas = [
+            EngineReplica(f"r{i}", engine_factory,
+                          heartbeat_s=heartbeat_s, stall_steps=stall_steps)
+            for i in range(n_replicas)]
+        self.router = ReplicaRouter(self.replicas, wal=self.wal,
+                                    metrics=self.metrics,
+                                    hang_after_s=hang_after_s)
+        self.frontend = ServingFrontend(self.router,
+                                        max_pending=max_pending,
+                                        host=host, port=port,
+                                        supervise_s=supervise_s)
+        self.replayed = 0
+
+    def start(self) -> Tuple[str, int]:
+        self.router.start()
+        self.replayed = self.router.recover()
+        return self.frontend.start()
+
+    def begin_drain(self) -> None:
+        self.frontend.begin_drain()
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        self.frontend.stop()
+        self.router.stop(timeout)
+        if self.wal is not None:
+            self.wal.close()
+
+    def check_shutdown_invariants(self) -> None:
+        self.router.check_shutdown_invariants()
+        if self.wal is not None:
+            assert not self.wal.pending, (
+                f"WAL still pending after shutdown: "
+                f"{sorted(self.wal.pending)}")
+
+
+__all__ = ["ServingFrontend", "ServingClient", "ServingService",
+           "ClientError", "RequestRejected", "FrontendUnavailable",
+           "backoff_s", "default_retry_max", "default_retry_base_s",
+           "default_retry_cap_s"]

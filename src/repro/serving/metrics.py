@@ -28,6 +28,7 @@ numbers stay meaningful either way:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional
 
 from repro.runtime.straggler import StragglerMonitor
@@ -395,4 +396,100 @@ class MetricsCollector:
         )
 
 
-__all__ = ["RequestMetrics", "MetricsCollector", "StepTimeWatchdog"]
+class ServiceMetrics:
+    """Counters for the service layer above the engine (frontend ->
+    router -> replicas): submissions and terminal statuses as the router
+    sees them, failovers and replica restarts, frontend backpressure
+    sheds, client retries, and gauges for the frontend queue depth and
+    the worst replica heartbeat age. One instance is shared by every
+    component of a ``ServingService``; all methods are thread-safe (the
+    frontend event loop, the supervisor and N replica workers all
+    report into it)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.submits = 0              # requests the router accepted
+        self.status_counts: Dict[str, int] = {}   # terminal statuses
+        self.tokens_streamed = 0      # tokens forwarded to callers
+        self.failovers = 0            # in-flight requests moved off a
+        #                               dead replica (or force-failed)
+        self.replica_restarts = 0     # dead replicas rebuilt + restarted
+        self.replica_kills = 0        # hard kills (chaos or watchdog)
+        self.frontend_sheds = 0       # submits refused by backpressure
+        self.retries = 0              # client-side retry attempts
+        self.duplicate_terminals = 0  # MUST stay 0: a second terminal
+        #                               for an already-finished rid
+        self.wal_replayed = 0         # requests re-submitted from WAL
+        self.peak_pending = 0         # frontend queue-depth high water
+        self.heartbeat_age_max = 0.0  # worst replica heartbeat age seen
+
+    def _bump(self, attr: str, n: int = 1):
+        with self._lock:
+            setattr(self, attr, getattr(self, attr) + n)
+
+    def on_submit(self):
+        self._bump("submits")
+
+    def on_terminal(self, status: str):
+        with self._lock:
+            self.status_counts[status] = self.status_counts.get(status, 0) + 1
+
+    def on_token(self):
+        self._bump("tokens_streamed")
+
+    def on_failover(self):
+        self._bump("failovers")
+
+    def on_replica_restart(self):
+        self._bump("replica_restarts")
+
+    def on_replica_kill(self):
+        self._bump("replica_kills")
+
+    def on_shed(self):
+        self._bump("frontend_sheds")
+
+    def on_retry(self, n: int = 1):
+        self._bump("retries", n)
+
+    def on_duplicate_terminal(self):
+        self._bump("duplicate_terminals")
+
+    def on_wal_replayed(self, n: int):
+        self._bump("wal_replayed", n)
+
+    def sample(self, pending: int, heartbeat_age: float):
+        """Gauge sample: current frontend queue depth + worst replica
+        heartbeat age (taken by the supervisor each pass)."""
+        with self._lock:
+            self.peak_pending = max(self.peak_pending, int(pending))
+            self.heartbeat_age_max = max(self.heartbeat_age_max,
+                                         float(heartbeat_age))
+
+    def completed(self) -> int:
+        with self._lock:
+            return sum(self.status_counts.values())
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            out = dict(
+                submits=float(self.submits),
+                completed=float(sum(self.status_counts.values())),
+                tokens_streamed=float(self.tokens_streamed),
+                failovers=float(self.failovers),
+                replica_restarts=float(self.replica_restarts),
+                replica_kills=float(self.replica_kills),
+                frontend_sheds=float(self.frontend_sheds),
+                retries=float(self.retries),
+                duplicate_terminals=float(self.duplicate_terminals),
+                wal_replayed=float(self.wal_replayed),
+                peak_pending=float(self.peak_pending),
+                heartbeat_age_max=float(self.heartbeat_age_max),
+            )
+            for s, n in self.status_counts.items():
+                out[f"status_{s}"] = float(n)
+            return out
+
+
+__all__ = ["RequestMetrics", "MetricsCollector", "StepTimeWatchdog",
+           "ServiceMetrics"]

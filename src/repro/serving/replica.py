@@ -1,0 +1,335 @@
+"""Engine replica supervisor: the engine loop in a worker thread.
+
+``EngineReplica`` wraps one ``GenerationEngine`` (continuous mode) in a
+worker thread so the service layer can treat it like a remote process:
+submit/cancel go through a thread-safe inbox, terminal statuses come
+back through an ``on_terminal`` callback, and the replica can *die* —
+either killed deliberately (the in-process analog of ``kill -9``, used
+by the chaos drills) or declared hung by the step-time watchdog — and
+be **restarted with a fresh engine** while the router fails its
+in-flight requests over to a healthy replica.
+
+Threading contract: the engine stays single-threaded. Only the worker
+thread ever touches it — submits and cancels are enqueued and applied
+by the worker, either between runs or *mid-run* through the engine's
+``on_iteration`` hook (which also beats the heartbeat every iteration).
+Everything the supervisor exposes cross-thread is a plain
+counter/flag/queue.
+
+Failure detection:
+
+  * **crash** — any exception escaping the worker loop (including the
+    deliberate ``ReplicaKilled``) marks the replica ``dead``. The
+    engine object is abandoned where it stood: no terminal statuses are
+    published for its in-flight requests (a dead process cannot
+    publish), which is exactly what lets the router's failover keep the
+    exactly-once guarantee.
+  * **hang** — the ``on_iteration`` hook watches the engine's
+    ``StepTimeWatchdog``: ``stall_steps`` *consecutive* stalled
+    iterations (default off; ``ICQ_STALL_STEPS``) raises
+    ``ReplicaKilled`` from inside the loop, turning a live-but-crawling
+    replica into a clean death the supervisor can restart. A worker
+    that stops beating entirely (stuck inside a launch) is caught by
+    the router's heartbeat check instead.
+
+``restart()`` discards the dead engine, clears the inbox (the router
+re-owns anything that was in flight) and starts a fresh worker over a
+fresh engine from the factory. Greedy replay of the lost requests is
+token-identical by construction — same discipline as the engine's own
+preempt-and-requeue.
+
+``ICQ_HEARTBEAT_S`` sets the default heartbeat/inbox-poll interval.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.serving.scheduler import Request
+
+
+class ReplicaDead(RuntimeError):
+    """Raised by ``submit``/``cancel`` on a replica that is not alive.
+
+    Retryable from the caller's point of view: the router catches it
+    and re-routes to a healthy replica."""
+
+
+class ReplicaKilled(RuntimeError):
+    """Raised inside the worker loop to crash the replica on purpose
+    (chaos kill or watchdog-detected stall). The engine run is
+    abandoned mid-flight — nothing is published after it."""
+
+
+def default_heartbeat_s() -> float:
+    """``ICQ_HEARTBEAT_S`` env knob: heartbeat/inbox-poll interval in
+    seconds (default 0.5)."""
+    v = os.environ.get("ICQ_HEARTBEAT_S", "")
+    if not v:
+        return 0.5
+    out = float(v)
+    if out <= 0:
+        raise ValueError(f"ICQ_HEARTBEAT_S must be > 0, got {v!r}")
+    return out
+
+
+def default_stall_steps() -> int:
+    """``ICQ_STALL_STEPS`` env knob: consecutive watchdog-stalled
+    iterations before the worker declares itself hung and dies for
+    restart (0 = disabled, the default — CI runners stall spuriously)."""
+    v = os.environ.get("ICQ_STALL_STEPS", "")
+    if not v:
+        return 0
+    out = int(v)
+    if out < 0:
+        raise ValueError(f"ICQ_STALL_STEPS must be >= 0, got {v!r}")
+    return out
+
+
+class EngineReplica:
+    """One supervised engine worker (see module doc).
+
+    ``engine_factory`` must build a *fresh* continuous-mode
+    ``GenerationEngine`` per call — restart discards the old engine
+    (and its jitted programs) entirely. ``on_terminal(replica, req)``
+    is invoked from the worker thread exactly once per request that
+    reaches a terminal status on a *live* replica.
+    """
+
+    def __init__(self, name: str,
+                 engine_factory: Callable[[], "object"],
+                 heartbeat_s: Optional[float] = None,
+                 stall_steps: Optional[int] = None):
+        self.name = name
+        self._factory = engine_factory
+        self.heartbeat_s = (default_heartbeat_s() if heartbeat_s is None
+                            else float(heartbeat_s))
+        self.stall_steps = (default_stall_steps() if stall_steps is None
+                            else int(stall_steps))
+        self.on_terminal: Optional[Callable[["EngineReplica", Request],
+                                            None]] = None
+        self.restarts = 0
+        self.last_error: Optional[BaseException] = None
+        self.state = "new"          # new|idle|running|dead|stopped
+        self._lock = threading.Lock()
+        self._inbox: "queue.Queue[Tuple[str, object, object]]" = queue.Queue()
+        self._accepted: Dict[int, Request] = {}   # rid -> in-flight here
+        self._published: set = set()
+        self._kill = threading.Event()
+        self._stop = threading.Event()
+        self._hb = time.monotonic()
+        self._consec_stalled = 0
+        self._thread: Optional[threading.Thread] = None
+        self.engine = self._build_engine()
+
+    def _build_engine(self):
+        eng = self._factory()
+        if getattr(eng, "mode", "continuous") != "continuous":
+            raise ValueError(
+                f"replica {self.name}: engine_factory must build a "
+                f"continuous-mode engine, got mode={eng.mode!r}")
+        eng.on_iteration = self._hook
+        return eng
+
+    # -- cross-thread surface ------------------------------------------
+    @property
+    def alive(self) -> bool:
+        """Accepting work: worker running and no kill pending."""
+        return (self.state in ("idle", "running")
+                and self._thread is not None and self._thread.is_alive()
+                and not self._kill.is_set())
+
+    @property
+    def kill_requested(self) -> bool:
+        return self._kill.is_set()
+
+    @property
+    def load(self) -> int:
+        """In-flight requests accepted by this replica (routing weight)."""
+        with self._lock:
+            return len(self._accepted)
+
+    def heartbeat_age(self, now: Optional[float] = None) -> float:
+        """Seconds since the worker last proved liveness."""
+        t = time.monotonic() if now is None else now
+        return max(0.0, t - self._hb)
+
+    def in_flight(self) -> Tuple[Request, ...]:
+        """Snapshot of the requests this replica owns (router failover
+        reads this off a *dead* replica — the worker is gone, nothing
+        mutates it concurrently)."""
+        with self._lock:
+            return tuple(self._accepted.values())
+
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(f"replica {self.name} already running")
+        self.state = "idle"
+        self._thread = threading.Thread(
+            target=self._main, name=f"replica-{self.name}", daemon=True)
+        self._thread.start()
+
+    def submit(self, req: Request, session: Optional[str] = None) -> None:
+        """Hand a request to the worker (applied in inbox order)."""
+        if not self.alive:
+            raise ReplicaDead(f"replica {self.name} is {self.state}")
+        with self._lock:
+            self._accepted[req.rid] = req
+        self._inbox.put(("submit", req, session))
+
+    def cancel(self, rid: int) -> None:
+        if not self.alive:
+            raise ReplicaDead(f"replica {self.name} is {self.state}")
+        self._inbox.put(("cancel", rid, None))
+
+    def drain(self) -> None:
+        """Refuse new engine admissions; in-flight work finishes."""
+        if self.alive:
+            self._inbox.put(("drain", None, None))
+
+    def kill(self) -> None:
+        """Hard-kill the worker (chaos / hung-replica recovery): the
+        loop raises ``ReplicaKilled`` at its next heartbeat and the
+        engine is abandoned mid-run."""
+        self._kill.set()
+        self._inbox.put(("nop", None, None))   # wake an idle worker
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Graceful stop: finish queued + running work, then exit."""
+        self._stop.set()
+        self._inbox.put(("nop", None, None))
+        self.join(timeout)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def restart(self) -> None:
+        """Replace a dead (or stopped) replica with a fresh engine and
+        a fresh worker. The old engine and anything in the inbox are
+        discarded — the router owns re-submission of lost requests."""
+        if self.state in ("idle", "running") and not self._kill.is_set():
+            raise RuntimeError(
+                f"replica {self.name} is {self.state}; kill/stop it first")
+        self.join(timeout=10.0)
+        with self._lock:
+            self._accepted.clear()
+        self._published = set()
+        self._kill.clear()
+        self._stop.clear()
+        self._consec_stalled = 0
+        self.last_error = None
+        while True:   # discard anything queued at the dead worker
+            try:
+                self._inbox.get_nowait()
+            except queue.Empty:
+                break
+        self.engine = self._build_engine()
+        self.restarts += 1
+        self._hb = time.monotonic()
+        self.start()
+
+    # -- worker thread --------------------------------------------------
+    def _beat(self) -> None:
+        self._hb = time.monotonic()
+
+    def _hook(self) -> None:
+        """Engine ``on_iteration`` hook (worker thread, mid-run)."""
+        self._beat()
+        if self._kill.is_set():
+            raise ReplicaKilled(f"replica {self.name}: killed")
+        if self.stall_steps:
+            wd = self.engine.metrics.watchdog
+            self._consec_stalled = (self._consec_stalled + 1 if wd.stalled
+                                    else 0)
+            if self._consec_stalled >= self.stall_steps:
+                raise ReplicaKilled(
+                    f"replica {self.name}: watchdog stalled "
+                    f"{self._consec_stalled} consecutive iterations")
+        self._drain_inbox()
+        self._publish()
+
+    def _drain_inbox(self) -> None:
+        while True:
+            try:
+                item = self._inbox.get_nowait()
+            except queue.Empty:
+                return
+            self._handle(item)
+
+    def _handle(self, item: Tuple[str, object, object]) -> None:
+        op, a, b = item
+        if op == "submit":
+            req: Request = a  # type: ignore[assignment]
+            req.arrival_time = self.engine.now()
+            try:
+                self.engine.submit(req, session=b)
+                # a False return (shed/draining) already recorded the
+                # terminal in engine.completed; _publish picks it up
+            except ValueError:
+                # caller-bug class rejection (empty prompt, too long,
+                # duplicate rid, unservable): the engine never saw it,
+                # so publish the typed terminal ourselves
+                req.status = "rejected"
+                self._publish_one(req)
+        elif op == "cancel":
+            try:
+                self.engine.cancel(a)
+            except KeyError:
+                pass      # not (or no longer) on this engine
+        elif op == "drain":
+            self.engine.request_drain()
+        # 'nop': wake-up only
+
+    def _publish_one(self, req: Request) -> None:
+        with self._lock:
+            if req.rid in self._published:
+                return
+            self._published.add(req.rid)
+            self._accepted.pop(req.rid, None)
+        cb = self.on_terminal
+        if cb is not None:
+            cb(self, req)
+
+    def _publish(self) -> None:
+        """Forward newly-terminal requests (engine.completed accumulates
+        across runs; the published-set makes each rid fire once)."""
+        for rid, req in list(self.engine.completed.items()):
+            if rid not in self._published:
+                self._publish_one(req)
+
+    def _main(self) -> None:
+        try:
+            while True:
+                self._beat()
+                if self._kill.is_set():
+                    raise ReplicaKilled(f"replica {self.name}: killed")
+                try:
+                    item = self._inbox.get(timeout=self.heartbeat_s)
+                except queue.Empty:
+                    item = None
+                if item is not None:
+                    self._handle(item)
+                    self._drain_inbox()
+                self._publish()
+                if self.engine.has_work():
+                    self.state = "running"
+                    try:
+                        self.engine.run()
+                    finally:
+                        if not self._kill.is_set():
+                            self._publish()
+                    self.state = "idle"
+                elif self._stop.is_set() and self._inbox.empty():
+                    self.state = "stopped"
+                    return
+        except BaseException as e:   # ReplicaKilled or a real crash
+            self.last_error = e
+            self.state = "dead"
+
+
+__all__ = ["EngineReplica", "ReplicaDead", "ReplicaKilled",
+           "default_heartbeat_s", "default_stall_steps"]

@@ -1,0 +1,438 @@
+"""Multi-replica request router with failover and session affinity.
+
+``ReplicaRouter`` owns the *service-level* request table: every request
+submitted through it is tracked from acceptance to exactly-once typed
+terminal status, no matter how many replicas die along the way.
+
+Routing: least-loaded (fewest in-flight requests, ties by replica
+order) with **session affinity** — a session's turns stick to the
+replica that served turn 1, so the PR-8 prefix-cache chains stay warm
+(a session moved to another replica would re-prefill from scratch).
+
+Failover (``supervise()``): a replica found dead is restarted with a
+fresh engine, and every request it had in flight is re-routed:
+
+  * tokens already streamed are **folded into the prompt** — the new
+    replica continues from where the dead one stopped, exactly like the
+    engine's own preempt-and-requeue. Greedy continuation is
+    token-identical to a no-failure run by construction.
+  * a request whose folded stream already ends the generation (EOS
+    emitted, or token budget spent) is completed ``'ok'`` locally — the
+    dead replica finished it but died before publishing.
+  * a *sampled* request that already streamed tokens cannot be replayed
+    (a fresh PRNG draw would diverge) — it terminates ``'failed'``,
+    mirroring ``engine._preempt``.
+  * remaining ``deadline_s`` is propagated (wall time already spent is
+    deducted); an exhausted deadline terminates ``'timeout'``.
+
+Exactly-once: dead replicas never publish (the worker thread is gone),
+the survivor table keeps the first terminal per rid and counts any
+second one in ``ServiceMetrics.duplicate_terminals`` (asserted zero by
+the invariant check). With a WAL attached, every accepted submit and
+every terminal transition is journaled; ``recover()`` re-submits the
+journal's unfinished requests on a cold start.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.metrics import ServiceMetrics
+from repro.serving.replica import EngineReplica, ReplicaDead
+from repro.serving.scheduler import Request, STATUSES
+from repro.serving.wal import RequestWAL
+
+
+class NoReplicaAvailable(RuntimeError):
+    """No alive replica could accept the request (retryable)."""
+
+
+class _Tracked:
+    """Service-level state for one rid (router-internal)."""
+
+    __slots__ = ("rid", "prompt", "max_new", "eos_id", "sampling",
+                 "deadline_s", "max_queue_wait_s", "session", "cb",
+                 "current", "prior", "replica", "status", "done",
+                 "t_submit", "failovers")
+
+    def __init__(self, req: Request, cb, replica: str, t_submit: float):
+        self.rid = req.rid
+        self.prompt = np.asarray(req.prompt, np.int32)
+        self.max_new = int(req.max_new_tokens)
+        self.eos_id = req.eos_id
+        self.sampling = req.sampling
+        self.deadline_s = req.deadline_s
+        self.max_queue_wait_s = req.max_queue_wait_s
+        self.session = req.session
+        self.cb = cb                  # wrapped on_token, reused on failover
+        self.current = req            # the live Request incarnation
+        self.prior: List[int] = []    # tokens from dead incarnations
+        self.replica = replica
+        self.status: Optional[str] = None
+        self.done = threading.Event()
+        self.t_submit = t_submit      # wall clock, for deadline deduction
+        self.failovers = 0
+
+    def tokens(self) -> List[int]:
+        return self.prior + list(self.current.generated)
+
+
+class ReplicaRouter:
+    """Route requests across supervised replicas (see module doc).
+
+    ``hang_after_s`` (None = disabled): a replica whose heartbeat is
+    older than this is killed by ``supervise()`` and handled like any
+    other death — the recovery drill for a worker wedged inside a
+    launch. Keep it well above worst-case compile time when enabled.
+    """
+
+    def __init__(self, replicas: Sequence[EngineReplica],
+                 wal: Optional[RequestWAL] = None,
+                 metrics: Optional[ServiceMetrics] = None,
+                 hang_after_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names: {names}")
+        self.replicas = list(replicas)
+        self.wal = wal
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self.hang_after_s = hang_after_s
+        self._clock = clock
+        self._lock = threading.RLock()
+        self._table: Dict[int, _Tracked] = {}
+        self._affinity: Dict[str, str] = {}    # session -> replica name
+        #: observers (set by the frontend / chaos triggers); called from
+        #: replica worker threads — keep them cheap and non-blocking
+        self.token_observer: Optional[Callable[[int, int], None]] = None
+        self.done_observer: Optional[Callable[[int, str, List[int]],
+                                              None]] = None
+        start = 0
+        if wal is not None:
+            known = list(wal.pending) + list(wal.completed)
+            start = (max(known) + 1) if known else 0
+        self._rids = itertools.count(start)
+        for r in self.replicas:
+            r.on_terminal = self._on_terminal
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> None:
+        for r in self.replicas:
+            if r.state == "new":
+                r.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        for r in self.replicas:
+            r.stop(timeout)
+
+    def allocate_rid(self) -> int:
+        """Next service-unique rid (starts above anything in the WAL, so
+        a recovered journal never collides with new traffic)."""
+        return next(self._rids)
+
+    def recover(self) -> int:
+        """Cold-start WAL replay: re-submit every replayable unfinished
+        request from the journal; terminate unreplayable (sampled) ones
+        ``'failed'``. Returns the number re-submitted."""
+        if self.wal is None:
+            return 0
+        for rid in self.wal.unreplayable():
+            tr = _Tracked(Request(rid=rid, prompt=np.zeros(1, np.int32)),
+                          cb=None, replica="", t_submit=self._clock())
+            with self._lock:
+                self._table[rid] = tr
+            self._terminal_local(tr, "failed")
+        reqs = self.wal.replay_requests()
+        for req in reqs:
+            self.submit(req)
+        self.metrics.on_wal_replayed(len(reqs))
+        return len(reqs)
+
+    # -- submission -----------------------------------------------------
+    def _pick(self, session: Optional[str],
+              exclude: Optional[str] = None) -> EngineReplica:
+        cands = [r for r in self.replicas
+                 if r.alive and r.name != exclude]
+        if not cands:
+            raise NoReplicaAvailable("no alive replica")
+        if session is not None:
+            aff = self._affinity.get(session)
+            for r in cands:
+                if r.name == aff:
+                    return r
+        best = min(enumerate(cands), key=lambda ir: (ir[1].load, ir[0]))[1]
+        if session is not None:
+            self._affinity[session] = best.name
+        return best
+
+    def submit(self, req: Request, session: Optional[str] = None) -> int:
+        """Accept, journal and route one request; returns the rid.
+
+        Raises ``NoReplicaAvailable`` (retryable) when every replica is
+        down, ``ValueError`` on a duplicate rid (caller bug). Per-rid
+        terminal statuses arrive via ``wait()``/``result()`` and the
+        ``done_observer``.
+        """
+        if session is not None:
+            req.session = session
+        with self._lock:
+            if req.rid in self._table:
+                raise ValueError(f"duplicate request id {req.rid}")
+            user_cb = req.on_token
+            rid = req.rid
+
+            def cb(r, tok, _user=user_cb):
+                self.metrics.on_token()
+                obs = self.token_observer
+                if obs is not None:
+                    obs(r, tok)
+                if _user is not None:
+                    _user(r, tok)
+
+            req.on_token = cb
+            tr = _Tracked(req, cb=cb, replica="", t_submit=self._clock())
+            self._route(tr, req)
+            self._table[rid] = tr
+            if self.wal is not None:
+                self.wal.log_submit(req, replica=tr.replica)
+            self.metrics.on_submit()
+        return rid
+
+    def _route(self, tr: _Tracked, req: Request,
+               exclude: Optional[str] = None) -> None:
+        """Hand ``req`` to a live replica (retrying through deaths)."""
+        while True:
+            target = self._pick(tr.session, exclude=exclude)
+            try:
+                target.submit(req, session=tr.session)
+            except ReplicaDead:
+                exclude = None   # alive-set changed; re-pick freely
+                continue
+            tr.replica = target.name
+            return
+
+    # -- terminal path --------------------------------------------------
+    def _on_terminal(self, replica: EngineReplica, req: Request) -> None:
+        """Replica worker callback: exactly one per rid survives."""
+        notify = None
+        with self._lock:
+            tr = self._table.get(req.rid)
+            if tr is None:
+                return                      # never tracked here
+            if tr.status is not None:
+                self.metrics.on_duplicate_terminal()
+                return
+            tr.status = req.status
+            tokens = tr.prior + list(req.generated)
+            if self.wal is not None:
+                self.wal.log_terminal(req.rid, req.status, len(tokens))
+            self.metrics.on_terminal(req.status)
+            notify = (req.rid, req.status, tokens)
+            tr.done.set()
+        obs = self.done_observer
+        if obs is not None and notify is not None:
+            obs(*notify)
+
+    def _terminal_local(self, tr: _Tracked, status: str) -> None:
+        """Terminal decided by the router itself (failover edge cases)."""
+        notify = None
+        with self._lock:
+            if tr.status is not None:
+                return
+            tr.status = status
+            tokens = tr.tokens()
+            if self.wal is not None:
+                self.wal.log_terminal(tr.rid, status, len(tokens))
+            self.metrics.on_terminal(status)
+            notify = (tr.rid, status, tokens)
+            tr.done.set()
+        obs = self.done_observer
+        if obs is not None and notify is not None:
+            obs(*notify)
+
+    # -- supervision ----------------------------------------------------
+    def kill(self, name: str) -> None:
+        """Chaos hook: hard-kill a replica by name (handled by the next
+        ``supervise()`` pass like any other death)."""
+        for r in self.replicas:
+            if r.name == name:
+                r.kill()
+                self.metrics.on_replica_kill()
+                return
+        raise KeyError(f"unknown replica {name!r}")
+
+    def supervise(self) -> None:
+        """One supervision pass: detect hung workers, restart dead
+        replicas, fail their in-flight requests over. Safe to call from
+        any thread, any number of times."""
+        if self.hang_after_s is not None:
+            for r in self.replicas:
+                if r.alive and r.heartbeat_age() > self.hang_after_s:
+                    r.kill()
+                    self.metrics.on_replica_kill()
+        for r in self.replicas:
+            if r.kill_requested and r.state != "dead":
+                r.join(timeout=10.0)
+            if r.state != "dead":
+                continue
+            victims = r.in_flight()
+            # restart first so failover always has a live target (and a
+            # single-replica service still recovers)
+            r.restart()
+            self.metrics.on_replica_restart()
+            self._failover(victims, dead_incarnation=r.name)
+        ages = [r.heartbeat_age() for r in self.replicas if r.alive]
+        self.metrics.sample(self.pending, max(ages) if ages else 0.0)
+
+    def _failover(self, victims: Sequence[Request],
+                  dead_incarnation: str) -> None:
+        with self._lock:
+            for req in victims:
+                tr = self._table.get(req.rid)
+                if tr is None or tr.status is not None:
+                    continue                 # already terminal elsewhere
+                self.metrics.on_failover()
+                tr.failovers += 1
+                # fold the tokens the dead incarnation streamed into the
+                # prompt (preempt-and-requeue discipline) and retire its
+                # Request: ``tokens()`` must not count the folded stream
+                # twice on the local-terminal paths below
+                tr.prior = tr.tokens()
+                tr.current = Request(rid=tr.rid, prompt=tr.prompt,
+                                     max_new_tokens=0)
+                sampled = (tr.sampling is not None
+                           and tr.sampling.temperature > 0.0)
+                if sampled and tr.prior:
+                    self._terminal_local(tr, "failed")
+                    continue
+                remaining = tr.max_new - len(tr.prior)
+                finished = (remaining <= 0
+                            or (tr.eos_id is not None and tr.prior
+                                and tr.prior[-1] == tr.eos_id))
+                if finished:
+                    # the dead replica completed it but died before
+                    # publishing — the stream is whole; complete locally
+                    self._terminal_local(tr, "ok")
+                    continue
+                deadline = tr.deadline_s
+                if deadline is not None:
+                    deadline -= self._clock() - tr.t_submit
+                    if deadline <= 0:
+                        self._terminal_local(tr, "timeout")
+                        continue
+                prompt = (np.concatenate(
+                    [tr.prompt, np.asarray(tr.prior, np.int32)])
+                    if tr.prior else tr.prompt)
+                nreq = Request(
+                    rid=tr.rid, prompt=prompt, max_new_tokens=remaining,
+                    eos_id=tr.eos_id, sampling=tr.sampling,
+                    deadline_s=deadline,
+                    max_queue_wait_s=tr.max_queue_wait_s,
+                    session=tr.session, on_token=tr.cb)
+                tr.current = nreq
+                if (tr.session is not None
+                        and self._affinity.get(tr.session)
+                        == dead_incarnation):
+                    # the warm chain died with the replica; re-pin
+                    self._affinity.pop(tr.session, None)
+                try:
+                    self._route(tr, nreq)
+                except NoReplicaAvailable:
+                    self._terminal_local(tr, "failed")
+                if self.wal is not None and tr.status is None:
+                    self.wal.log_submit(nreq, replica=tr.replica)
+
+    # -- results / control ---------------------------------------------
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(1 for tr in self._table.values()
+                       if tr.status is None)
+
+    def result(self, rid: int) -> Tuple[bool, Optional[str], List[int]]:
+        """(done, status, tokens-so-far) snapshot for one rid."""
+        with self._lock:
+            tr = self._table[rid]
+            return tr.status is not None, tr.status, tr.tokens()
+
+    def wait(self, rid: int, timeout: Optional[float] = None) -> bool:
+        with self._lock:
+            tr = self._table[rid]
+        return tr.done.wait(timeout)
+
+    def wait_all(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every tracked request is terminal; False on
+        timeout (deadline shared across requests)."""
+        end = None if timeout is None else self._clock() + timeout
+        with self._lock:
+            trs = list(self._table.values())
+        for tr in trs:
+            left = None if end is None else max(0.0, end - self._clock())
+            if not tr.done.wait(left):
+                return False
+        return True
+
+    def results(self) -> Dict[int, Tuple[Optional[str], List[int]]]:
+        with self._lock:
+            return {rid: (tr.status, tr.tokens())
+                    for rid, tr in self._table.items()}
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a tracked request; False when already terminal."""
+        with self._lock:
+            tr = self._table.get(rid)
+            if tr is None:
+                raise KeyError(f"unknown request id {rid}")
+            if tr.status is not None:
+                return False
+            target = next((r for r in self.replicas
+                           if r.name == tr.replica), None)
+        if target is not None and target.alive:
+            try:
+                target.cancel(rid)
+                return True
+            except ReplicaDead:
+                pass
+        # owner is down: the request cannot make progress — honor the
+        # cancel locally (failover skips entries that are terminal)
+        self._terminal_local(tr, "cancelled")
+        return True
+
+    def drain(self) -> None:
+        """Stop admitting new work on every replica; in-flight and
+        queued requests run to completion."""
+        for r in self.replicas:
+            r.drain()
+
+    def health(self) -> Dict[str, object]:
+        reps = [dict(name=r.name, state=r.state, load=r.load,
+                     restarts=r.restarts,
+                     heartbeat_age=round(r.heartbeat_age(), 3))
+                for r in self.replicas]
+        return dict(replicas=reps, pending=self.pending,
+                    sessions=len(self._affinity))
+
+    def check_shutdown_invariants(self) -> None:
+        """Service-level invariants after a drain: every tracked rid is
+        terminal with exactly one typed status, no duplicate terminals
+        were ever observed, and each live replica's engine passes its
+        own shutdown invariants."""
+        with self._lock:
+            for rid, tr in self._table.items():
+                assert tr.status in STATUSES, (
+                    f"request {rid}: untyped terminal status {tr.status!r}")
+                assert tr.done.is_set(), f"request {rid}: done event unset"
+        assert self.metrics.duplicate_terminals == 0, (
+            f"{self.metrics.duplicate_terminals} duplicate terminal(s)")
+        for r in self.replicas:
+            if r.state in ("idle", "stopped"):
+                r.engine.check_shutdown_invariants()
+
+
+__all__ = ["ReplicaRouter", "NoReplicaAvailable"]

@@ -135,6 +135,12 @@ class SlotScheduler:
         queue is empty."""
         return self._queue.popleft() if self._queue else None
 
+    def queued(self) -> Tuple[Request, ...]:
+        """Snapshot of the queued requests in FIFO order (read-only view
+        for service-layer introspection — health endpoints and drain
+        accounting; mutation goes through submit/admit/drop_queued)."""
+        return tuple(self._queue)
+
     @property
     def queue_depth(self) -> int:
         return len(self._queue)

@@ -1,0 +1,244 @@
+"""Write-ahead request journal (WAL) for the serving service layer.
+
+Every request accepted by the service is journaled *before* it reaches
+an engine, and journaled again when it reaches a terminal status — so a
+process that dies mid-storm can be restarted and replay exactly the
+requests that never finished. Greedy decoding makes the replay
+token-identical by construction (same prompt -> same stream), the same
+guarantee the engine's preempt-and-requeue path relies on.
+
+Format: JSON Lines, one record per line, append-only. Each record
+carries a ``crc`` field — crc32 (same discipline as the PR-6 checkpoint
+sidecars, ``kernels/backend``) over the canonical JSON encoding of the
+record *without* the crc field (``sort_keys=True``, compact
+separators). Two record kinds:
+
+  ``{"ev": "submit", "rid": ..., "prompt": [...], "max_new": ...,
+     "eos": ..., "deadline_s": ..., "max_queue_wait_s": ...,
+     "session": ..., "sampled": ..., "replica": ..., "crc": ...}``
+  ``{"ev": "terminal", "rid": ..., "status": ..., "n_generated": ...,
+     "crc": ...}``
+
+Recovery scan (run once, at open):
+
+  * a record that fails to parse or fails its crc **at the tail of the
+    file** is a *torn tail* — the write the crash interrupted. It is
+    truncated away so appends continue on a clean line boundary.
+  * a bad record **mid-file** is a *corrupt record* — it is skipped and
+    counted, and the scan continues, so a later ``terminal`` record
+    still marks its request completed. A completed request is therefore
+    never replayed (never double-completed), even across corruption.
+  * an empty or missing journal round-trips to an empty state.
+
+``pending`` after the scan maps rid -> the *latest* submit record with
+no later terminal (failover re-submits journal the same rid again —
+last submit wins). ``replay_requests()`` turns pending into fresh
+``Request`` objects; requests journaled with ``sampled=True`` are *not*
+replayable (a fresh PRNG draw could not reproduce the tokens the dead
+process already streamed) — the recovery path terminates them with
+status ``'failed'`` instead, mirroring ``engine._preempt``.
+
+The journal object is thread-safe for appends (the router logs from
+frontend, supervisor and replica-worker threads) and flushes every
+record; ``fsync=True`` additionally fsyncs per append for crash
+durability at the cost of append latency.
+
+``ICQ_WAL_PATH`` (empty/unset = no WAL) supplies the default journal
+path for ``launch/serve.py`` and ``ServingService``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+def default_wal_path() -> Optional[str]:
+    """``ICQ_WAL_PATH`` env knob: journal path (empty/unset = no WAL)."""
+    v = os.environ.get("ICQ_WAL_PATH", "")
+    return v if v else None
+
+
+def _canonical(record: dict) -> bytes:
+    """Canonical JSON bytes of ``record`` without its crc field."""
+    body = {k: v for k, v in record.items() if k != "crc"}
+    return json.dumps(body, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+
+
+def _crc(record: dict) -> int:
+    return zlib.crc32(_canonical(record)) & 0xFFFFFFFF
+
+
+def encode_record(record: dict) -> bytes:
+    """Serialize one record with its crc; returns the journal line."""
+    rec = dict(record)
+    rec["crc"] = _crc(rec)
+    return (json.dumps(rec, sort_keys=True, separators=(",", ":"))
+            + "\n").encode("utf-8")
+
+
+def decode_record(line: bytes) -> dict:
+    """Parse + crc-verify one journal line; raises ValueError when bad."""
+    try:
+        rec = json.loads(line.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ValueError(f"unparseable WAL record: {e}") from e
+    if not isinstance(rec, dict) or "crc" not in rec:
+        raise ValueError("WAL record missing crc")
+    want = rec["crc"]
+    got = _crc(rec)
+    if want != got:
+        raise ValueError(f"WAL crc mismatch: stored {want}, computed {got}")
+    if rec.get("ev") not in ("submit", "terminal"):
+        raise ValueError(f"unknown WAL event {rec.get('ev')!r}")
+    return rec
+
+
+class RequestWAL:
+    """Append-only request journal with crash recovery (see module doc)."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        self.pending: Dict[int, dict] = {}     # rid -> latest submit record
+        self.completed: Dict[int, str] = {}    # rid -> terminal status
+        self.corrupt_records = 0               # bad mid-file records skipped
+        self.torn_tail = False                 # a torn tail was truncated
+        self.records_recovered = 0             # good records scanned at open
+        self._lock = threading.Lock()
+        self._recover()
+        self._f = open(path, "ab")
+
+    # -- recovery -------------------------------------------------------
+    def _recover(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            data = f.read()
+        if not data:
+            return
+        # line offsets: (start, line) for every non-empty line
+        lines: List[Tuple[int, bytes]] = []
+        off = 0
+        for raw in data.split(b"\n"):
+            if raw:
+                lines.append((off, raw))
+            off += len(raw) + 1
+        keep_until = len(data)
+        for i, (start, raw) in enumerate(lines):
+            try:
+                rec = decode_record(raw)
+            except ValueError:
+                if i == len(lines) - 1:
+                    # bad final record = the write the crash tore;
+                    # truncate so appends continue on a clean boundary
+                    self.torn_tail = True
+                    keep_until = start
+                else:
+                    self.corrupt_records += 1
+                continue
+            self._apply(rec)
+            self.records_recovered += 1
+        if self.torn_tail:
+            with open(self.path, "r+b") as f:
+                f.truncate(keep_until)
+
+    def _apply(self, rec: dict) -> None:
+        rid = int(rec["rid"])
+        if rec["ev"] == "submit":
+            # a submit after a terminal would be a new life for the rid;
+            # service rids are unique, but failover re-submits the same
+            # rid — latest submit wins while the request is unfinished
+            self.pending[rid] = rec
+            self.completed.pop(rid, None)
+        else:  # terminal
+            self.pending.pop(rid, None)
+            self.completed[rid] = str(rec["status"])
+
+    # -- append ---------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        line = encode_record(rec)
+        with self._lock:
+            self._f.write(line)
+            self._f.flush()
+            if self.fsync:
+                os.fsync(self._f.fileno())
+            self._apply(rec)
+
+    def log_submit(self, req: Request, replica: Optional[str] = None) -> None:
+        """Journal a submit; call *before* handing ``req`` to a replica."""
+        sampled = (req.sampling is not None
+                   and getattr(req.sampling, "temperature", 0.0) > 0.0)
+        self._append({
+            "ev": "submit",
+            "rid": int(req.rid),
+            "prompt": [int(t) for t in np.asarray(req.prompt).ravel()],
+            "max_new": int(req.max_new_tokens),
+            "eos": None if req.eos_id is None else int(req.eos_id),
+            "deadline_s": req.deadline_s,
+            "max_queue_wait_s": req.max_queue_wait_s,
+            "session": req.session,
+            "sampled": bool(sampled),
+            "replica": replica,
+        })
+
+    def log_terminal(self, rid: int, status: str, n_generated: int = 0) -> None:
+        """Journal a terminal transition (exactly one per finished rid)."""
+        self._append({
+            "ev": "terminal",
+            "rid": int(rid),
+            "status": str(status),
+            "n_generated": int(n_generated),
+        })
+
+    # -- replay ---------------------------------------------------------
+    def replay_requests(self) -> List[Request]:
+        """Fresh ``Request`` objects for every replayable pending record
+        (rid order). Sampled pending records are excluded — see
+        ``unreplayable()``. Deadlines restart from the new submission
+        (the dead process's clock did not survive it)."""
+        out: List[Request] = []
+        for rid in sorted(self.pending):
+            rec = self.pending[rid]
+            if rec.get("sampled"):
+                continue
+            out.append(Request(
+                rid=rid,
+                prompt=np.asarray(rec["prompt"], np.int32),
+                max_new_tokens=int(rec["max_new"]),
+                eos_id=rec.get("eos"),
+                deadline_s=rec.get("deadline_s"),
+                max_queue_wait_s=rec.get("max_queue_wait_s"),
+                session=rec.get("session"),
+            ))
+        return out
+
+    def unreplayable(self) -> List[int]:
+        """Pending rids that cannot be replayed (sampled streams: a fresh
+        PRNG draw would diverge from tokens already handed out). The
+        recovery path terminates these with status ``'failed'``."""
+        return [rid for rid in sorted(self.pending)
+                if self.pending[rid].get("sampled")]
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.flush()
+                self._f.close()
+
+    def __enter__(self) -> "RequestWAL":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["RequestWAL", "default_wal_path", "encode_record",
+           "decode_record"]

@@ -1,0 +1,593 @@
+"""Service layer above the engine: WAL-journaled frontend, replica
+supervision, failover with token-parity replay, and the retrying client.
+
+Two kinds of tests share this file. Real-engine tests pin the headline
+guarantee — greedy token streams identical through kills, failovers and
+WAL cold restarts — against an actual ``GenerationEngine``. Host-engine
+tests drive the supervision machinery (stall watchdog, backpressure,
+affinity, chaos schedules) against ``_HostEngine``, a deterministic
+stand-in implementing the same protocol surface the replica uses, fast
+enough for property schedules that would be unaffordable with jit
+compiles per restart."""
+import threading
+import time
+import types
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import init_model
+from repro.serving import (EngineReplica, FrontendUnavailable,
+                           GenerationEngine, NoReplicaAvailable,
+                           ReplicaRouter, Request, RequestRejected,
+                           RequestWAL, ServiceMetrics, ServingClient,
+                           ServingFrontend, ServingService)
+from repro.serving.frontend import (backoff_s, default_retry_base_s,
+                                    default_retry_cap_s, default_retry_max)
+from repro.serving.replica import default_heartbeat_s, default_stall_steps
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import STATUSES
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property schedules need hypothesis; the
+    HAVE_HYPOTHESIS = False  # deterministic chaos cases below run anyway
+
+
+# ---------------------------------------------------------------------------
+# shared real-engine setup (one baseline run per module)
+# ---------------------------------------------------------------------------
+
+def _prompts(cfg, n, length=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, 6)
+
+    def factory():
+        return GenerationEngine(params, cfg, batch_size=2, max_len=32,
+                                mode="continuous")
+
+    eng = factory()
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=4))
+    base = eng.run()
+    eng.check_shutdown_invariants()
+    baseline = {i: list(r.generated) for i, r in base.items()}
+    return cfg, prompts, factory, baseline
+
+
+def _drive(router, timeout=120.0):
+    """Pump supervision until every tracked request is terminal."""
+    end = time.monotonic() + timeout
+    while router.pending and time.monotonic() < end:
+        router.supervise()
+        time.sleep(0.01)
+    router.supervise()
+    assert not router.pending, "requests never reached a terminal status"
+
+
+# ---------------------------------------------------------------------------
+# host-side engine: the replica protocol without the jit bill
+# ---------------------------------------------------------------------------
+
+def _next_token(seq):
+    """Deterministic 'greedy decode': a pure function of the whole token
+    sequence, so fold-into-prompt failover replays are token-identical
+    exactly when the service preserves the sequence."""
+    return (int(seq[-1]) * 31 + len(seq) * 7) % 101
+
+
+def _expected(prompt, max_new, eos_id=None):
+    seq = [int(t) for t in prompt]
+    out = []
+    for _ in range(max_new):
+        tok = _next_token(seq)
+        out.append(tok)
+        seq.append(tok)
+        if eos_id is not None and tok == eos_id:
+            break
+    return out
+
+
+class _HostEngine:
+    """Minimal continuous-mode engine: the exact surface EngineReplica
+    touches (submit/cancel/run/completed/has_work/request_drain/now/
+    on_iteration/metrics.watchdog), one token per live request per
+    iteration."""
+
+    mode = "continuous"
+
+    def __init__(self, step_s=0.0, stall_after=None):
+        self.on_iteration = None
+        self.completed = {}
+        self.metrics = types.SimpleNamespace(
+            watchdog=types.SimpleNamespace(stalled=False))
+        self._queue = []
+        self._draining = False
+        self._step_s = step_s
+        self._stall_after = stall_after   # iterations until stalled=True
+        self._iters = 0
+        self._t0 = time.monotonic()
+
+    def now(self):
+        return time.monotonic() - self._t0
+
+    @property
+    def draining(self):
+        return self._draining
+
+    def request_drain(self):
+        self._draining = True
+
+    def has_work(self):
+        return bool(self._queue)
+
+    def submit(self, req, session=None):
+        if len(np.asarray(req.prompt).ravel()) == 0:
+            raise ValueError("empty prompt")
+        if self._draining:
+            req.status = "rejected"
+            self.completed[req.rid] = req
+            return False
+        self._queue.append(req)
+        return True
+
+    def cancel(self, rid):
+        for r in self._queue:
+            if r.rid == rid:
+                r.status = "cancelled"
+                self.completed[rid] = r
+                self._queue.remove(r)
+                return
+        raise KeyError(rid)
+
+    def run(self):
+        while self._queue:
+            self._iters += 1
+            if self._stall_after is not None and self._iters >= self._stall_after:
+                self.metrics.watchdog.stalled = True
+            if self.on_iteration is not None:
+                self.on_iteration()     # may raise ReplicaKilled
+                if not self._queue:
+                    break
+            for r in list(self._queue):
+                seq = [int(t) for t in np.asarray(r.prompt).ravel()]
+                seq += r.generated
+                tok = _next_token(seq)
+                r.generated.append(tok)
+                if r.on_token is not None:
+                    r.on_token(r.rid, tok)
+                if (len(r.generated) >= r.max_new_tokens
+                        or (r.eos_id is not None and tok == r.eos_id)):
+                    r.status = "ok"
+                    self.completed[r.rid] = r
+                    self._queue.remove(r)
+            if self._step_s:
+                time.sleep(self._step_s)
+        return dict(self.completed)
+
+    def check_shutdown_invariants(self):
+        assert not self._queue, "host engine stopped with live requests"
+
+
+def _host_router(n=2, step_s=0.001, stall_after=None, stall_steps=None,
+                 **router_kw):
+    reps = [EngineReplica(f"r{i}",
+                          lambda: _HostEngine(step_s=step_s,
+                                              stall_after=stall_after),
+                          heartbeat_s=0.01, stall_steps=stall_steps)
+            for i in range(n)]
+    return ReplicaRouter(reps, **router_kw)
+
+
+# ---------------------------------------------------------------------------
+# unit: backoff + env knobs
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_capped_exponential():
+    assert backoff_s(0, 0.05, 2.0) == 0.05
+    assert backoff_s(1, 0.05, 2.0) == 0.1
+    assert backoff_s(2, 0.05, 2.0) == 0.2
+    assert backoff_s(10, 0.05, 2.0) == 2.0      # cap wins
+    assert backoff_s(0, 3.0, 2.0) == 2.0        # cap wins immediately
+
+
+def test_env_knob_defaults_and_validation(monkeypatch):
+    for var in ("ICQ_RETRY_MAX", "ICQ_RETRY_BASE_S", "ICQ_RETRY_CAP_S",
+                "ICQ_HEARTBEAT_S", "ICQ_STALL_STEPS"):
+        monkeypatch.setenv(var, "")
+    assert default_retry_max() == 5
+    assert default_retry_base_s() == 0.05
+    assert default_retry_cap_s() == 2.0
+    assert default_heartbeat_s() == 0.5
+    assert default_stall_steps() == 0
+    monkeypatch.setenv("ICQ_RETRY_MAX", "2")
+    monkeypatch.setenv("ICQ_HEARTBEAT_S", "0.25")
+    monkeypatch.setenv("ICQ_STALL_STEPS", "4")
+    assert default_retry_max() == 2
+    assert default_heartbeat_s() == 0.25
+    assert default_stall_steps() == 4
+    monkeypatch.setenv("ICQ_RETRY_MAX", "-1")
+    with pytest.raises(ValueError, match="ICQ_RETRY_MAX"):
+        default_retry_max()
+    monkeypatch.setenv("ICQ_HEARTBEAT_S", "0")
+    with pytest.raises(ValueError, match="ICQ_HEARTBEAT_S"):
+        default_heartbeat_s()
+    monkeypatch.setenv("ICQ_STALL_STEPS", "-2")
+    with pytest.raises(ValueError, match="ICQ_STALL_STEPS"):
+        default_stall_steps()
+
+
+# ---------------------------------------------------------------------------
+# engine hooks: inert by default, drain refuses new admissions
+# ---------------------------------------------------------------------------
+
+def test_engine_drain_rejects_new_admissions(env):
+    cfg, prompts, factory, baseline = env
+    eng = factory()
+    # the service hooks must be inert on a fresh engine: direct engine
+    # use is bit-for-bit the pre-service behavior
+    assert eng.on_iteration is None and not eng.draining
+    eng.submit(Request(0, prompts[0], max_new_tokens=4))
+    eng.request_drain()
+    assert eng.draining
+    assert eng.submit(Request(1, prompts[1], max_new_tokens=4)) is False
+    assert eng.completed[1].status == "rejected"
+    done = eng.run()
+    # work admitted before the drain still finishes, identically
+    assert done[0].status == "ok"
+    assert list(done[0].generated) == baseline[0]
+    eng.check_shutdown_invariants()
+
+
+# ---------------------------------------------------------------------------
+# real engine: kill -> failover -> parity, WAL cold restart, TCP e2e
+# ---------------------------------------------------------------------------
+
+def test_kill_midrun_failover_keeps_parity_and_exactly_once(env):
+    cfg, prompts, factory, baseline = env
+    metrics = ServiceMetrics()
+    reps = [EngineReplica(f"r{i}", factory, heartbeat_s=0.05)
+            for i in range(2)]
+    router = ReplicaRouter(reps, metrics=metrics)
+    terminals = {}
+    router.done_observer = (
+        lambda rid, st, toks: terminals.__setitem__(
+            rid, terminals.get(rid, 0) + 1))
+    chaos = {"streamed": 0, "killed": False}
+
+    def kill_mid_decode(rid, tok):
+        chaos["streamed"] += 1
+        if chaos["streamed"] == 5 and not chaos["killed"]:
+            chaos["killed"] = True
+            router.kill("r0")
+
+    router.token_observer = kill_mid_decode
+    router.start()
+    for i, p in enumerate(prompts):
+        router.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    _drive(router)
+    res = router.results()
+    router.stop()
+    router.check_shutdown_invariants()
+
+    assert chaos["killed"], "kill trigger never fired"
+    assert set(res) == set(range(6))
+    assert all(st == "ok" for st, _ in res.values())
+    # failover folds streamed tokens into the prompt: greedy streams
+    # must be token-identical to the no-failure baseline
+    assert {rid: toks for rid, (st, toks) in res.items()} == baseline
+    assert all(n == 1 for n in terminals.values())
+    assert metrics.failovers >= 1 and metrics.replica_restarts >= 1
+    assert metrics.replica_kills == 1
+    assert metrics.duplicate_terminals == 0
+
+
+def test_wal_cold_restart_replays_unfinished_only(env, tmp_path):
+    cfg, prompts, factory, baseline = env
+    path = str(tmp_path / "requests.wal")
+    # forge the journal a crashed process would leave behind: rid 0
+    # finished, rids 1-2 unfinished greedy, rid 3 unfinished *sampled*
+    w = RequestWAL(path)
+    for i in range(3):
+        w.log_submit(Request(rid=i, prompt=prompts[i], max_new_tokens=4),
+                     replica="r0")
+    w.log_terminal(0, "ok", 4)
+    w.log_submit(Request(rid=3, prompt=prompts[3], max_new_tokens=4,
+                         sampling=SamplingParams(temperature=0.7)))
+    w.close()
+
+    wal = RequestWAL(path)
+    metrics = ServiceMetrics()
+    router = ReplicaRouter([EngineReplica("r0", factory, heartbeat_s=0.05)],
+                           wal=wal, metrics=metrics)
+    assert router.allocate_rid() == 4     # above everything journaled
+    router.start()
+    assert router.recover() == 2          # rids 1 and 2, not 0, not 3
+    assert metrics.wal_replayed == 2
+    assert router.wait_all(timeout=120.0)
+    res = router.results()
+    router.stop()
+    router.check_shutdown_invariants()
+    wal.close()
+
+    assert res[3][0] == "failed"          # sampled: unreplayable
+    for rid in (1, 2):
+        assert res[rid] == ("ok", baseline[rid])
+    reopened = RequestWAL(path)
+    assert not reopened.pending           # every rid reached a terminal
+    assert reopened.completed[0] == "ok"  # ...and was never re-run
+    reopened.close()
+
+
+def test_frontend_tcp_end_to_end(env):
+    cfg, prompts, factory, baseline = env
+    svc = ServingService(factory, n_replicas=1, supervise_s=0.05)
+    host, port = svc.start()
+    try:
+        cli = ServingClient(host, port, retry_base_s=0.01)
+        rid = cli.submit([int(t) for t in prompts[0]], max_new_tokens=4)
+        status, tokens = cli.wait(rid, timeout=120.0)
+        assert status == "ok" and tokens == baseline[0]
+
+        rid2 = cli.submit([int(t) for t in prompts[1]], max_new_tokens=4)
+        assert list(cli.stream(rid2)) == baseline[1]
+
+        h = cli.health()
+        assert h["ok"] and not h["draining"]
+        assert h["replicas"][0]["state"] in ("idle", "running")
+        m = cli.service_metrics()
+        assert m["submits"] >= 2 and m["duplicate_terminals"] == 0
+
+        with pytest.raises(RequestRejected, match="unknown-rid"):
+            cli.poll(99999)
+        with pytest.raises(RequestRejected, match="rejected"):
+            cli.submit([], max_new_tokens=4)
+
+        cli.drain()
+        with pytest.raises(RequestRejected, match="draining"):
+            cli.submit([1, 2], max_new_tokens=2)
+    finally:
+        svc.shutdown()
+    svc.check_shutdown_invariants()
+
+
+# ---------------------------------------------------------------------------
+# host engine: supervision machinery
+# ---------------------------------------------------------------------------
+
+def test_host_engine_parity_oracle():
+    router = _host_router(n=1)
+    router.start()
+    router.submit(Request(rid=0, prompt=np.asarray([3], np.int32),
+                          max_new_tokens=5))
+    assert router.wait_all(timeout=10.0)
+    st, toks = router.results()[0]
+    router.stop()
+    assert st == "ok" and toks == _expected([3], 5)
+
+
+def test_stall_watchdog_kills_replica_and_request_fails_over():
+    metrics = ServiceMetrics()
+    # the engine flags stalled from iteration 3 on; two consecutive
+    # stalled iterations kill the worker mid-run
+    router = _host_router(n=1, step_s=0.001, stall_after=3, stall_steps=2,
+                          metrics=metrics)
+    router.start()
+    router.submit(Request(rid=0, prompt=np.asarray([3], np.int32),
+                          max_new_tokens=5))
+    _drive(router, timeout=30.0)
+    st, toks = router.results()[0]
+    router.stop()
+    router.check_shutdown_invariants()
+    assert st == "ok" and toks == _expected([3], 5)
+    assert metrics.replica_restarts >= 1 and metrics.failovers >= 1
+    assert metrics.duplicate_terminals == 0
+
+
+def test_finished_but_unpublished_victim_completes_without_doubling():
+    # the nastiest failover edge: the victim generated its whole budget
+    # on the dead replica but the kill landed before the publish. The
+    # router must complete it 'ok' locally with the stream exactly once
+    # — not refold it into a doubled stream, not regenerate past budget.
+    metrics = ServiceMetrics()
+    router = _host_router(n=2, step_s=0.001, metrics=metrics)
+
+    def kill_at_last_token(rid, tok):
+        if rid == 0 and len(router._table[0].current.generated) >= 3:
+            router.kill("r0")   # kill lands before the worker publishes
+
+    router.token_observer = kill_at_last_token
+    router.start()
+    router.submit(Request(rid=0, prompt=np.asarray([3], np.int32),
+                          max_new_tokens=3))
+    _drive(router, timeout=30.0)
+    st, toks = router.results()[0]
+    router.stop()
+    router.check_shutdown_invariants()
+    assert st == "ok"
+    assert toks == _expected([3], 3)      # exactly once, exactly 3
+    assert metrics.failovers == 1 and metrics.duplicate_terminals == 0
+
+
+def test_session_affinity_sticks_to_one_replica():
+    router = _host_router(n=2)
+    router.start()
+    rids = []
+    for _ in range(3):
+        rid = router.allocate_rid()
+        router.submit(Request(rid=rid, prompt=np.asarray([7], np.int32),
+                              max_new_tokens=2), session="chat")
+        rids.append(rid)
+        assert router.wait(rid, timeout=10.0)
+    owners = {router._table[rid].replica for rid in rids}
+    router.stop()
+    router.check_shutdown_invariants()
+    assert len(owners) == 1               # turns never moved replicas
+    assert router.health()["sessions"] == 1
+
+
+def test_cancel_on_dead_owner_and_no_replica_available():
+    router = _host_router(n=1, step_s=0.005)
+    router.start()
+    rid = router.submit(Request(rid=0, prompt=np.asarray([2], np.int32),
+                                max_new_tokens=100000))
+    r0 = router.replicas[0]
+    r0.kill()
+    deadline = time.monotonic() + 10.0
+    while r0.state != "dead" and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert r0.state == "dead"
+    # every replica down: new submissions are retryable-refused
+    with pytest.raises(NoReplicaAvailable):
+        router.submit(Request(rid=1, prompt=np.asarray([2], np.int32),
+                              max_new_tokens=2))
+    # the dead owner cannot make progress — cancel is honored locally
+    assert router.cancel(rid) is True
+    assert router.results()[rid][0] == "cancelled"
+    router.supervise()                    # restart brings capacity back
+    rid2 = router.submit(Request(rid=2, prompt=np.asarray([2], np.int32),
+                                 max_new_tokens=3))
+    assert router.wait(rid2, timeout=10.0)
+    _drive(router, timeout=10.0)
+    router.stop()
+    router.check_shutdown_invariants()
+
+
+def test_frontend_shed_backpressure_and_client_retry_exhaustion():
+    router = _host_router(n=1, step_s=0.002)
+    frontend = ServingFrontend(router, max_pending=1, supervise_s=0.05)
+    router.start()
+    host, port = frontend.start()
+    sleeps = []
+    cli = ServingClient(host, port, retry_max=3, retry_base_s=0.01,
+                        retry_cap_s=0.02, sleep=sleeps.append)
+    try:
+        rid = cli.submit([5], max_new_tokens=100000)
+        with pytest.raises(FrontendUnavailable, match="shed"):
+            cli.submit([6], max_new_tokens=2)
+        assert cli.retries == 3
+        # capped exponential backoff between the retry attempts
+        assert sleeps[:3] == [0.01, 0.02, 0.02]
+        assert router.metrics.frontend_sheds >= 4   # first try + retries
+        assert cli.cancel(rid) is True
+        status, _ = cli.wait(rid, timeout=30.0)
+        assert status in ("cancelled", "ok")
+    finally:
+        frontend.stop()
+        router.stop()
+    router.check_shutdown_invariants()
+
+
+def test_duplicate_rid_rejected():
+    router = _host_router(n=1)
+    router.start()
+    router.submit(Request(rid=0, prompt=np.asarray([1], np.int32),
+                          max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        router.submit(Request(rid=0, prompt=np.asarray([1], np.int32),
+                              max_new_tokens=2))
+    assert router.wait_all(timeout=10.0)
+    router.stop()
+    router.check_shutdown_invariants()
+
+
+# ---------------------------------------------------------------------------
+# chaos schedules: random submit/cancel/kill against the host engine
+# ---------------------------------------------------------------------------
+
+def _chaos_run(reqs, kills, cancels):
+    """One chaos schedule: submit ``reqs`` (prompt, max_new) pairs,
+    cancel the given indices immediately, kill replicas when the global
+    streamed-token count crosses each (threshold, replica_idx) entry.
+    Asserts the service contract regardless of interleaving."""
+    metrics = ServiceMetrics()
+    router = _host_router(n=2, step_s=0.001, metrics=metrics)
+    terminals = {}
+    router.done_observer = (
+        lambda rid, st, toks: terminals.__setitem__(
+            rid, terminals.get(rid, 0) + 1))
+    pending_kills = sorted(kills)
+    streamed = {"n": 0}
+
+    def tok_obs(rid, tok):
+        streamed["n"] += 1
+        while pending_kills and streamed["n"] >= pending_kills[0][0]:
+            _, idx = pending_kills.pop(0)
+            router.kill(f"r{idx}")
+
+    router.token_observer = tok_obs
+    router.start()
+    rids = []
+    for prompt, max_new in reqs:
+        req = Request(rid=router.allocate_rid(),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new)
+        while True:
+            try:
+                rids.append(router.submit(req))
+                break
+            except NoReplicaAvailable:
+                router.supervise()        # restart, then re-route
+    for i in cancels:
+        router.cancel(rids[i])
+    _drive(router, timeout=60.0)
+    res = router.results()
+    router.stop()
+    router.check_shutdown_invariants()
+
+    assert set(res) == set(rids)
+    for rid in rids:
+        st, _ = res[rid]
+        assert st in STATUSES
+        assert terminals.get(rid) == 1    # exactly one terminal, ever
+    assert metrics.duplicate_terminals == 0
+    # any request that ended 'ok' must carry the exact deterministic
+    # stream, no matter how many times it moved replicas
+    for (prompt, max_new), rid in zip(reqs, rids):
+        st, toks = res[rid]
+        if st == "ok":
+            assert toks == _expected(prompt, max_new)
+    return res
+
+
+def test_chaos_deterministic_cases():
+    # both replicas killed mid-storm
+    _chaos_run(reqs=[([3], 5), ([4, 9], 4), ([11], 6), ([2, 2, 2], 3)],
+               kills=[(3, 0), (8, 1)], cancels=[1])
+    # kill storm with every request cancelled up front
+    _chaos_run(reqs=[([1], 8), ([2], 8)], kills=[(1, 0)], cancels=[0, 1])
+    # no failures at all: plain multi-replica serving
+    _chaos_run(reqs=[([5], 3), ([6], 3), ([7], 3)], kills=[], cancels=[])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(data=st.data())
+    def test_chaos_schedule_property(data):
+        n = data.draw(st.integers(1, 5), label="n_requests")
+        reqs = [
+            (data.draw(st.lists(st.integers(0, 99), min_size=1,
+                                max_size=4), label=f"prompt{i}"),
+             data.draw(st.integers(1, 6), label=f"max_new{i}"))
+            for i in range(n)
+        ]
+        kills = data.draw(
+            st.lists(st.tuples(st.integers(1, 15), st.integers(0, 1)),
+                     max_size=2), label="kills")
+        cancels = data.draw(
+            st.lists(st.integers(0, n - 1), max_size=2, unique=True),
+            label="cancels")
+        _chaos_run(reqs, kills, cancels)

@@ -1,0 +1,166 @@
+"""Request WAL: crc-checked JSONL journal, torn-tail truncation,
+mid-file corruption tolerance, and deterministic replay. Pure-text
+tests — no engine, no jax session beyond the module import chain."""
+import numpy as np
+import pytest
+
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request
+from repro.serving.wal import (RequestWAL, decode_record, default_wal_path,
+                               encode_record)
+
+
+def _req(rid, prompt=(1, 2, 3), **kw):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32), **kw)
+
+
+def _wal(tmp_path, name="requests.wal"):
+    return RequestWAL(str(tmp_path / name))
+
+
+# ---------------------------------------------------------------------------
+# record encoding
+# ---------------------------------------------------------------------------
+
+def test_record_roundtrip_and_crc_rejection():
+    line = encode_record({"ev": "terminal", "rid": 3, "status": "ok",
+                          "n_generated": 4})
+    rec = decode_record(line.strip())
+    assert (rec["ev"], rec["rid"], rec["status"]) == ("terminal", 3, "ok")
+    # a single flipped byte in the body must fail the crc
+    with pytest.raises(ValueError, match="crc|unparseable"):
+        decode_record(line.replace(b'"ok"', b'"no"').strip())
+    with pytest.raises(ValueError, match="unparseable"):
+        decode_record(b"not json at all")
+    with pytest.raises(ValueError, match="crc"):
+        decode_record(b'{"ev":"submit","rid":1}')
+    with pytest.raises(ValueError, match="unknown WAL event"):
+        decode_record(encode_record({"ev": "mystery", "rid": 1}).strip())
+
+
+def test_default_wal_path_env(monkeypatch):
+    monkeypatch.delenv("ICQ_WAL_PATH", raising=False)
+    assert default_wal_path() is None
+    monkeypatch.setenv("ICQ_WAL_PATH", "")
+    assert default_wal_path() is None
+    monkeypatch.setenv("ICQ_WAL_PATH", "/tmp/x.wal")
+    assert default_wal_path() == "/tmp/x.wal"
+
+
+# ---------------------------------------------------------------------------
+# journal state machine
+# ---------------------------------------------------------------------------
+
+def test_empty_and_missing_journal_round_trip(tmp_path):
+    w = _wal(tmp_path)       # missing file
+    assert w.pending == {} and w.completed == {}
+    assert not w.torn_tail and w.corrupt_records == 0
+    w.close()
+    w2 = _wal(tmp_path)      # now-existing empty file
+    assert w2.pending == {} and w2.completed == {}
+    w2.close()
+
+
+def test_submit_terminal_lifecycle_survives_reopen(tmp_path):
+    w = _wal(tmp_path)
+    w.log_submit(_req(0, max_new_tokens=4, eos_id=7), replica="r0")
+    w.log_submit(_req(1, prompt=(9,), deadline_s=2.5, session="s"),
+                 replica="r1")
+    w.log_terminal(0, "ok", n_generated=4)
+    w.close()
+
+    w2 = _wal(tmp_path)
+    assert w2.completed == {0: "ok"}
+    assert sorted(w2.pending) == [1]
+    rec = w2.pending[1]
+    assert rec["prompt"] == [9] and rec["deadline_s"] == 2.5
+    assert rec["session"] == "s" and rec["replica"] == "r1"
+    [r] = w2.replay_requests()
+    assert r.rid == 1 and list(r.prompt) == [9] and r.session == "s"
+    w2.close()
+
+
+def test_failover_resubmit_last_submit_wins(tmp_path):
+    w = _wal(tmp_path)
+    w.log_submit(_req(5, prompt=(1, 2)), replica="r0")
+    # failover folds streamed tokens into the prompt and re-journals the
+    # same rid at its new replica: replay must use the latest submit
+    w.log_submit(_req(5, prompt=(1, 2, 8, 8)), replica="r1")
+    w.close()
+    w2 = _wal(tmp_path)
+    assert list(w2.pending) == [5]
+    [r] = w2.replay_requests()
+    assert list(r.prompt) == [1, 2, 8, 8]
+    w2.close()
+
+
+def test_sampled_pending_is_unreplayable(tmp_path):
+    w = _wal(tmp_path)
+    w.log_submit(_req(0))
+    w.log_submit(_req(1, sampling=SamplingParams(temperature=0.8)))
+    w.log_submit(_req(2, sampling=SamplingParams(temperature=0.0)))
+    w.close()
+    w2 = _wal(tmp_path)
+    assert w2.unreplayable() == [1]
+    assert [r.rid for r in w2.replay_requests()] == [0, 2]
+    w2.close()
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: torn tails and corrupt records
+# ---------------------------------------------------------------------------
+
+def test_torn_tail_is_truncated_and_appends_continue(tmp_path):
+    w = _wal(tmp_path)
+    w.log_submit(_req(0))
+    w.log_terminal(0, "ok")
+    w.log_submit(_req(1))
+    w.close()
+    path = tmp_path / "requests.wal"
+    good_size = path.stat().st_size
+    with open(path, "ab") as f:       # the write the crash interrupted
+        f.write(b'{"ev":"terminal","rid":1,"sta')
+
+    w2 = _wal(tmp_path)
+    assert w2.torn_tail and w2.corrupt_records == 0
+    assert path.stat().st_size == good_size      # clean line boundary
+    assert w2.completed == {0: "ok"} and sorted(w2.pending) == [1]
+    w2.log_terminal(1, "cancelled")              # append after truncation
+    w2.close()
+    w3 = _wal(tmp_path)
+    assert not w3.torn_tail
+    assert w3.completed == {0: "ok", 1: "cancelled"} and not w3.pending
+    w3.close()
+
+
+def test_midfile_corruption_skipped_and_completion_preserved(tmp_path):
+    w = _wal(tmp_path)
+    w.log_submit(_req(0))
+    w.log_submit(_req(1))
+    w.log_terminal(0, "ok")
+    w.log_terminal(1, "ok")
+    w.close()
+    path = tmp_path / "requests.wal"
+    lines = path.read_bytes().splitlines(keepends=True)
+    # corrupt rid 0's *submit* mid-file; its later terminal must still
+    # apply, so rid 0 stays completed and is never replayed
+    lines[0] = b'XX' + lines[0][2:]
+    path.write_bytes(b"".join(lines))
+
+    w2 = _wal(tmp_path)
+    assert w2.corrupt_records == 1 and not w2.torn_tail
+    assert w2.completed == {0: "ok", 1: "ok"}
+    assert not w2.pending and w2.replay_requests() == []
+    w2.close()
+
+
+def test_recovered_record_count(tmp_path):
+    w = _wal(tmp_path)
+    for rid in range(3):
+        w.log_submit(_req(rid))
+    w.log_terminal(0, "ok")
+    w.close()
+    w2 = _wal(tmp_path)
+    assert w2.records_recovered == 4
+    assert sorted(w2.pending) == [1, 2]
+    w2.close()
