@@ -113,7 +113,9 @@ def _serve_replicas(args, params, cfg, sampling):
             kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks,
             max_queue=args.max_queue, shed_policy=args.shed_policy,
             faults=faults, degrade_steps=args.degrade_steps,
-            prefix_cache=args.prefix_cache, session_ttl=args.session_ttl)
+            prefix_cache=args.prefix_cache, session_ttl=args.session_ttl,
+            spec_decode=args.spec_decode, spec_k=args.spec_k,
+            spec_draft=args.draft)
 
     wal_path = args.wal if args.wal is not None else default_wal_path()
     svc = ServingService(factory, n_replicas=args.replicas,
@@ -329,6 +331,23 @@ def main():
                          "once N tokens have streamed service-wide "
                          "(mid-decode); supervision must fail its "
                          "requests over and restart it")
+    ap.add_argument("--spec-decode", action="store_true", default=None,
+                    help="speculative decoding: draft-and-verify pure-"
+                         "decode iterations (greedy lanes only; output "
+                         "token-identical to plain decode, only launch "
+                         "count changes). Default ICQ_SPEC_DECODE / off")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens proposed per lane per speculative "
+                         "iteration; the verify launch scores k+1 "
+                         "positions per lane (default ICQ_SPEC_K / 4)")
+    ap.add_argument("--draft", default=None,
+                    choices=["ngram", "self2bit", "tiny", "reject"],
+                    help="drafter for --spec-decode: 'ngram' host-side "
+                         "prompt lookup (zero extra launches), 'self2bit' "
+                         "the serving weights re-quantized at 2 bits, "
+                         "'tiny' a dense 1-layer shrunk config, 'reject' "
+                         "an adversarial always-wrong drafter (rollback "
+                         "stress). Default ICQ_SPEC_DRAFT / ngram")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples (continuous mode)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -390,16 +409,21 @@ def main():
                               faults=faults,
                               degrade_steps=args.degrade_steps,
                               prefix_cache=args.prefix_cache,
-                              session_ttl=args.session_ttl)
+                              session_ttl=args.session_ttl,
+                              spec_decode=args.spec_decode,
+                              spec_k=args.spec_k,
+                              spec_draft=args.draft)
     kv_desc = engine.kv_layout
     if engine.kv_layout == "paged":
         kv_desc += (f": {engine.kv_blocks} blocks x "
                     f"{engine.kv_block_size} rows")
         if engine.prefix_cache:
             kv_desc += ", prefix-cache on"
+    spec_desc = (f", spec_decode=k{engine.spec_k}/{engine.spec_draft}"
+                 if engine.spec_decode else "")
     print(f"[serve] engine mode: {engine.mode} (max_len={args.max_len}, "
           f"prefill_chunk={engine.prefill_chunk}, "
-          f"fused_step={engine.fused_step}, kv={kv_desc})")
+          f"fused_step={engine.fused_step}, kv={kv_desc}{spec_desc})")
     _install_engine_signals(engine)
 
     rng = np.random.default_rng(args.seed)
@@ -500,7 +524,25 @@ def main():
     print(f"[serve] launches: {int(s['launches'])} "
           f"({int(s['prefill_steps'])} chunk / "
           f"{int(s['decode_steps'])} decode / "
-          f"{int(s['fused_steps'])} fused)")
+          f"{int(s['fused_steps'])} fused / "
+          f"{int(s['verify_steps'])} verify / "
+          f"{int(s['draft_launches'])} draft)")
+    if engine.spec_decode:
+        mal = s["mean_accept_len"]
+        hist = " ".join(
+            f"{a}:{n}" for a, n in
+            sorted(engine.metrics.accept_hist.items()))
+        print(f"[serve] speculative: spec_proposed="
+              f"{int(s['spec_proposed'])} spec_accepted="
+              f"{int(s['spec_accepted'])} mean_accept_len="
+              f"{mal if mal != mal else round(mal, 2)} "
+              f"(accept-len hist {hist or 'none'}, "
+              f"{int(s['spec_fallbacks'])} verify fallbacks, "
+              f"{int(s['spec_draft_errors'])} draft errors)")
+    if s["paged_attn_window_fallbacks"]:
+        print(f"[serve] paged-attn window fallbacks: "
+              f"{int(s['paged_attn_window_fallbacks'])} decode launches "
+              f"on the XLA gather arm (sliding window < page-table span)")
     if engine.kv_layout == "paged":
         print(f"[serve] paged KV: cache {int(s['cache_bytes'])} bytes "
               f"({int(s['kv_blocks'])} x {int(s['kv_block_size'])} rows), "

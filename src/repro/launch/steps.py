@@ -276,6 +276,42 @@ def make_fused_step(cfg):
     return fused_step
 
 
+def make_verify_step(cfg):
+    """Speculative-decode verifier: score every draft position at once.
+
+    ``(params, cache, tokens (B, S), start_pos (B,), seq_lens (B,),
+    pages) -> (logits (B, S, vocab), cache)``: lane ``i`` consumes its
+    current feed token in column 0 followed by ``seq_lens[i] - 1`` draft
+    tokens, all written into the cache at ``start_pos[i] + j``. The
+    full per-column logits come back: column ``j`` is the greedy
+    verdict after consuming token ``j``, so acceptance is a host-side
+    longest-matching-prefix scan (serving/spec_decode.py). ``S`` is
+    traced-static (``spec_k + 1``); ragged lanes ride the chunked-
+    prefill per-lane validity masks (``seq_lens``), exactly like
+    ``make_fused_step`` — but unlike the fused step the lm_head bills
+    all B*S rows, since every column's argmax is consulted. M = B*S
+    routes the matmuls down the large-M dequant+MXU arm.
+
+    Cache rows written past the accepted prefix are *stale, not wrong*:
+    the engine rewinds its host ``pos`` vector (and trims paged tail
+    blocks) and the write-discipline invariant — a lane writes position
+    ``p`` the step ``p`` re-enters its valid range — guarantees they
+    are overwritten before any gather can see them as valid.
+    """
+
+    def verify_step(params, cache, tokens, start_pos, seq_lens, pages=None):
+        if pages is not None:
+            cache = sync_cache_pages(cache, pages)
+        cache = sync_cache_positions(cache, start_pos)
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, cache=cache, start_pos=start_pos,
+            seq_lens=seq_lens,
+        )
+        return logits, cache
+
+    return verify_step
+
+
 def make_decode_step(cfg):
     """One new token against an existing cache (the ``decode_*`` shapes).
 

@@ -73,6 +73,28 @@ token-identical to cold-prefill serving (same same-arm caveat as
 chunked prefill; CI pins it, preemption and fault storms included):
 cached rows are bitwise the rows cold prefill would have written.
 
+Speculative decoding
+--------------------
+
+``spec_decode=True`` (``ICQ_SPEC_DECODE``; continuous engine, greedy
+lanes only) runs pure-decode iterations as draft-and-verify: a
+``spec_decode.Drafter`` (``ICQ_SPEC_DRAFT``: host-side ``ngram``
+prompt-lookup by default, or a real low-bit ``self2bit`` /
+``tiny``-config model) proposes up to ``spec_k`` tokens per lane
+(``ICQ_SPEC_K``, default 4) and ONE verify launch scores all k+1
+positions per lane at M = batch*(k+1) — the same large-M dequant+MXU
+arm chunked prefill rides. Greedy acceptance (longest matching draft
+prefix + the verifier's corrected token) makes the output
+**token-identical to plain decode**; rejection rewinds the host
+position vector and trims paged tail blocks (``KVBlockPool.trim``,
+COW-aware — shared/pinned blocks only lose the lane's mapping). A
+faulted verify launch degrades to the plain decode program in the same
+iteration, so the fault-tolerance contract above is unchanged. The
+metrics ledger (``spec_proposed`` / ``spec_accepted`` /
+``mean_accept_len`` / accepted-length histogram, draft-vs-verify launch
+split) accounts tokens accepted-only — rejected drafts never touch
+tokens/s. See docs/SPECULATIVE.md.
+
 Service layer (frontend -> router -> replicas)
 ----------------------------------------------
 
@@ -111,23 +133,31 @@ from repro.serving.replica import EngineReplica, ReplicaDead, ReplicaKilled
 from repro.serving.router import NoReplicaAvailable, ReplicaRouter
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import STATUSES, Request, Slot, SlotScheduler
+from repro.serving.spec_decode import (DRAFTERS, Drafter, ModelDrafter,
+                                       NgramDrafter, RejectDrafter,
+                                       make_drafter, make_spec_verify)
 from repro.serving.wal import RequestWAL
 
 __all__ = [
     "GenerationEngine",
     "GREEDY",
     "ClientError",
+    "DRAFTERS",
+    "Drafter",
     "EngineReplica",
     "FaultInjected",
     "FaultInjector",
     "FrontendUnavailable",
     "KVBlockPool",
     "MetricsCollector",
+    "ModelDrafter",
+    "NgramDrafter",
     "NoReplicaAvailable",
     "PrefixCache",
     "ReplicaDead",
     "ReplicaKilled",
     "ReplicaRouter",
+    "RejectDrafter",
     "Request",
     "RequestMetrics",
     "RequestRejected",
@@ -143,7 +173,9 @@ __all__ = [
     "SlotScheduler",
     "StepTimeWatchdog",
     "block_hashes",
+    "make_drafter",
     "make_serving_step",
+    "make_spec_verify",
     "parse_fault_plan",
     "sample_tokens",
 ]

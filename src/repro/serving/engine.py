@@ -163,6 +163,8 @@ from repro.launch.steps import fork_cache_block, make_cache, \
 from repro.serving.faults import FaultInjected, FaultInjector
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.metrics import MetricsCollector
+from repro.serving.spec_decode import DRAFTERS, Drafter, make_drafter, \
+    make_spec_verify
 from repro.serving.prefix_cache import PrefixCache, SessionStore, \
     block_hashes
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
@@ -418,6 +420,53 @@ def default_degrade_steps() -> int:
     return n
 
 
+def default_spec_decode() -> bool:
+    """Engine default for ``spec_decode`` (ICQ_SPEC_DECODE, default off
+    — the pre-speculation engine bit-for-bit). On, the continuous engine
+    runs draft-and-verify iterations whenever every live lane is
+    greedily decoding (serving/spec_decode.py); greedy output is
+    token-identical either way, only the launch count changes."""
+    env = os.environ.get("ICQ_SPEC_DECODE")
+    if not env:  # unset or set-but-empty
+        return False
+    low = env.lower()
+    if low in ("1", "true", "yes", "on"):
+        return True
+    if low in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"ICQ_SPEC_DECODE must be a boolean flag, got {env!r}")
+
+
+def default_spec_k() -> int:
+    """Draft length default (ICQ_SPEC_K, default 4): tokens proposed per
+    lane per speculative iteration; the verify launch scores k+1
+    positions per lane."""
+    env = os.environ.get("ICQ_SPEC_K")
+    if not env:
+        return 4
+    try:
+        k = int(env)
+    except ValueError:
+        raise ValueError(f"ICQ_SPEC_K must be an integer, got {env!r}")
+    if k < 1:
+        raise ValueError(f"ICQ_SPEC_K must be >= 1, got {k}")
+    return k
+
+
+def default_spec_draft() -> str:
+    """Drafter default (ICQ_SPEC_DRAFT, default 'ngram' — host-side
+    prompt-lookup, zero extra launches). See serving/spec_decode.py for
+    the registry: ngram | self2bit | tiny | reject."""
+    env = os.environ.get("ICQ_SPEC_DRAFT")
+    if not env:
+        return "ngram"
+    if env not in DRAFTERS:
+        raise ValueError(
+            f"ICQ_SPEC_DRAFT must be one of {'|'.join(DRAFTERS)}, "
+            f"got {env!r}")
+    return env
+
+
 def _continuous_supported(cfg, max_len: int) -> Optional[str]:
     """None if the config can run the continuous engine, else the reason."""
     if cfg.is_encdec:
@@ -445,8 +494,13 @@ class GenerationEngine:
                  degrade_steps: Optional[int] = None,
                  fused_step: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
-                 session_ttl: Optional[float] = None):
+                 session_ttl: Optional[float] = None,
+                 spec_decode: Optional[bool] = None,
+                 spec_k: Optional[int] = None,
+                 spec_draft=None,
+                 draft_params=None):
         kw = {"fmt": runtime_fmt} if runtime_fmt is not None else {}
+        raw_params = params   # the self2bit drafter re-quantizes these
         self.params = prepare_serving_params(params, mode=weight_cache, **kw)
         self.cfg = cfg
         self.batch_size = batch_size
@@ -641,6 +695,45 @@ class GenerationEngine:
         if self.degrade_steps < 1:
             raise ValueError(
                 f"degrade_steps must be >= 1, got {self.degrade_steps}")
+        # ---- speculative decoding (serving/spec_decode.py)
+        if spec_decode is None:
+            spec_decode = default_spec_decode()
+        self.spec_decode = bool(spec_decode)
+        self.spec_k = default_spec_k() if spec_k is None else int(spec_k)
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if spec_draft is None:
+            spec_draft = default_spec_draft()
+        self.spec_draft = (spec_draft.name if isinstance(spec_draft, Drafter)
+                           else spec_draft)
+        self._drafter: Optional[Drafter] = None
+        self._verify = None
+        if self.spec_decode:
+            if self.mode != "continuous":
+                raise NotImplementedError(
+                    "spec_decode=True requires the continuous engine "
+                    "(the wave engine has no per-lane positions to rewind)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise NotImplementedError(
+                    f"spec_decode needs positional KV rollback; the "
+                    f"{cfg.family!r} mixer carries recurrent state that "
+                    f"cannot rewind past a rejected draft")
+            if isinstance(spec_draft, Drafter):
+                self._drafter = spec_draft   # injected (tests, custom)
+            else:
+                self._drafter = make_drafter(
+                    spec_draft, raw_params, cfg, batch_size, max_len,
+                    weight_cache=weight_cache, prepare_kw=kw,
+                    draft_params=draft_params, seed=seed)
+            self._verify = jax.jit(make_spec_verify(cfg))
+            from repro.kernels import autotune
+
+            # the verify launch carries M = batch * (spec_k + 1) tokens:
+            # give the autotuner a bucket at that M so the large-M
+            # dequant+MXU arm can block for the verify shape
+            autotune.register_prefill_m(batch_size * (self.spec_k + 1))
+        self._draft_mark = 0     # drafter.launches already ledgered
+
         self._launch_no = 0           # global launch counter (decode+chunk)
         self._degraded_left = 0       # sticky degraded-mode countdown
         self._cancel_pending: set = set()   # rids awaiting cancellation
@@ -1434,6 +1527,179 @@ class GenerationEngine:
                 dirty = True
         return cache, dirty
 
+    def _spec_pass(self, cache, pos: np.ndarray, live: np.ndarray,
+                   tokens: np.ndarray, ctrl, fault):
+        """One speculative draft-and-verify iteration (pure-decode,
+        greedy-only — the caller gates on both).
+
+        The drafter proposes up to ``spec_k`` tokens per lane; ONE
+        verify launch (M = batch * (spec_k + 1), the large-M arm) scores
+        every column; greedy acceptance emits the longest matching draft
+        prefix plus the verifier's own corrected/next token. Column j's
+        logits are exactly what the plain 1-token walk would compute
+        after consuming the same j+1 tokens (the chunked-prefill parity
+        argument), so by induction over the accepted prefix the emitted
+        stream is token-identical to plain decode — only launch count
+        changes. Rejection rewinds the host ``pos`` vector and (paged)
+        trims the lane's tail blocks; stale cache rows past the rewound
+        position are harmless under the write-discipline invariant.
+
+        Returns ``(cache, handled, fault, ctrl_dirty)``. ``handled``
+        False means the caller must fall through to the plain decode
+        program: either nothing could be drafted (``fault`` is handed
+        back unspent) or the verify launch failed (``fault`` comes back
+        None — consumed; degraded mode is set, so the plain decode
+        retraces this iteration on the bitwise-exact XLA arm from the
+        same cache, and its own retry/replay machinery takes over from
+        there — a greedy replay recomputes the identical stream).
+        """
+        B = self.batch_size
+        sched = self._sched
+        S = self.spec_k + 1
+        # per-lane draft budget: stay inside the cache cap and the
+        # request's remaining token budget, and (paged) what the pool
+        # can back right now — clip, never preempt (drafts must never
+        # cost running work its blocks, mirroring the chunk pass)
+        ks = np.zeros((B,), np.int32)
+        hists: Dict[int, np.ndarray] = {}
+        for i in range(B):
+            if not live[i]:
+                continue
+            r = sched.slot(i).request
+            k = min(self.spec_k,
+                    self.max_len - 1 - int(pos[i]),
+                    max(0, r.max_new_tokens - len(r.generated) - 1))
+            if k > 0 and self._pool is not None:
+                backed = self._grow_evicting(i, int(pos[i]) + k + 1)
+                k = min(k, max(0, backed - int(pos[i]) - 1))
+            ks[i] = k
+            # the lane's consumed tokens + the pending feed token: the
+            # (possibly replay-folded) prompt, then fresh generations
+            folded = self._folded.get(r.rid, 0)
+            seq = np.concatenate([
+                np.asarray(r.prompt, np.int32),
+                np.asarray(r.generated[folded:], np.int32)])
+            hists[i] = seq[: int(pos[i]) + 1]
+        slots = [i for i in range(B) if live[i] and ks[i] > 0]
+        if not slots:
+            return cache, False, fault, False
+        d0 = self._drafter.launches
+        try:
+            drafts = self._drafter.propose(
+                slots, [hists[i] for i in slots],
+                [int(ks[i]) for i in slots])
+        except Exception:
+            self.metrics.on_spec_draft_error()
+            drafts = None
+        n_draft = self._drafter.launches - d0
+        if n_draft:
+            self.metrics.on_draft_launches(n_draft)
+        if drafts is None:
+            return cache, False, fault, False
+        toks = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i in range(B):
+            if not live[i]:
+                continue
+            toks[i, 0] = tokens[i, 0]
+            d = np.asarray(drafts.get(i, ()), np.int32).ravel()[: int(ks[i])]
+            ks[i] = len(d)
+            toks[i, 1: 1 + len(d)] = d
+            lens[i] = 1 + len(d)   # k == 0 lanes ride along as plain decode
+        if not (ks > 0).any():
+            return cache, False, fault, False
+
+        d_live = ctrl[0]
+        # .copy(): argument transfers are async and pos mutates below
+        t_dev = jnp.asarray(toks)
+        p_dev = jnp.asarray(pos.copy())
+        l_dev = jnp.asarray(lens)
+        try:
+            if fault == "raise":
+                raise FaultInjected(
+                    f"injected 'raise' at verify launch {self._launch_no - 1}")
+            tgt, cache2, bad = self._verify(
+                self.params, cache, t_dev, p_dev, l_dev, d_live,
+                pages=self._pages_mirror())
+            if bool((np.asarray(bad) & live).any()):
+                raise _BadLogits("non-finite logits on a live lane")
+            if fault == "nan":
+                raise _BadLogits(
+                    f"injected 'nan' at verify launch {self._launch_no - 1}")
+        except RuntimeError as e:   # FaultInjected / _BadLogits / XLA
+            if fault is not None:
+                self.metrics.on_fault(fault)
+            else:
+                self.metrics.on_fault(
+                    "nan" if isinstance(e, _BadLogits) else "error")
+            self._degraded_left = self.degrade_steps
+            self.metrics.on_spec_fallback()
+            # the failed launch's cache output is discarded (jitted
+            # steps are functional): the plain decode below this pass
+            # sees the pre-verify cache, bit-for-bit
+            return cache, False, None, False
+
+        tgt = np.asarray(tgt)
+        t_now = self._now()
+        self.metrics.on_step(
+            int(live.sum()), sched.queue_depth, t_now, kind="verify",
+            blocks_in_use=(None if self._pool is None
+                           else self._pool.used_blocks),
+            shared_blocks=(self._pool.shared_blocks()
+                           if self.prefix_cache else None))
+        self._note_attn_bytes(live, pos + lens)
+
+        dirty = False
+        for i in range(B):
+            if not live[i]:
+                continue
+            st = sched.slot(i)
+            r = st.request
+            k = int(ks[i])
+            # longest draft prefix the verifier agrees with: column j's
+            # argmax must equal the token fed at column j+1
+            a = 0
+            while a < k and tgt[i, a] == toks[i, a + 1]:
+                a += 1
+            if k:
+                self.metrics.on_spec(k, a)
+            # emit the accepted drafts plus the corrected/next token
+            # sequentially, with the plain decode path's exact per-token
+            # finish checks — the stream (and where it stops) is the one
+            # plain decode would produce
+            emitted = 0
+            finished = False
+            for j in range(a + 1):
+                tok = int(tgt[i, j])
+                if not r.generated:
+                    self.metrics.on_first_token(r.rid, t_now)
+                r.generated.append(tok)
+                if r.on_token is not None:
+                    r.on_token(r.rid, tok)
+                emitted = j + 1
+                if (
+                    len(r.generated) >= r.max_new_tokens
+                    or (r.eos_id is not None and tok == r.eos_id)
+                    or int(pos[i]) + emitted >= self.max_len - 1  # cache cap
+                ):
+                    finished = True
+                    break
+            new_pos = int(pos[i]) + emitted
+            pos[i] = new_pos
+            st.pos = new_pos
+            tokens[i, 0] = int(r.generated[-1])
+            if finished:
+                self._finish(i, t_now, live, pos, tokens)
+                dirty = True
+            elif self._pool is not None and emitted <= k:
+                # rollback: the rewound host pos is authoritative; unmap
+                # the lane's tail blocks past its next write row. Never
+                # trims below pos+1 rows, so blocks shared at admission
+                # (all within the consumed prefix) are structurally out
+                # of reach — COW safety by construction, not by check.
+                self._pool.trim(i, new_pos + 1)
+        return cache2, True, None, dirty
+
     def _note_attn_bytes(self, live: np.ndarray,
                          kv_lens: np.ndarray) -> None:
         """Accumulate the paged decode-attention bytes-read estimate for
@@ -1493,6 +1759,16 @@ class GenerationEngine:
         # the small index/pages leaves amortize over the pool rows)
         self._row_bytes = (cache_bytes / (self.kv_blocks * self.kv_block_size)
                            if paged else None)
+        # sliding-window + paged attention: the per-call arm gate
+        # (models/layers._paged_attn_arm) routes any decode whose window
+        # is shorter than the page-table span down the XLA gather arm —
+        # silently, until now. The continuous engine only admits configs
+        # with window >= max_len, so the gate can only fire in the
+        # max_len <= window < n_pt * block_size rounding band; count it
+        # per decode launch so the ledger makes the lost kernel visible.
+        window_xla = bool(
+            paged and self.cfg.sliding_window
+            and self.cfg.sliding_window < self._n_pt * self.kv_block_size)
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         live = np.zeros((B,), bool)
@@ -1614,6 +1890,24 @@ class GenerationEngine:
                 # one split per iteration, shared by every retry of this
                 # launch — a degraded retry redraws identical samples
                 self._key, sub = jax.random.split(self._key)
+            if (self._drafter is not None and greedy_only
+                    and self._degraded_left == 0
+                    and not any(
+                        live[i]
+                        and pos[i] < len(sched.slot(i).request.prompt) - 1
+                        for i in range(B))):
+                # speculative iteration: greedy-only (a sampled stream
+                # has no acceptance identity), pure-decode steady state
+                # only (drafts never preempt prefill — a lane still
+                # admitting bulk prompt sends the whole batch down the
+                # plain path), and never while degraded (the XLA
+                # fallback arm should drain its countdown on the plain
+                # 1-token program the recovery path reasons about)
+                cache, handled, fault, dirty = self._spec_pass(
+                    cache, pos, live, tokens, ctrl, fault)
+                if handled:
+                    ctrl_dirty |= dirty
+                    continue
             if self.fused_step:
                 lens = self._fused_lens(live, pos)
                 if (lens > 1).any():
@@ -1656,6 +1950,8 @@ class GenerationEngine:
                 shared_blocks=(self._pool.shared_blocks()
                                if self.prefix_cache else None))
             self._note_attn_bytes(live, pos + 1)
+            if window_xla:
+                self.metrics.on_window_fallback()
 
             n_prompt = 0
             for i in range(B):

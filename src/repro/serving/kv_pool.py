@@ -206,6 +206,31 @@ class KVBlockPool:
         self.decref(blk)
         return blk
 
+    def trim(self, lane: int, new_len: int) -> int:
+        """Rollback primitive for speculative decoding: unmap the lane's
+        tail blocks so it backs only ``new_len`` logical positions,
+        dropping one reference per unmapped block. COW-aware by
+        construction — a shared or cache-pinned block merely loses this
+        lane's mapping (it is recycled only when its last reference
+        drops) and its contents are never touched; stale rows past
+        ``new_len`` in blocks the lane keeps are harmless under the
+        write-discipline invariant (a lane writes position ``p`` the
+        step ``p`` re-enters its valid range). Returns how many blocks
+        were unmapped."""
+        if new_len < 0:
+            raise ValueError(f"trim to negative length {new_len}")
+        keep = self.blocks_for(new_len)
+        owned = self._owned[lane]
+        n = 0
+        while len(owned) > keep:
+            blk = owned.pop()
+            self.table[lane, len(owned)] = -1
+            self.decref(blk)
+            n += 1
+        if n:
+            self.version += 1
+        return n
+
     def fork(self, lane: int, index: int) -> Optional[int]:
         """Copy-on-write fork of the lane's ``index``-th mapped block:
         allocate a fresh block, remap the page-table entry to it, drop

@@ -145,6 +145,23 @@ class MetricsCollector:
         self.fused_steps: int = 0            # fused prefill+decode launches
         self.prefill_tokens: int = 0         # prompt tokens via chunk program
         self.prompt_decode_tokens: int = 0   # prompt tokens walked 1/step
+        # speculative-decode ledger (serving/spec_decode.py). Tokens/s
+        # and per-request counts stay accepted-only under speculation by
+        # construction: rejected drafts never enter ``generated``, so
+        # ``n_generated`` (and every rate derived from it) never double-
+        # counts a proposed-but-refused token.
+        self.verify_steps: int = 0           # verify-program launches
+        self.draft_launches: int = 0         # drafter device launches
+        self.spec_proposed: int = 0          # draft tokens proposed
+        self.spec_accepted: int = 0          # draft tokens accepted
+        self.spec_lanes: int = 0             # lane-iterations speculated
+        self.accept_hist: Dict[int, int] = {}   # accepted-length histogram
+        self.spec_draft_errors: int = 0      # drafter raised; plain decode
+        self.spec_fallbacks: int = 0         # verify faulted; plain decode
+        # sliding-window + paged attention: decode launches the per-call
+        # arm gate routed down the XLA gather arm because the window is
+        # shorter than the page-table span (docs/ENV.md, ICQ_PAGED_ATTN)
+        self.window_fallbacks: int = 0
         # paged-attention bytes-read estimate, accumulated per launch:
         # 'logical' bills the full page-table span every lane (what a
         # contiguous gather streams), 'live' only the blocks actually
@@ -219,6 +236,8 @@ class MetricsCollector:
             self.prefill_steps += 1
         elif kind == "fused":
             self.fused_steps += 1
+        elif kind == "verify":
+            self.verify_steps += 1
         else:
             self.decode_steps += 1
 
@@ -239,6 +258,39 @@ class MetricsCollector:
     def on_replay(self):
         """Recovery preempted the live lanes and requeued them for replay."""
         self.replays += 1
+
+    def on_spec(self, proposed: int, accepted: int):
+        """One lane's draft-and-verify outcome this iteration:
+        ``proposed`` draft tokens went into the verify launch, the first
+        ``accepted`` of them matched the verifier's greedy verdict (the
+        lane then also emitted the verifier's corrected/next token, so
+        it advanced ``accepted + 1`` tokens for one verify launch)."""
+        self.spec_lanes += 1
+        self.spec_proposed += int(proposed)
+        self.spec_accepted += int(accepted)
+        self.accept_hist[int(accepted)] = \
+            self.accept_hist.get(int(accepted), 0) + 1
+
+    def on_draft_launches(self, n: int):
+        """Device launches the drafter spent this iteration (0 for
+        host-only drafters like 'ngram'/'reject')."""
+        self.draft_launches += int(n)
+
+    def on_spec_draft_error(self):
+        """The drafter raised; the iteration fell back to plain decode."""
+        self.spec_draft_errors += 1
+
+    def on_spec_fallback(self):
+        """The verify launch faulted (injected or genuine); the iteration
+        degraded to the plain decode program, which re-emits this step's
+        token(s) identically on the XLA arm."""
+        self.spec_fallbacks += 1
+
+    def on_window_fallback(self):
+        """One paged decode launch ran on the XLA gather arm because the
+        config's sliding window is shorter than the page-table span
+        (models/layers._paged_attn_arm gate)."""
+        self.window_fallbacks += 1
 
     def on_prefix_attach(self, matched_tokens: int, forked: bool = False,
                          via_session: bool = False):
@@ -344,8 +396,21 @@ class MetricsCollector:
             prefill_steps=float(self.prefill_steps),
             decode_steps=float(self.decode_steps),
             fused_steps=float(self.fused_steps),
+            verify_steps=float(self.verify_steps),
+            draft_launches=float(self.draft_launches),
             launches=float(self.prefill_steps + self.decode_steps
-                           + self.fused_steps),
+                           + self.fused_steps + self.verify_steps
+                           + self.draft_launches),
+            # speculative-decode ledger (accepted-only token accounting)
+            spec_proposed=float(self.spec_proposed),
+            spec_accepted=float(self.spec_accepted),
+            spec_accept_rate=(self.spec_accepted / self.spec_proposed
+                              if self.spec_proposed else float("nan")),
+            mean_accept_len=(self.spec_accepted / self.spec_lanes
+                             if self.spec_lanes else float("nan")),
+            spec_draft_errors=float(self.spec_draft_errors),
+            spec_fallbacks=float(self.spec_fallbacks),
+            paged_attn_window_fallbacks=float(self.window_fallbacks),
             prefill_tokens=float(self.prefill_tokens),
             prompt_decode_tokens=float(self.prompt_decode_tokens),
             attn_logical_bytes=float(self.attn_logical_bytes),

@@ -1,0 +1,338 @@
+"""Speculative decoding: draft-and-verify through the dual ICQ kernel arms.
+
+Decode is small-M and bandwidth-bound — exactly where ICQuant's
+compressed weights shine — yet the tuned dequant+MXU large-M arm sits
+idle during pure-decode iterations. Speculative decoding puts it to
+work: a cheap **drafter** proposes ``k`` tokens per lane, and ONE
+verifier launch (``launch/steps.make_verify_step``) scores all ``k+1``
+positions at M = batch*(k+1), which routes the matmuls down the same
+large-M arm chunked prefill uses. Greedy acceptance — the longest
+prefix of drafts matching the verifier's own argmax, plus the
+verifier's one corrected/next token — makes the output **token-
+identical to plain greedy decode**: column ``j`` of the verify launch
+sees exactly the tokens the plain walk would have consumed (induction
+over the accepted prefix), so only the launch count changes, never a
+token. That keeps the repo's token-parity CI discipline intact (same
+same-arm ulp caveat as chunked prefill: the verify M lands on the
+dequant arm where the 1-token walk rides the fused kernel; CI pins
+parity on the XLA arms, the compiled-TPU pass owns cross-arm greedy
+stability).
+
+Rejection costs nothing but stale cache rows: the engine rewinds its
+host position vector and (paged layout) calls
+``KVBlockPool.trim(lane, new_len)`` to unmap tail blocks — rows past
+the rewound position are harmless under the write-discipline invariant
+(a lane writes position ``p`` the step ``p`` re-enters its valid
+range), the exact argument that already covers preempt-and-requeue.
+Speculation is **greedy-gated** (temperature > 0 lanes bypass it — a
+sampled stream has no acceptance identity), never preempts prefill
+(the engine speculates only when every live lane is decoding), and is
+unavailable for recurrent mixers (ssm/hybrid state cannot rewind).
+
+Drafters (``make_drafter``):
+
+  * ``'ngram'``   (default) — prompt-lookup drafting: match the lane's
+    trailing n-gram against its own consumed history and propose the
+    historical continuation; repeats the last token when nothing
+    matches. ZERO model launches, so an iteration costs exactly one
+    verify launch — worst case ~plain-decode throughput, and greedy
+    streams (which love loops) often accept most of ``k``.
+  * ``'self2bit'`` — self-speculation: the *serving weights themselves*
+    re-quantized at n_bits=2 via a second ``quantize_tree`` +
+    ``prepare_serving_params`` sharing the engine's ``weight_cache``
+    mode. OWQ-style outlier handling makes the 2-bit twin nearly free
+    in HBM; alignment comes from being the same model.
+  * ``'tiny'``   — a dense 1-layer shrunk config of the target
+    architecture (same vocab), randomly initialized unless
+    ``draft_params`` is supplied. A real deployment plugs a distilled
+    drafter in here; an *undistilled* one is rejection-heavy, which is
+    exactly what the CI chaos path wants.
+  * ``'reject'`` — adversarial test drafter: proposes tokens chosen to
+    be wrong (last token + 1 mod vocab), forcing the rejection/rollback
+    path every iteration while still emitting one correct token per
+    verify (the corrected column). Parity must survive it.
+
+Model drafters keep their own per-lane contiguous KV cache and a host
+mirror of each lane's consumed tokens; every ``propose`` first
+computes the longest common prefix of its mirror with the engine's
+authoritative history (so rejected drafts, preemptions, lane recycling
+and warm starts all reduce to "re-consume the delta"), catches up
+chunk-wise through a fused-step program, then rolls ``k`` greedy
+1-token proposals. Rollback on the drafter side is the same
+position-rewind trick — stale rows in its private cache are equally
+harmless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_cache, make_fused_step, make_verify_step
+
+__all__ = ["Drafter", "NgramDrafter", "RejectDrafter", "ModelDrafter",
+           "make_drafter", "make_spec_verify", "DRAFTERS"]
+
+
+def make_spec_verify(cfg):
+    """The engine's verify program: ``make_verify_step`` + greedy argmax
+    + the NaN health probe, as one jit-able program.
+
+    ``(params, cache, tokens (B, S), start_pos (B,), seq_lens (B,),
+    live (B,), pages) -> (tgt (B, S) int32, cache, bad (B,))``: ``tgt``
+    is the per-column greedy verdict, ``bad`` is True where a live
+    lane's logits are non-finite in any *valid* column (columns past
+    ``seq_lens[i]`` are write-masked garbage — a fully-masked softmax
+    row may be legitimately NaN — so they never trip the probe).
+    """
+    verify = make_verify_step(cfg)
+
+    def prog(params, cache, tokens, start_pos, seq_lens, live, pages=None):
+        logits, cache = verify(params, cache, tokens, start_pos, seq_lens,
+                               pages=pages)
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        finite = jnp.isfinite(logits).all(axis=-1)          # (B, S)
+        valid = (jnp.arange(tokens.shape[1])[None, :]
+                 < seq_lens[:, None])                       # (B, S)
+        bad = live & (valid & ~finite).any(axis=-1)
+        return tgt, cache, bad
+
+    return prog
+
+
+class Drafter:
+    """Base drafter: propose up to ``k`` greedy continuation tokens per
+    lane. ``hists[j]`` is lane ``slots[j]``'s full consumed history
+    *including* the pending feed token (``(prompt ++ fresh generated)
+    [:pos+1]``) — the proposal is the drafter's greedy continuation
+    after consuming all of it. ``launches`` counts device launches the
+    drafter spent (0 for host-only drafters); the engine ledgers the
+    delta per iteration."""
+
+    name = "base"
+
+    def __init__(self):
+        self.launches = 0
+
+    def propose(self, slots: Sequence[int], hists: Sequence[np.ndarray],
+                ks: Sequence[int]) -> Dict[int, np.ndarray]:
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting (zero launches): match the longest
+    trailing n-gram (``max_n`` down to 1) of the lane's history against
+    an earlier occurrence and propose the ``k`` tokens that followed
+    it; fill with the last token when history offers nothing (greedy
+    streams repeat — a run IS a 1-gram hit one step later)."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3):
+        super().__init__()
+        if max_n < 1:
+            raise ValueError(f"max_n must be >= 1, got {max_n}")
+        self.max_n = max_n
+
+    def propose(self, slots, hists, ks):
+        out = {}
+        for slot, hist, k in zip(slots, hists, ks):
+            h = np.asarray(hist, np.int64)
+            L = len(h)
+            drafts = None
+            for n in range(min(self.max_n, L - 1), 0, -1):
+                pat = h[L - n:]
+                # most recent earlier occurrence of the trailing n-gram
+                for s in range(L - n - 1, -1, -1):
+                    if np.array_equal(h[s: s + n], pat):
+                        cont = h[s + n: s + n + k]
+                        if len(cont):
+                            drafts = np.resize(
+                                cont, k) if len(cont) < k else cont[:k]
+                        break
+                if drafts is not None:
+                    break
+            if drafts is None:
+                drafts = np.full(k, h[-1], np.int64)
+            out[slot] = np.asarray(drafts[:k], np.int32)
+        return out
+
+
+class RejectDrafter(Drafter):
+    """Adversarial test drafter: every proposal is ``last + 1 + j`` mod
+    vocab — engineered to disagree with any self-consistent greedy
+    stream almost always, so every iteration exercises the rejection /
+    KV-rollback path while the verify's corrected column keeps the
+    stream advancing one token. Output parity must be unaffected."""
+
+    name = "reject"
+
+    def __init__(self, vocab_size: int):
+        super().__init__()
+        self.vocab_size = int(vocab_size)
+
+    def propose(self, slots, hists, ks):
+        return {
+            slot: ((int(hist[-1]) + 1 + np.arange(k, dtype=np.int64))
+                   % self.vocab_size).astype(np.int32)
+            for slot, hist, k in zip(slots, hists, ks)
+        }
+
+
+class ModelDrafter(Drafter):
+    """A real (cheap) model proposes: its own per-lane contiguous KV
+    cache, a host mirror of each lane's consumed tokens, and one fused
+    chunk program for both catch-up and 1-token proposal rolls. See the
+    module doc for the common-prefix resync that makes rejections,
+    preemptions and lane recycling all collapse to "consume the delta".
+    """
+
+    name = "model"
+
+    def __init__(self, params, cfg, batch_size: int, max_len: int,
+                 chunk: int = 8):
+        super().__init__()
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.params = params
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.max_len = int(max_len)
+        self.chunk = int(chunk)
+        self._cache = make_cache(params, cfg, self.batch_size, self.max_len,
+                                 per_lane=True)
+        self._seqs: List[List[int]] = [[] for _ in range(self.batch_size)]
+        fused = make_fused_step(cfg)
+
+        def prog(params, cache, tokens, start_pos, seq_lens):
+            logits, cache = fused(params, cache, tokens, start_pos, seq_lens)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prog = jax.jit(prog)
+
+    def _launch(self, toks: np.ndarray, lens: np.ndarray) -> np.ndarray:
+        start = np.asarray([len(s) for s in self._seqs], np.int32)
+        nxt, self._cache = self._prog(
+            self.params, self._cache, jnp.asarray(toks),
+            jnp.asarray(start), jnp.asarray(lens))
+        self.launches += 1
+        return np.asarray(nxt)
+
+    def propose(self, slots, hists, ks):
+        B, S = self.batch_size, self.chunk
+        # resync: roll each lane's mirror back to its agreement with the
+        # engine's authoritative history, then consume the delta
+        pend: Dict[int, List[int]] = {}
+        for slot, hist in zip(slots, hists):
+            h = [int(t) for t in hist]
+            seq = self._seqs[slot]
+            m = 0
+            lim = min(len(seq), len(h))
+            while m < lim and seq[m] == h[m]:
+                m += 1
+            if m == len(h):          # defensive: always re-consume >= 1
+                m = len(h) - 1       # token so last-column logits exist
+            self._seqs[slot] = seq[:m]
+            pend[slot] = h[m:]
+        first: Dict[int, int] = {}
+        while any(pend.values()):
+            toks = np.zeros((B, S), np.int32)
+            lens = np.zeros((B,), np.int32)
+            for slot in slots:
+                rem = pend[slot]
+                n = min(S, len(rem))
+                if n:
+                    toks[slot, :n] = rem[:n]
+                    lens[slot] = n
+            nxt = self._launch(toks, lens)
+            for slot in slots:
+                n = int(lens[slot])
+                if n:
+                    self._seqs[slot].extend(pend[slot][:n])
+                    pend[slot] = pend[slot][n:]
+                    if not pend[slot]:
+                        first[slot] = int(nxt[slot])
+        drafts = {slot: [first[slot]] for slot in slots}
+        # greedy 1-token rolls for the remaining k-1 proposals per lane
+        while True:
+            roll = [slot for slot, k in zip(slots, ks)
+                    if len(drafts[slot]) < k]
+            if not roll:
+                break
+            toks = np.zeros((B, S), np.int32)
+            lens = np.zeros((B,), np.int32)
+            for slot in roll:
+                toks[slot, 0] = drafts[slot][-1]
+                lens[slot] = 1
+            nxt = self._launch(toks, lens)
+            for slot in roll:
+                self._seqs[slot].append(int(toks[slot, 0]))
+                drafts[slot].append(int(nxt[slot]))
+        return {slot: np.asarray(d[:k], np.int32)
+                for slot, d, k in ((s, drafts[s], k)
+                                   for s, k in zip(slots, ks))}
+
+
+def _dense_tree(params):
+    """Materialize any quantized leaves (ICQPacked / ICQRuntime /
+    ICQPrepared) to dense arrays so ``quantize_tree`` can re-quantize
+    them at a different bit width."""
+    from repro.core.icquant import ICQPacked, ICQRuntime
+    from repro.kernels import backend as _backend
+    from repro.models.linear import as_dense
+
+    def is_q(w):
+        return isinstance(
+            w, (ICQPacked, ICQRuntime, _backend.ICQPrepared))
+
+    return jax.tree.map(lambda w: as_dense(w) if is_q(w) else w, params,
+                        is_leaf=is_q)
+
+
+def tiny_draft_config(cfg):
+    """The 'tiny' drafter's architecture: the target config shrunk to a
+    single layer (every width already validated by construction, same
+    vocab — the only dimension acceptance cares about)."""
+    return dataclasses.replace(cfg, name=f"{cfg.name}-draft", n_layers=1)
+
+
+DRAFTERS = ("ngram", "self2bit", "tiny", "reject")
+
+
+def make_drafter(kind: str, params, cfg, batch_size: int, max_len: int,
+                 weight_cache: str = "prepared",
+                 prepare_kw: Optional[dict] = None,
+                 draft_params=None, seed: int = 0, n_bits: int = 2,
+                 chunk: int = 8) -> Drafter:
+    """Drafter factory for the engine. ``params`` are the engine's RAW
+    constructor params (captured before ``prepare_serving_params``
+    consumed them) — 'self2bit' dequantizes and re-quantizes them at
+    ``n_bits`` and shares the engine's ``weight_cache`` mode /
+    ``prepare_kw``; 'tiny' initializes (or accepts via ``draft_params``)
+    a dense 1-layer config; 'ngram' / 'reject' are host-only."""
+    if kind == "ngram":
+        return NgramDrafter()
+    if kind == "reject":
+        return RejectDrafter(cfg.vocab_size)
+    if kind == "tiny":
+        dcfg = tiny_draft_config(cfg)
+        if draft_params is None:
+            from repro.models import init_model
+
+            draft_params = init_model(jax.random.PRNGKey(seed), dcfg)
+        return ModelDrafter(draft_params, dcfg, batch_size, max_len,
+                            chunk=chunk)
+    if kind == "self2bit":
+        from repro.launch.quantize import quantize_tree
+        from repro.launch.steps import prepare_serving_params
+
+        qparams, _ = quantize_tree(_dense_tree(params), n_bits,
+                                   gamma=cfg.quant_gamma)
+        qparams = prepare_serving_params(qparams, mode=weight_cache,
+                                         **(prepare_kw or {}))
+        return ModelDrafter(qparams, cfg, batch_size, max_len, chunk=chunk)
+    raise ValueError(
+        f"unknown drafter {kind!r}; available: {', '.join(DRAFTERS)}")

@@ -48,6 +48,7 @@ def test_known_knobs_present():
     for var in ("ICQ_PAGED_ATTN", "ICQ_ACCUM_DTYPE", "ICQ_FUSED_STEP",
                 "ICQ_PREFILL_CHUNK", "ICQ_KV_LAYOUT", "ICQ_FAULT_PLAN",
                 "ICQ_PREFIX_CACHE", "ICQ_SESSION_TTL",
+                "ICQ_SPEC_DECODE", "ICQ_SPEC_K", "ICQ_SPEC_DRAFT",
                 "ICQ_WAL_PATH", "ICQ_HEARTBEAT_S", "ICQ_STALL_STEPS",
                 "ICQ_RETRY_MAX", "ICQ_RETRY_BASE_S", "ICQ_RETRY_CAP_S"):
         assert var in doc

@@ -253,6 +253,157 @@ def test_pool_refcount_invariants_random_share_schedule():
 
 
 # ---------------------------------------------------------------------------
+# allocator: trim — the speculative-decoding rollback primitive (ISSUE-10)
+# ---------------------------------------------------------------------------
+
+def test_pool_trim_across_block_boundaries():
+    """Trim pops exactly the tail blocks past blocks_for(new_len):
+    block-aligned and mid-block targets, idempotence, trim-to-zero."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    assert pool.grow(0, 14) == 16            # 4 blocks mapped
+    chain = pool.lane_chain(0)
+    with pytest.raises(ValueError):
+        pool.trim(0, -1)
+    v = pool.version
+    assert pool.trim(0, 9) == 1              # mid-block: keep 3 blocks
+    assert pool.version > v
+    assert pool.lane_chain(0) == chain[:3]
+    assert (pool.table[0, 3:] == -1).all()
+    pool.check_invariants()
+    v = pool.version
+    assert pool.trim(0, 9) == 0              # idempotent, no version bump
+    assert pool.trim(0, 12) == 0             # growing target is a no-op
+    assert pool.version == v
+    assert pool.trim(0, 8) == 1              # block-aligned: keep 2
+    assert pool.trim(0, 1) == 1              # keep the partial head block
+    assert pool.lane_chain(0) == chain[:1]
+    assert pool.trim(0, 0) == 1              # full rewind
+    assert pool.lane_blocks(0) == 0
+    pool.check_invariants()
+    assert pool.free_blocks == 8             # every popped block recycled
+    assert pool.ensure(1, 16)                # ... and immediately reusable
+
+
+def test_pool_trim_shared_tail_drops_mapping_never_contents():
+    """Trim over a shared (prefix-cache pinned) chain: the lane's mapping
+    goes, the blocks stay live under their pins — never recycled, so the
+    chain another lane attends through is structurally untouchable."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    pool.grow(0, 12)                         # 3 blocks
+    chain = _pin_and_release(pool, 0)
+    ext = {b: 1 for b in chain}
+    pool.share(1, chain)
+    assert pool.trim(1, 4) == 2              # drop two shared tail mappings
+    assert pool.lane_chain(1) == chain[:1]
+    for b in chain:                          # all three survive their pins
+        assert pool.refcount(b) >= 1
+    assert pool.used_blocks == 3
+    pool.check_invariants(external=ext)
+    pool.release(1)
+    for b in chain:
+        pool.decref(b)
+    pool.check_invariants()
+    assert pool.free_blocks == 8
+
+
+def test_pool_trim_after_cow_fork_frees_private_block_only():
+    """COW fork then trim — the speculative divergence-inside-a-shared-
+    block shape: the lane's private forked block is recycled by trim,
+    the pinned original it replaced is not."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, n_lanes=2,
+                       max_blocks_per_lane=4)
+    pool.grow(0, 8)                          # 2 blocks
+    chain = _pin_and_release(pool, 0)
+    ext = {b: 1 for b in chain}
+    pool.share(1, chain)
+    dst = pool.fork(1, 1)                    # diverge in the tail block
+    assert dst is not None and pool.refcount(dst) == 1
+    free_before = pool.free_blocks
+    assert pool.trim(1, 4) == 1              # rejection rewinds the fork
+    assert pool.free_blocks == free_before + 1   # dst recycled...
+    assert pool.refcount(chain[1]) == 1          # ...the original only pinned
+    assert pool.lane_chain(1) == [chain[0]]
+    pool.check_invariants(external=ext)
+
+
+def _random_spec_schedule(pool, rng, steps, spec_k=4):
+    """Random draft/accept/reject schedule mirroring the speculative
+    engine's per-iteration KV lifecycle: grow to back pos + k + 1 before
+    the verify launch, trim back to pos + emitted + 1 afterwards —
+    interleaved with finishes, warm-start shares and COW forks.
+    Invariants checked after every operation."""
+    bs = pool.block_size
+    cap = pool.max_blocks_per_lane * bs
+    pos = [0] * pool.n_lanes
+    external = {}
+    retained = []
+
+    def unpin(chain):
+        for b in reversed(chain):
+            external[b] -= 1
+            if external[b] == 0:
+                del external[b]
+            pool.decref(b)
+
+    for _ in range(steps):
+        op = rng.random()
+        lane = int(rng.integers(pool.n_lanes))
+        if op < 0.15:                              # finish: maybe retain
+            chain = pool.lane_chain(lane)
+            if chain and rng.random() < 0.5:
+                for b in chain:
+                    pool.incref(b)
+                    external[b] = external.get(b, 0) + 1
+                retained.append(chain)
+            pool.release(lane)
+            pos[lane] = 0
+        elif op < 0.3 and retained and pool.lane_blocks(lane) == 0:
+            chain = retained[int(rng.integers(len(retained)))]
+            k = int(rng.integers(
+                1, min(len(chain), pool.max_blocks_per_lane) + 1))
+            pool.share(lane, chain[:k])            # warm start on a prefix
+            pos[lane] = k * bs
+            if rng.random() < 0.5:                 # mid-block divergence
+                if pool.fork(lane, k - 1) is None:
+                    pool.pop_last(lane)            # dry-pool degrade
+                    pos[lane] = (k - 1) * bs
+        elif op < 0.4 and retained:                # cache eviction analog
+            unpin(retained.pop(int(rng.integers(len(retained)))))
+        else:                                      # draft -> verify -> accept
+            k = int(rng.integers(1, spec_k + 1))
+            want = min(pos[lane] + k + 1, cap)
+            backed = pool.grow(lane, want)
+            if backed <= pos[lane]:                # pool dry: preempt
+                pool.release(lane)
+                pos[lane] = 0
+            else:
+                k = min(k, backed - pos[lane] - 1)  # clip, never preempt
+                emitted = int(rng.integers(1, k + 2))   # accept a in [0, k]
+                new_pos = min(pos[lane] + emitted, backed)
+                pool.trim(lane, new_pos + 1)       # keep the next-write row
+                pos[lane] = min(new_pos, cap - 1)
+        pool.check_invariants(external=external)
+        assert pool.free_blocks + pool.used_blocks == pool.num_blocks
+        for ln in range(pool.n_lanes):             # every pos stays backed
+            assert pool.lane_blocks(ln) * bs >= pos[ln]
+    for lane in range(pool.n_lanes):
+        pool.release(lane)
+    while retained:
+        unpin(retained.pop())
+    pool.check_invariants()
+    assert pool.free_blocks == pool.num_blocks
+
+
+def test_pool_trim_invariants_random_spec_schedule():
+    rng = np.random.default_rng(5)
+    pool = KVBlockPool(num_blocks=16, block_size=4, n_lanes=4,
+                       max_blocks_per_lane=4)
+    _random_spec_schedule(pool, rng, 400)
+
+
+# ---------------------------------------------------------------------------
 # layer-level: paged cache == contiguous cache, bitwise (gqa + mla)
 # ---------------------------------------------------------------------------
 
@@ -551,6 +702,24 @@ if HAVE_HYPOTHESIS:
         pool = KVBlockPool(num_blocks=nb, block_size=bs, n_lanes=lanes,
                            max_blocks_per_lane=width)
         _random_share_schedule(pool, rng, 120)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           nb=st.integers(2, 24),
+           bs=st.integers(1, 8),
+           lanes=st.integers(1, 4),
+           width=st.integers(1, 6),
+           spec_k=st.integers(1, 6))
+    def test_property_pool_trim_spec_schedule(seed, nb, bs, lanes, width,
+                                              spec_k):
+        """Any pool geometry, any draft/accept/reject schedule with
+        rollback-by-trim over shared, forked and pinned chains: refcount
+        and free-list conservation hold every step, a lane's position
+        always stays backed, and full release returns every block."""
+        rng = np.random.default_rng(seed)
+        pool = KVBlockPool(num_blocks=nb, block_size=bs, n_lanes=lanes,
+                           max_blocks_per_lane=width)
+        _random_spec_schedule(pool, rng, 120, spec_k=spec_k)
 
     @settings(max_examples=30, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1),

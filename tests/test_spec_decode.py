@@ -1,0 +1,294 @@
+"""Speculative decoding subsystem (ISSUE-10): draft-and-verify through
+the dual ICQ kernel arms with paged-KV rollback.
+
+The contract under test: with greedy sampling, ``spec_decode=True``
+changes how many launches the output costs — one verify launch at
+M = batch * (k+1) replaces ``accepted + 1`` decode launches — never
+which tokens come out. Spec output must be token-identical to plain
+decode for every drafter (the always-wrong ``reject`` one included),
+both KV layouts, fused and split step structures, through preemption
+storms and verify-launch faults. Plus: the drafters' host-side
+contracts, the engine gates, the env knobs, and the accepted-only
+metrics accounting.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import init_model
+from repro.serving import (DRAFTERS, FaultInjector, GenerationEngine,
+                           NgramDrafter, RejectDrafter, Request,
+                           make_drafter, parse_fault_plan)
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mixed_specs(cfg, n, seed=0, prompt_hi=9, new_hi=8):
+    rng = np.random.default_rng(seed)
+    return [dict(rid=rid,
+                 prompt=rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(2, prompt_hi))
+                                     ).astype(np.int32),
+                 max_new_tokens=int(rng.integers(2, new_hi)))
+            for rid in range(n)]
+
+
+def _run(params, cfg, specs, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_len", 32)
+    eng = GenerationEngine(params, cfg, mode="continuous", **kw)
+    for s in specs:
+        eng.submit(Request(**s))
+    out = {rid: r.generated for rid, r in eng.run().items()}
+    eng.check_shutdown_invariants()
+    return out, eng
+
+
+# ---------------------------------------------------------------------------
+# drafters: host-side contracts (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(max_n=3)
+    hist = np.asarray([5, 1, 2, 3, 9, 1, 2, 3], np.int32)
+    out = d.propose([0], [hist], [4])
+    # trailing 3-gram (1,2,3) last occurred at index 1, followed by 9 —
+    # the proposal replays that continuation (cycled out to k)
+    assert list(out[0][:2]) == [9, 1]
+    assert len(out[0]) == 4 and out[0].dtype == np.int32
+    # no n-gram hit anywhere: fall back to repeating the last token
+    out = d.propose([1], [np.asarray([4, 7, 2], np.int32)], [3])
+    assert list(out[1]) == [2, 2, 2]
+    assert d.launches == 0
+    with pytest.raises(ValueError):
+        NgramDrafter(max_n=0)
+
+
+def test_reject_drafter_is_deterministically_wrong():
+    d = RejectDrafter(vocab_size=11)
+    hist = np.asarray([3, 9], np.int32)
+    out = d.propose([2], [hist], [5])
+    assert list(out[2]) == [(9 + 1 + j) % 11 for j in range(5)]
+    assert d.launches == 0
+
+
+def test_make_drafter_rejects_unknown_kind():
+    cfg, params = _setup("llama3.2-1b")
+    with pytest.raises(ValueError, match="drafter"):
+        make_drafter("banana", params, cfg, 2, 32)
+
+
+# ---------------------------------------------------------------------------
+# parity: spec output token-identical to plain decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_spec_parity_layouts_and_steps(arch):
+    """gqa + mla, contiguous + paged, split chunked prefill and the
+    fused mixed step: every spec variant reproduces plain decode's
+    greedy streams request-for-request."""
+    cfg, params = _setup(arch)
+    specs = _mixed_specs(cfg, 5)
+    plain, _ = _run(params, cfg, specs, kv_layout="contiguous")
+    sp = dict(spec_decode=True, spec_k=4, spec_draft="ngram")
+    runs = (
+        ("contig", dict(kv_layout="contiguous")),
+        ("paged", dict(kv_layout="paged", kv_block_size=4)),
+        ("paged_split", dict(kv_layout="paged", kv_block_size=4,
+                             prefill_chunk=4, fused_step=False)),
+        ("paged_fused", dict(kv_layout="paged", kv_block_size=4,
+                             prefill_chunk=4, fused_step=True)),
+    )
+    for label, kw in runs:
+        out, eng = _run(params, cfg, specs, **sp, **kw)
+        assert out == plain, f"{label}: spec diverged from plain decode"
+        assert eng.metrics.verify_steps > 0, f"{label}: never speculated"
+        if eng._pool is not None:
+            eng._pool.check_invariants()
+            assert eng._pool.free_blocks == eng._pool.num_blocks
+
+
+def test_spec_parity_every_drafter_kind():
+    """All four registered drafters — including the adversarial
+    ``reject`` one, whose every proposal is wrong and whose iterations
+    all take the KV-rollback path — keep token parity."""
+    cfg, params = _setup("llama3.2-1b")
+    specs = _mixed_specs(cfg, 3, seed=2)
+    plain, _ = _run(params, cfg, specs, kv_layout="paged", kv_block_size=4)
+    for kind in DRAFTERS:
+        out, eng = _run(params, cfg, specs, kv_layout="paged",
+                        kv_block_size=4, spec_decode=True, spec_k=3,
+                        spec_draft=kind)
+        assert out == plain, f"{kind}: spec diverged from plain decode"
+        assert eng.spec_draft == kind
+        s = eng.metrics.summary()
+        assert s["verify_steps"] > 0
+        if kind == "reject":
+            # every draft rejected: zero acceptance, full rollback churn
+            assert s["spec_proposed"] > 0 and s["spec_accepted"] == 0
+        if kind == "ngram":
+            assert s["draft_launches"] == 0   # host-only drafter
+
+
+def test_spec_preemption_recomputes_identical_streams():
+    """Pool sized so lanes get preempted mid-run (the plain +1 growth
+    path — drafts themselves clip, never preempt): the replayed lanes'
+    spec streams must still match the contiguous plain run, and the
+    drafter's host mirror must resync across the fold."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(1)
+    specs = [dict(rid=r,
+                  prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                  max_new_tokens=16) for r in range(2)]
+    plain, _ = _run(params, cfg, specs, kv_layout="contiguous")
+    out, eng = _run(params, cfg, specs, kv_layout="paged", kv_block_size=4,
+                    kv_blocks=6, spec_decode=True, spec_k=4)
+    assert eng.metrics.preemptions >= 1, \
+        "pool was large enough that nothing was preempted — bad fixture"
+    assert out == plain
+    assert eng._pool.free_blocks == eng._pool.num_blocks
+
+
+def test_spec_verify_fault_degrades_to_plain_token_identical():
+    """An injected fault on a verify launch: the iteration falls back to
+    the plain decode program from the pre-verify cache, the engine goes
+    degraded for ``degrade_steps`` launches, and the streams stay
+    token-identical. ``spec_fallbacks`` ledgers the event."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(3)
+    specs = [dict(rid=r,
+                  prompt=rng.integers(0, cfg.vocab_size, 2).astype(np.int32),
+                  max_new_tokens=24) for r in range(2)]
+    plain, _ = _run(params, cfg, specs, kv_layout="contiguous")
+    # iteration 0 drains the 2-token prompts; 1+ are speculative, so the
+    # planned faults land on verify launches (nan probe + raise path)
+    inj = FaultInjector(plan=parse_fault_plan("3:nan,6:raise"))
+    out, eng = _run(params, cfg, specs, kv_layout="paged", kv_block_size=4,
+                    spec_decode=True, spec_k=4, faults=inj, degrade_steps=2)
+    assert out == plain
+    s = eng.metrics.summary()
+    assert s["spec_fallbacks"] >= 1, "no fault ever hit a verify launch"
+    assert s["faults"] >= 1 and s["degraded_steps"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# metrics: accepted-only accounting
+# ---------------------------------------------------------------------------
+
+def test_spec_metrics_count_accepted_tokens_only():
+    cfg, params = _setup("llama3.2-1b")
+    specs = _mixed_specs(cfg, 4, seed=5, new_hi=10)
+    out, eng = _run(params, cfg, specs, kv_layout="paged", kv_block_size=4,
+                    spec_decode=True, spec_k=4)
+    s = eng.metrics.summary()
+    # tokens/s numerator == what the requests actually got, not proposals
+    assert s["generated_tokens"] == sum(len(g) for g in out.values())
+    assert s["spec_proposed"] >= s["spec_accepted"] >= 0
+    assert s["verify_steps"] > 0
+    lanes = sum(eng.metrics.accept_hist.values())
+    assert lanes == eng.metrics.spec_lanes
+    assert sum(a * n for a, n in eng.metrics.accept_hist.items()) \
+        == eng.metrics.spec_accepted
+    if s["spec_proposed"]:
+        assert 0.0 <= s["spec_accept_rate"] <= 1.0
+    assert s["mean_accept_len"] <= eng.spec_k
+    for key in ("draft_launches", "spec_draft_errors", "spec_fallbacks",
+                "paged_attn_window_fallbacks"):
+        assert key in s
+
+
+# ---------------------------------------------------------------------------
+# gates + env knobs
+# ---------------------------------------------------------------------------
+
+def test_spec_gates():
+    cfg, params = _setup("llama3.2-1b")
+    with pytest.raises(NotImplementedError):   # wave engine: no rollback
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="wave", spec_decode=True)
+    with pytest.raises(ValueError):
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="continuous", spec_decode=True, spec_k=0)
+    with pytest.raises(ValueError):
+        GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                         mode="continuous", spec_decode=True,
+                         spec_draft="banana")
+    ssm_cfg, ssm_params = _setup("mamba2-130m")
+    with pytest.raises(NotImplementedError):   # recurrent state: no rewind
+        GenerationEngine(ssm_params, ssm_cfg, batch_size=2, max_len=16,
+                         mode="continuous", spec_decode=True)
+
+
+def test_spec_env_defaults(monkeypatch):
+    from repro.serving.engine import (default_spec_decode, default_spec_draft,
+                                      default_spec_k)
+
+    for var in ("ICQ_SPEC_DECODE", "ICQ_SPEC_K", "ICQ_SPEC_DRAFT"):
+        monkeypatch.delenv(var, raising=False)
+    assert default_spec_decode() is False
+    assert default_spec_k() == 4
+    assert default_spec_draft() == "ngram"
+    monkeypatch.setenv("ICQ_SPEC_DECODE", "")     # empty string = unset
+    assert default_spec_decode() is False
+    monkeypatch.setenv("ICQ_SPEC_DECODE", "on")
+    assert default_spec_decode() is True
+    monkeypatch.setenv("ICQ_SPEC_DECODE", "banana")
+    with pytest.raises(ValueError):
+        default_spec_decode()
+    monkeypatch.setenv("ICQ_SPEC_K", "7")
+    assert default_spec_k() == 7
+    for bad in ("0", "-1", "banana"):
+        monkeypatch.setenv("ICQ_SPEC_K", bad)
+        with pytest.raises(ValueError):
+            default_spec_k()
+    monkeypatch.setenv("ICQ_SPEC_DRAFT", "reject")
+    assert default_spec_draft() == "reject"
+    monkeypatch.setenv("ICQ_SPEC_DRAFT", "banana")
+    with pytest.raises(ValueError):
+        default_spec_draft()
+
+
+def test_engine_env_selects_spec(monkeypatch):
+    cfg, params = _setup("llama3.2-1b")
+    monkeypatch.setenv("ICQ_SPEC_DECODE", "1")
+    monkeypatch.setenv("ICQ_SPEC_K", "3")
+    monkeypatch.setenv("ICQ_SPEC_DRAFT", "reject")
+    eng = GenerationEngine(params, cfg, batch_size=2, max_len=16,
+                           mode="continuous")
+    assert eng.spec_decode and eng.spec_k == 3
+    assert eng.spec_draft == "reject"
+    assert eng._drafter is not None and eng._drafter.name == "reject"
+
+
+# ---------------------------------------------------------------------------
+# carried-over fix: sliding-window + paged attention fallback is counted
+# ---------------------------------------------------------------------------
+
+def test_window_fallback_counter_on_paged_decode():
+    """A sliding window inside the rounding band max_len <= window <
+    n_pt * block_size routes every paged decode launch to the XLA gather
+    arm (models/layers._paged_attn_arm) — silently, until now: the
+    engine counts those launches in ``paged_attn_window_fallbacks``."""
+    base, params = _setup("llama3.2-1b")
+    # max_len 16 <= window 18 < 4 pages * 5 rows = 20: continuous mode
+    # admits the config (window >= max_len) but the Pallas kernel would
+    # over-attend the 20-row page-table span, so the gate fires
+    cfg = dataclasses.replace(base, sliding_window=18)
+    specs = _mixed_specs(cfg, 2, seed=7, prompt_hi=5, new_hi=6)
+    out_p, eng = _run(params, cfg, specs, max_len=16, kv_layout="paged",
+                      kv_block_size=5)
+    s = eng.metrics.summary()
+    assert s["paged_attn_window_fallbacks"] > 0
+    assert s["paged_attn_window_fallbacks"] == eng.metrics.decode_steps
+    # the fallback is an arm choice, not a math change: contiguous parity
+    out_c, eng_c = _run(params, cfg, specs, max_len=16,
+                        kv_layout="contiguous")
+    assert out_p == out_c
+    assert eng_c.metrics.summary()["paged_attn_window_fallbacks"] == 0
